@@ -1,0 +1,53 @@
+"""Wire-byte accounting for one training round: the paper's communication claim
+on TPU terms. First-principles per-device bytes for every exchange variant, per
+architecture — the numbers the collective roofline term is built from, and the
+before/after ledger for §Perf."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_header, csv_row
+from repro.configs.registry import ARCH_IDS, get_config, trainer_mode
+
+
+def wire_model(n_params: int, mode: str, n_data: int = 16, n_pod: int = 1,
+               variant: str = "sparsign_int8") -> dict:
+    """Per-device wire bytes for one round's gradient exchange (+FSDP traffic).
+
+    ring all-reduce:    2*(M-1)/M * payload
+    ring all-gather:    (M-1)/M * payload
+    """
+    m = n_data * n_pod
+    ar = lambda b: 2 * (m - 1) / m * b
+    ag_data = lambda b: (n_data - 1) / n_data * b
+    grad_exchange = {
+        "fp32_dp": ar(4 * n_params),                   # uncompressed baseline
+        "bf16_dp": ar(2 * n_params),
+        "sparsign_int8": ar(1 * n_params),             # ternary votes, int8 wire
+        "sparsign_int8_hier": 2 * (n_data - 1) / n_data * n_params
+                               + (2 * (n_pod - 1) / max(n_pod, 1)) * 2 * n_params,
+        "sparsign_packed_allgather": (m - 1) * (n_params / 4.0),  # 2-bit, no reduce
+    }[variant]
+    fsdp = ag_data(2 * n_params) if mode == "streamed" else 0.0  # bf16 param gather
+    return {"grad_exchange": grad_exchange, "fsdp_gather": fsdp,
+            "total": grad_exchange + fsdp}
+
+
+def main(fast: bool = False):
+    print("# per-device wire bytes per round, by exchange variant (single pod, 16 data)")
+    csv_header(["arch", "mode", "params_B", "fp32_dp", "sparsign_int8",
+                "vs_fp32", "fsdp_gather", "hier_2pod"])
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        mode = trainer_mode(arch)
+        base = wire_model(n, mode, variant="fp32_dp")
+        ours = wire_model(n, mode, variant="sparsign_int8")
+        hier = wire_model(n, mode, n_pod=2, variant="sparsign_int8_hier")
+        csv_row([arch, mode, f"{n/1e9:.2f}e9",
+                 f"{base['grad_exchange']:.3e}", f"{ours['grad_exchange']:.3e}",
+                 f"{base['grad_exchange']/ours['grad_exchange']:.1f}x",
+                 f"{ours['fsdp_gather']:.3e}", f"{hier['grad_exchange']:.3e}"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Eq. 12: Golomb position-coding bit accounting across sparsity levels,
+plus the per-algorithm uplink table (bits/coordinate) used by Tables 1-2."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_header, csv_row
+from repro.core.encoding import (baseline_bits_per_round, golomb_bits_per_index,
+                                 golomb_bstar, ternary_stream_bits)
+
+
+def main(fast: bool = False):
+    d = 235146  # the paper's fashion MLP dimension
+    print("# Eq. 12: bits per nonzero index vs sparsity ratio p")
+    csv_header(["p", "b_star", "bits_per_index", "total_bits_vs_dense_ternary"])
+    for p in (0.001, 0.01, 0.05, 0.1, 0.3, 0.5):
+        nnz = int(p * d)
+        total = ternary_stream_bits(d, nnz, coder="golomb")
+        dense = ternary_stream_bits(d, nnz, coder="dense")
+        csv_row([p, golomb_bstar(p), f"{golomb_bits_per_index(p):.2f}",
+                 f"{total / dense:.3f}"])
+
+    print("# uplink bits/coordinate by algorithm (nnz = 5% for ternary methods)")
+    csv_header(["algorithm", "bits_per_coord"])
+    nnz = int(0.05 * d)
+    for algo in ("sign", "noisy_sign", "sparsign", "terngrad", "qsgd8", "identity"):
+        bits = baseline_bits_per_round(d, algo, nnz=nnz)
+        csv_row([algo, f"{bits / d:.3f}"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Compression-kernel microbench: us/call (CPU interpret mode — correctness
+path; TPU lowering is the target) + the structural byte accounting that drives
+the roofline memory term for the compression stage."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_header, csv_row, timed
+from repro.core.compressors import sparsign
+from repro.kernels.ef_server.ops import ef_server_op
+from repro.kernels.pack2bit.ops import pack2bit_op
+from repro.kernels.sparsign.ops import sparsign_op
+from repro.kernels.vote_update.ops import vote_update_op
+
+
+def main(fast: bool = False):
+    n = 1 << 18 if fast else 1 << 20
+    rng = np.random.RandomState(0)
+    g = jnp.asarray(rng.randn(n), jnp.float32)
+    w = jnp.asarray(rng.randn(n), jnp.float32)
+    t = jnp.asarray(rng.randint(-1, 2, n), jnp.int8)
+    v = jnp.asarray(rng.randint(-16, 17, n), jnp.int32)
+    e = jnp.asarray(rng.randn(n), jnp.float32)
+
+    print(f"# kernel microbench, n={n} coords (CPU interpret mode)")
+    csv_header(["name", "us_per_call", "hbm_bytes_per_coord_tpu", "note"])
+
+    _, dt = timed(lambda: jax.block_until_ready(sparsign_op(g, 1.0, 7)))
+    csv_row(["sparsign_kernel", f"{dt*1e6:.0f}", 4 + 1, "read f32 + write i8; RNG in-register"])
+    _, dt = timed(lambda: jax.block_until_ready(sparsign(g, budget=1.0, seed=7).values))
+    csv_row(["sparsign_jnp_ref", f"{dt*1e6:.0f}", 4 + 4 + 4 + 1, "extra u32 idx + f32 uniform traffic"])
+    _, dt = timed(lambda: jax.block_until_ready(pack2bit_op(t)))
+    csv_row(["pack2bit", f"{dt*1e6:.0f}", 1 + 0.25, "i8 -> 2-bit wire"])
+    _, dt = timed(lambda: jax.block_until_ready(ef_server_op(g, e)[0]))
+    csv_row(["ef_server_fused", f"{dt*1e6:.0f}", 8 + 8, "2 reads + 2 writes f32 (vs 4-pass unfused)"])
+    _, dt = timed(lambda: jax.block_until_ready(vote_update_op(w, v, 0.01)))
+    csv_row(["vote_update_fused", f"{dt*1e6:.0f}", 4 + 4 + 4, "w + votes -> w' one pass"])
+
+
+if __name__ == "__main__":
+    main()

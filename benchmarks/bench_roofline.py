@@ -1,0 +1,178 @@
+"""Roofline terms per (arch x shape x mesh).
+
+WHY ANALYTIC: XLA's HLO cost analysis counts while-loop bodies ONCE regardless
+of trip count (measured 8x undercount on an 8-iteration scan — see
+EXPERIMENTS.md §Dry-run). Every hot loop here is a scan (superblocks, attention
+chunks, loss chunks), so cost_analysis-derived terms are systematically wrong
+for exactly the programs that matter. The three terms are therefore computed
+from a first-principles model of the program we compiled (we wrote every
+collective explicitly; the dry-run HLO census is cross-checked for op kinds /
+shard shapes), and the HLO statics are reported alongside.
+
+    compute_s    = analytic_FLOPs_per_device / 197e12
+    memory_s     = analytic_HBM_bytes_per_device / 819e9
+    collective_s = analytic_wire_bytes_per_device / 50e9
+
+Program model (matches the shipped step functions):
+  train (simple):   remat factor 4 (fwd + 2x bwd + recompute-fwd) on matmul
+                    FLOPs; params resident TP-sharded; votes int8 all-reduce.
+  train (streamed): same + FSDP bf16 param all-gather (fwd and bwd) over data.
+  prefill:          factor 1; attention quadratic terms windowed where the
+                    layer is windowed (structural, thanks to windowed_attention).
+  decode:           params read once per token; KV-cache dot products linear in
+                    (ring-bounded) cache depth; no worker collectives.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+from benchmarks.common import csv_header, csv_row
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DEFAULT_SWEEP = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_sweep.json")
+
+
+def _layers(cfg):
+    seq = list(cfg.pattern) * cfg.n_repeats + list(cfg.tail_pattern)
+    attn = [s for s in seq if s.mixer == "attn"]
+    return seq, attn
+
+
+def analytic_cell(arch: str, shape_name: str, mesh_name: str, mode: str,
+                  server: str = "scaled_sign_ef") -> dict:
+    from repro.configs.registry import get_config
+    from repro.configs.shapes import SHAPES
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_pod = 2 if mesh_name == "2x16x16" else 1
+    n_data, tp = 16, 16
+    chips = n_pod * n_data * tp
+    n_total = cfg.param_count()
+    n_active = cfg.active_param_count()
+    seq_layers, attn_layers = _layers(cfg)
+    hdh = cfg.n_heads * cfg.head_dim
+    d = cfg.d_model
+
+    if shape.kind in ("train", "prefill"):
+        tokens = shape.seq_len * shape.global_batch
+        tokens_loc = tokens / (n_pod * n_data)
+        s = shape.seq_len
+        # matmul flops (global): factor 4 for remat-train, 1 for prefill
+        f_factor = 4.0 if shape.kind == "train" else 1.0
+        matmul = 2.0 * n_active * tokens * f_factor
+        # attention score+value flops (global), causal ~ /2, windowed capped
+        attn = 0.0
+        for spec in attn_layers:
+            s_eff = min(s, spec.window) if spec.window else s / 2.0
+            attn += 4.0 * shape.global_batch * s * s_eff * hdh * f_factor
+        flops_pd = (matmul + attn) / chips
+
+        # HBM bytes per device
+        shard = tp * (n_data if mode == "streamed" else 1)
+        param_reads = 3.0 if shape.kind == "train" else 1.0  # fwd + bwd + update
+        pbytes = 2.0 * n_total / tp * param_reads + (2.0 * n_total / shard)  # reads + write
+        ef_bytes = (8.0 * n_total / shard) if (shape.kind == "train" and server == "scaled_sign_ef") else 0.0
+        vote_bytes = (2.0 * n_total / tp) if shape.kind == "train" else 0.0   # int8 rw
+        act_passes = 10.0 if shape.kind == "train" else 4.0
+        abytes = act_passes * len(seq_layers) * tokens_loc * d * 2.0 / 1.0
+        bytes_pd = pbytes + ef_bytes + vote_bytes + abytes
+
+        # wire bytes per device
+        m = n_pod * n_data
+        wire = 0.0
+        if shape.kind == "train":
+            wire += 2.0 * (m - 1) / m * (n_total / tp) * 1.0          # int8 vote ring AR
+            if mode == "streamed":
+                wire += 2.0 * (n_data - 1) / n_data * (2.0 * n_total / tp)  # fwd+bwd FSDP AG
+        # Megatron-SP boundary gathers over the model axis (fwd [+bwd +remat])
+        sp_passes = 3.0 if shape.kind == "train" else 1.0
+        wire += sp_passes * len(seq_layers) * tokens_loc * d * 2.0 * (tp - 1) / tp
+    else:  # decode
+        bsz = shape.global_batch
+        tokens_loc = max(bsz / (n_pod * n_data), 1)
+        flops = 2.0 * n_active * bsz
+        cache_bytes_pd = 0.0
+        for spec in attn_layers:
+            w_eff = min(shape.seq_len, spec.window) if spec.window else shape.seq_len
+            flops += 4.0 * bsz * w_eff * cfg.n_kv_heads * cfg.head_dim \
+                     + 2.0 * bsz * w_eff * hdh
+            cache_bytes_pd += 2.0 * tokens_loc * w_eff * cfg.n_kv_heads * cfg.head_dim * 2.0 / tp
+        flops_pd = flops / chips
+        bytes_pd = 2.0 * n_total / tp + cache_bytes_pd
+        wire = 2.0 * len(seq_layers) * tokens_loc * d * 2.0 * (tp - 1) / tp
+
+    return {
+        "flops_pd": flops_pd, "bytes_pd": bytes_pd, "wire_pd": wire,
+        "compute_s": flops_pd / PEAK_FLOPS,
+        "memory_s": bytes_pd / HBM_BW,
+        "collective_s": wire / LINK_BW,
+        "model_flops": (6.0 if shape.kind == "train" else 2.0) * n_active *
+                       (shape.seq_len * shape.global_batch if shape.kind != "decode"
+                        else shape.global_batch),
+        "chips": chips,
+    }
+
+
+def analyze(records: list[dict]) -> list[dict]:
+    out = []
+    for r in records:
+        base = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"]}
+        if r.get("status") != "ok":
+            out.append({**base, "status": r.get("status"),
+                        "why": r.get("skip_reason") or (r.get("error") or "")[:60]})
+            continue
+        mode = r.get("mode") or "simple"
+        server = (r.get("server") or "scaled_sign_ef").split(" ")[0]
+        a = analytic_cell(r["arch"], r["shape"], r["mesh"],
+                          mode if mode in ("simple", "streamed") else "simple", server)
+        terms = {"compute": a["compute_s"], "memory": a["memory_s"],
+                 "collective": a["collective_s"]}
+        dom = max(terms, key=terms.get)
+        bound_s = max(terms.values())
+        frac = (a["model_flops"] / a["chips"] / PEAK_FLOPS) / max(bound_s, 1e-30)
+        full = r["depths"]["full"]
+        out.append({
+            **base, "status": "ok", **{f"{k}_s": v for k, v in terms.items()},
+            "dominant": dom, "roofline_frac": frac,
+            "useful_ratio": a["model_flops"] / max(a["flops_pd"] * a["chips"], 1.0),
+            "hlo_static_flops": full.get("flops", 0.0),
+            "hlo_collective_counts": full["collectives"]["counts"],
+            "mem_args_gib": full.get("memory", {}).get("argument_bytes", 0) / 2**30,
+            "mem_temp_gib": full.get("memory", {}).get("temp_bytes", 0) / 2**30,
+            "compile_s": full.get("compile_s"),
+        })
+    return out
+
+
+def main(fast: bool = False, sweep_path: str | None = None):
+    path = sweep_path or DEFAULT_SWEEP
+    if not os.path.exists(path):
+        print(f"# no sweep json at {path}; run repro.launch.dryrun first")
+        return
+    with open(path) as f:
+        records = json.load(f)
+    rows = analyze(records)
+    print("# roofline terms (analytic program model; seconds per step per device)")
+    csv_header(["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+                "collective_s", "dominant", "useful_flops_ratio", "roofline_frac",
+                "mem_args_gib", "mem_temp_gib"])
+    for r in rows:
+        if r["status"] != "ok":
+            csv_row([r["arch"], r["shape"], r["mesh"], r["status"],
+                     "-", "-", "-", "-", "-", "-", "-", r.get("why", "")])
+        else:
+            csv_row([r["arch"], r["shape"], r["mesh"], "ok",
+                     f"{r['compute_s']:.4g}", f"{r['memory_s']:.4g}",
+                     f"{r['collective_s']:.4g}", r["dominant"],
+                     f"{r['useful_ratio']:.3f}", f"{r['roofline_frac']:.3f}",
+                     f"{r['mem_args_gib']:.1f}", f"{r['mem_temp_gib']:.1f}"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+``python -m benchmarks.run``        — fast defaults (CPU-budget)
+``python -m benchmarks.run --full`` — paper-scale rounds
+``python -m benchmarks.run --only table1`` — single bench
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (bench_collectives, bench_golomb_bits, bench_kernels,
+                        bench_roofline, bench_rosenbrock, bench_table1_fashion,
+                        bench_table2_cifar, bench_table3_local_steps)
+
+BENCHES = {
+    "rosenbrock": bench_rosenbrock.main,       # Figs 1-2
+    "table1": bench_table1_fashion.main,       # Table 1
+    "table2": bench_table2_cifar.main,         # Table 2
+    "table3": bench_table3_local_steps.main,   # Table 3 (+ alpha sweep of 4-7)
+    "golomb": bench_golomb_bits.main,          # Eq. 12
+    "kernels": bench_kernels.main,             # compression kernels
+    "collectives": bench_collectives.main,     # wire-byte ledger
+    "roofline": bench_roofline.main,           # dry-run roofline table
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else list(BENCHES)
+    for name in names:
+        print(f"\n##### bench: {name} #####")
+        t0 = time.time()
+        BENCHES[name](fast=not args.full)
+        print(f"##### {name} done in {time.time()-t0:.1f}s #####")
+
+
+if __name__ == "__main__":
+    main()

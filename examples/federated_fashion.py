@@ -1,0 +1,47 @@
+"""Paper §6.2 demo: federated training on heterogeneous (Dirichlet alpha=0.1)
+fashion-like data — EF-SPARSIGNSGD vs signSGD vs TernGrad, with communication
+accounting.
+
+    PYTHONPATH=src python examples/federated_fashion.py
+"""
+
+import jax
+
+from repro.core.algorithm import CompressionConfig
+from repro.core.budgets import BudgetConfig
+from repro.data.dirichlet import dirichlet_partition, heterogeneity_stats
+from repro.data.synthetic import ImageDataConfig, make_image_dataset
+from repro.fl.models import mlp_fashion
+from repro.fl.simulation import FLConfig, run_fl, stack_partitions
+
+ALGOS = {
+    "signSGD": CompressionConfig(compressor="sign", server="majority_vote"),
+    "terngrad": CompressionConfig(compressor="terngrad", server="mean"),
+    "sparsignSGD (B=1)": CompressionConfig(
+        compressor="sparsign", budget=BudgetConfig(value=1.0), server="majority_vote"),
+    "EF-sparsignSGD": CompressionConfig(
+        compressor="sparsign", budget=BudgetConfig(value=1.0), server="scaled_sign_ef"),
+    "EF-sparsign local5": CompressionConfig(
+        compressor="sparsign", budget=BudgetConfig(value=1.0), server="scaled_sign_ef",
+        local_steps=5, local_budget=10.0),
+}
+
+
+def main():
+    x, y, xt, yt = make_image_dataset(ImageDataConfig(n_train=6000, n_test=1000))
+    parts = dirichlet_partition(y, n_workers=30, alpha=0.1, seed=0)
+    print("heterogeneity:", heterogeneity_stats(y, parts))
+    xp, yp = stack_partitions(x, y, parts)
+    v0, apply_fn = mlp_fashion(jax.random.PRNGKey(0))
+
+    for name, comp in ALGOS.items():
+        cfg = FLConfig(n_workers=30, rounds=60, batch_size=64, lr=0.05,
+                       local_lr=0.02, comp=comp, seed=0, eval_every=20)
+        res = run_fl(v0, apply_fn, cfg, xp, yp, xt, yt)
+        print(f"{name:24s} final_acc={res['final_acc']:.4f} "
+              f"uplink={res['uplink_bits_per_round']/8/1024:.1f} KiB/round "
+              f"({res['uplink_bits_per_round']/res['d']/30:.3f} bits/coord/worker)")
+
+
+if __name__ == "__main__":
+    main()

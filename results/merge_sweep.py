@@ -1,0 +1,28 @@
+"""Merge results/fix/*.json re-runs into the master sweep JSON."""
+import glob
+import json
+import os
+
+base_path = os.path.join(os.path.dirname(__file__), "dryrun_sweep.json")
+records = json.load(open(base_path))
+index = {(r["arch"], r["shape"], r["mesh"]): i for i, r in enumerate(records)}
+
+n = 0
+for path in sorted(glob.glob(os.path.join(os.path.dirname(__file__), "fix", "*.json"))):
+    for r in json.load(open(path)):
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key in index:
+            records[index[key]] = r
+        else:
+            records.append(r)
+        n += 1
+
+with open(base_path, "w") as f:
+    json.dump(records, f, indent=1)
+ok = sum(r["status"] == "ok" for r in records)
+skip = sum(r["status"] == "skip" for r in records)
+fail = sum(r["status"] == "fail" for r in records)
+print(f"merged {n} re-run cells -> {ok} ok / {skip} skip / {fail} fail (total {len(records)})")
+for r in records:
+    if r["status"] == "fail":
+        print("STILL FAILING:", r["arch"], r["shape"], r["mesh"], r["error"][:100])

@@ -1,0 +1,128 @@
+"""Config schema for the architecture zoo.
+
+A model is ``n_layers`` blocks arranged as ``n_repeats`` repetitions of a
+``pattern`` (a tuple of LayerSpec). Homogeneous models have a length-1 pattern;
+gemma3's 5:1 local:global is a length-6 pattern; jamba's attn:mamba 1:7 with
+alternating MoE is a length-8 pattern. The training/serving loops scan over
+repeats with stacked per-position parameters, so HLO size is O(|pattern|), not
+O(n_layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"            # attn | mamba
+    window: Optional[int] = None   # sliding-window width (attn only); None = global
+    use_rope: bool = True
+    moe: bool = False              # routed-experts FFN instead of dense
+    ffn: bool = True               # False: mixer-only block (pure mamba2 stacks)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    tail_pattern: Tuple[LayerSpec, ...] = ()  # remainder blocks after the scan
+    d_head: Optional[int] = None   # default d_model // n_heads
+    qkv_bias: bool = False
+    causal: bool = True
+    input_kind: str = "tokens"     # tokens | embeddings (audio/vlm frontend stubs)
+    mlp_variant: str = "swiglu"    # swiglu | gelu
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    mrope: bool = False
+    mrope_sections: Tuple[int, ...] = ()
+    norm_eps: float = 1e-6
+    # --- MoE ---
+    n_experts: int = 0
+    n_experts_padded: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_act: str = "softmax"
+    renorm_topk: bool = False
+    moe_impl: str = "gather"
+    # --- Mamba/SSD ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    # --- execution ---
+    dtype: str = "bfloat16"
+    attn_chunk: int = 1024         # kv-chunk for global attention
+    q_chunk: int = 512             # q-chunk for windowed attention
+    loss_chunk: int = 512          # seq-chunk for the softmax-xent scan
+    decode_chunk: int = 8192       # kv-chunk for decode attention
+    remat: bool = True
+    remat_policy: str = "full"     # full | dots (save matmul outputs) — §Perf H4
+    # which serving shapes are valid (see DESIGN.md §6 skip rules)
+    supports_decode: bool = True
+    supports_long_context: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def n_repeats(self) -> int:
+        body = self.n_layers - len(self.tail_pattern)
+        assert body % len(self.pattern) == 0, (self.name, self.n_layers, len(self.pattern))
+        return body // len(self.pattern)
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (used for 6ND roofline sanity)."""
+        from repro.models.model import Model  # local import to avoid cycle
+        import jax
+        import math
+        shapes = Model(self).param_shapes()
+        return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: shared + top_k routed experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        total = self.param_count()
+        from repro.models.model import Model
+        import jax
+        import math
+        shapes = Model(self).param_shapes()
+        moe_leaves = 0
+        routed_active = 0
+        def walk(path, leaf):
+            nonlocal moe_leaves, routed_active
+            p = "/".join(str(k) for k in path)
+            if ("moe_w_" in p) and "shared" not in p and self.n_experts > 0:
+                if len(leaf.shape) >= 3:  # [R, E, ...] stacked expert weights
+                    n = math.prod(leaf.shape)
+                    moe_leaves += n
+                    routed_active += n // self.n_experts_padded * self.top_k
+        jax.tree_util.tree_map_with_path(walk, shapes)
+        return total - moe_leaves + routed_active

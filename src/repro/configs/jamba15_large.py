@@ -1,0 +1,83 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2 — Mamba+attention 1:7 interleave. [arXiv:2403.19887; hf]
+
+Pattern (length 8, repeated 9x): mamba at every position except index 4 (attn),
+MoE FFN on odd positions, dense FFN on even — 9 attention layers (1:7), 36 MoE
+layers, matching the Jamba block layout. Attention layers carry no RoPE (Jamba
+relies on the Mamba layers for position information).
+
+TPU adaptation: the Mamba mixers use our SSD (mamba2) formulation with
+d_state=16 as in Jamba's Mamba config (Jamba uses Mamba-1 selective scan; SSD
+is the MXU-native equivalent — see DESIGN.md). ~398B total params; trains in
+``streamed`` mode (FSDP over data x model + per-superblock vote).
+long_500k runs: only 9/72 layers hold a 500k KV cache.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+_MAMBA_DENSE = LayerSpec(mixer="mamba")
+_MAMBA_MOE = LayerSpec(mixer="mamba", moe=True)
+_ATTN_DENSE = LayerSpec(mixer="attn", use_rope=False)
+
+
+def _pattern():
+    # positions 0..7; attn replaces mamba at position 4; MoE on odd positions
+    out = []
+    for i in range(8):
+        if i == 4:
+            out.append(_ATTN_DENSE)
+        elif i % 2 == 1:
+            out.append(_MAMBA_MOE)
+        else:
+            out.append(_MAMBA_DENSE)
+    return tuple(out)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=24576,
+        vocab_size=65536,
+        pattern=_pattern(),
+        n_experts=16,
+        n_experts_padded=16,
+        top_k=2,
+        moe_d_ff=24576,
+        ssm_state=16,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        supports_long_context=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b-smoke",
+        family="hybrid",
+        n_layers=8,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        pattern=tuple(
+            LayerSpec(mixer="attn", use_rope=False) if i == 4
+            else LayerSpec(mixer="mamba", moe=(i % 2 == 1))
+            for i in range(8)
+        ),
+        n_experts=4,
+        n_experts_padded=4,
+        top_k=2,
+        moe_d_ff=32,
+        ssm_state=8,
+        ssm_head_dim=16,
+        ssm_chunk=8,
+        supports_long_context=True,
+        dtype="float32",
+        attn_chunk=16, q_chunk=8, loss_chunk=16, capacity_factor=4.0,
+    )

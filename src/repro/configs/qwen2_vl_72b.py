@@ -1,0 +1,50 @@
+"""qwen2-vl-72b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064 —
+M-RoPE (3-section rotary), dynamic resolution. [arXiv:2409.12191; hf]
+
+Backbone only per the assignment: the vision frontend is a STUB —
+``input_specs()`` provides precomputed patch/token embeddings [B, S, d_model]
+plus the 3-channel M-RoPE position ids [B, S, 3]. head_dim = 8192/64 = 128;
+M-RoPE sections (16, 24, 24) sum to head_dim/2. Pure full attention =>
+long_500k skipped. Uses the streamed trainer (72B params).
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=29568,
+        vocab_size=152064,
+        pattern=(LayerSpec(mixer="attn"),),
+        qkv_bias=True,
+        input_kind="embeddings",
+        mrope=True,
+        mrope_sections=(16, 24, 24),
+        rope_theta=1_000_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        pattern=(LayerSpec(mixer="attn"),),
+        qkv_bias=True,
+        input_kind="embeddings",
+        mrope=True,
+        mrope_sections=(4, 2, 2),
+        dtype="float32",
+        attn_chunk=16, q_chunk=8, loss_chunk=16,
+    )

@@ -1,0 +1,43 @@
+"""repro.core — the paper's contribution (SPARSIGNSGD / EF-SPARSIGNSGD) as
+composable JAX building blocks."""
+
+from repro.core.algorithm import (
+    CompressionConfig,
+    local_update_message,
+    reference_round,
+    server_update,
+    worker_message,
+    worker_stream_seed,
+)
+from repro.core.budgets import BudgetConfig, expected_sparsity, resolve_budget
+from repro.core.compressors import (
+    COMPRESSORS,
+    CompressedGrad,
+    compress_tree,
+    get_compressor,
+    sparsign,
+)
+from repro.core.error_feedback import EFState, ef_server_step, init_ef
+from repro.core.aggregation import majority_vote, scaled_sign_server
+
+__all__ = [
+    "CompressionConfig",
+    "BudgetConfig",
+    "CompressedGrad",
+    "COMPRESSORS",
+    "EFState",
+    "compress_tree",
+    "ef_server_step",
+    "expected_sparsity",
+    "get_compressor",
+    "init_ef",
+    "local_update_message",
+    "majority_vote",
+    "reference_round",
+    "resolve_budget",
+    "scaled_sign_server",
+    "server_update",
+    "sparsign",
+    "worker_message",
+    "worker_stream_seed",
+]

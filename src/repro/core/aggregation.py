@@ -1,0 +1,49 @@
+"""Server-side aggregation rules C(.) and the majority vote.
+
+On a real parameter server, C consumes (1/|S|) * sum_m Delta_m. In the TPU
+mapping the sum over workers arrives as an integer vote count (psum of ternary
+int8 over the worker axes); these helpers operate on either representation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def majority_vote(vote_sum: jnp.ndarray) -> jnp.ndarray:
+    """C(.) = sign(.) over the summed ternary votes. Ties (0) stay 0.
+
+    Accepts int8/int16/int32 vote sums (or float means); returns int8 ternary.
+    """
+    return jnp.sign(vote_sum).astype(jnp.int8)
+
+
+def scaled_sign_server(x: jnp.ndarray) -> jnp.ndarray:
+    """alpha-approximate server compressor C(x) = (||x||_1 / d) * sign(x).
+
+    Karimireddy et al. 2019 show this is alpha-approximate with
+    alpha = ||x||_1^2 / (d * ||x||_2^2) in (0, 1]. Used by EF-SPARSIGNSGD.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.sum(jnp.abs(xf)) / jnp.float32(x.size)
+    return scale * jnp.sign(xf)
+
+
+def alpha_of_scaled_sign(x: jnp.ndarray) -> jnp.ndarray:
+    """The compression quality alpha for scaled-sign on input x (for tests/telemetry)."""
+    xf = x.astype(jnp.float32).reshape(-1)
+    l1 = jnp.sum(jnp.abs(xf))
+    l2sq = jnp.maximum(jnp.sum(xf * xf), 1e-30)
+    return (l1 * l1) / (x.size * l2sq)
+
+
+def mean_server(x: jnp.ndarray) -> jnp.ndarray:
+    """Uncompressed server aggregation (FedAvg-style mean passthrough)."""
+    return x.astype(jnp.float32)
+
+
+SERVER_AGGREGATORS = {
+    "majority_vote": majority_vote,
+    "scaled_sign": scaled_sign_server,
+    "mean": mean_server,
+}

@@ -1,0 +1,165 @@
+"""SPARSIGNSGD (Alg. 1) and EF-SPARSIGNSGD with local updates (Alg. 2), split
+into the three roles every deployment composes:
+
+  worker_message      — worker-side compression (optionally with tau local steps)
+  (vote aggregation)  — a sum over workers: psum on a mesh, jnp.sum in the FL sim
+  server_update       — C(.) + optional server-side error feedback
+
+`repro.fl.simulation` composes them with an explicit M-worker loop (paper's
+experiments); `repro.train.step_simple` / `step_streamed` compose them with mesh
+collectives (the production path). Keeping one shared implementation is what
+makes the reproduction and the production system provably the same algorithm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prng
+from repro.core.aggregation import majority_vote, mean_server, scaled_sign_server
+from repro.core.budgets import BudgetConfig, resolve_budget
+from repro.core.compressors import CompressedGrad, get_compressor
+from repro.core.error_feedback import EFState, ef_server_step
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Everything that defines the communication algorithm for one run."""
+
+    compressor: str = "sparsign"         # worker uplink compressor Q
+    budget: BudgetConfig = dataclasses.field(default_factory=BudgetConfig)  # B_g (uplink)
+    server: str = "majority_vote"        # majority_vote | scaled_sign_ef | mean
+    local_steps: int = 1                 # tau (Alg. 2); 1 recovers Alg. 1
+    local_budget: Optional[float] = None # B_l for the inner compressed steps
+    worker_sample_fraction: float = 1.0  # p_s
+    vote_dtype: str = "int8"             # wire dtype for the ternary psum
+    pack_wire: bool = False              # model the 2-bit packed wire format
+
+    @property
+    def is_ternary(self) -> bool:
+        return self.compressor in (
+            "sparsign", "sign", "scaled_sign", "noisy_sign",
+            "qsgd_1bit_l2", "qsgd_1bit_linf", "terngrad",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Worker side
+# ---------------------------------------------------------------------------
+
+def worker_message(
+    g_local: jnp.ndarray,
+    cfg: CompressionConfig,
+    *,
+    seed,
+    counter_base=0,
+    shared_linf=None,
+) -> CompressedGrad:
+    """Q(g_m, B_m): one worker's uplink message for a single tensor."""
+    budget = resolve_budget(cfg.budget, g_local, shared_linf=shared_linf)
+    fn = get_compressor(cfg.compressor)
+    return fn(g_local, budget=budget, seed=seed, counter_base=counter_base)
+
+
+def local_update_message(
+    w0,
+    grad_fn: Callable,   # (w, c) -> local stochastic gradient at local step c
+    cfg: CompressionConfig,
+    *,
+    eta_l: float,
+    seed,
+    counter_base=0,
+) -> CompressedGrad:
+    """Alg. 2 worker loop: tau compressed local steps, then compress the *sum*
+    of the local compressed gradients with the uplink budget B_g.
+
+    Every inner step uses sparsign with budget B_l; the inner sum lives in
+    [-tau, tau] (int8 is ample for tau <= 127).
+    """
+    tau = cfg.local_steps
+    b_l = jnp.float32(cfg.local_budget if cfg.local_budget is not None else cfg.budget.value)
+    sp = get_compressor("sparsign")
+
+    def body(carry, c):
+        w, acc = carry
+        g = grad_fn(w, c)
+        q = sp(g, budget=b_l, seed=prng.fold_seed(seed, 1000 + 1), counter_base=counter_base + c * g.size)
+        w = w - eta_l * q.values.astype(w.dtype)
+        return (w, acc + q.values.astype(jnp.int8)), None
+
+    (w_final, acc), _ = jax.lax.scan(body, (w0, jnp.zeros(w0.shape, jnp.int8)), jnp.arange(tau))
+    del w_final
+    return worker_message(acc.astype(jnp.float32), cfg, seed=prng.fold_seed(seed, 2), counter_base=counter_base)
+
+
+# ---------------------------------------------------------------------------
+# Server side
+# ---------------------------------------------------------------------------
+
+def server_update(
+    vote_mean: jnp.ndarray,
+    cfg: CompressionConfig,
+    ef_state: Optional[EFState] = None,
+) -> tuple[jnp.ndarray, Optional[EFState]]:
+    """C(mean of worker messages) [+ EF]. Returns (g_tilde float32, new EF state).
+
+    vote_mean is (1/|S|) sum_m decoded messages — for ternary compressors, the
+    vote *sum* divided by |S| (majority_vote only needs the sign, so sums work
+    identically; means keep the scaled-sign server compressor calibrated).
+    """
+    if cfg.server == "majority_vote":
+        return majority_vote(vote_mean).astype(jnp.float32), ef_state
+    if cfg.server == "mean":
+        return mean_server(vote_mean), ef_state
+    if cfg.server == "scaled_sign_ef":
+        assert ef_state is not None, "scaled_sign_ef requires an EFState"
+        return ef_server_step(ef_state, vote_mean, scaled_sign_server)
+    raise ValueError(f"unknown server rule {cfg.server!r}")
+
+
+# ---------------------------------------------------------------------------
+# Reference single-tensor round (used by tests & the FL simulation)
+# ---------------------------------------------------------------------------
+
+def reference_round(
+    w: jnp.ndarray,
+    per_worker_grads: jnp.ndarray,   # [M, *w.shape] local gradients
+    cfg: CompressionConfig,
+    *,
+    eta: float,
+    seed,
+    ef_state: Optional[EFState] = None,
+    participation_mask: Optional[jnp.ndarray] = None,  # [M] bool
+):
+    """One full Algorithm-1 round on explicit per-worker gradients.
+
+    This is the oracle the mesh implementation is tested against: identical
+    seeds/counters => bitwise-identical updates.
+    """
+    m = per_worker_grads.shape[0]
+    mask = participation_mask if participation_mask is not None else jnp.ones((m,), bool)
+
+    def one(gm, widx):
+        msg = worker_message(gm, cfg, seed=_worker_seed(seed, widx), counter_base=0)
+        return msg.values.astype(jnp.float32) * msg.scale
+
+    decoded = jax.vmap(one)(per_worker_grads, jnp.arange(m))
+    decoded = jnp.where(mask.reshape((m,) + (1,) * (decoded.ndim - 1)), decoded, 0.0)
+    n_sel = jnp.maximum(jnp.sum(mask), 1)
+    vote_mean = jnp.sum(decoded, axis=0) / n_sel
+    g_tilde, ef_state = server_update(vote_mean, cfg, ef_state)
+    return w - eta * g_tilde.astype(w.dtype), ef_state
+
+
+def _worker_seed(seed, widx):
+    """Independent stream per worker (matches fl.simulation and train.step_*)."""
+    return prng.fold_seed(seed, 0x5EED) + jnp.asarray(widx, jnp.uint32) * jnp.uint32(0x9E3779B9)
+
+
+def worker_stream_seed(seed, widx):
+    """Public alias: the per-worker sparsign stream seed."""
+    return _worker_seed(seed, widx)

@@ -1,0 +1,67 @@
+"""Compression-budget (B) policies.
+
+Definition 1 requires B_{m,i} <= 1/|g_{m,i}| for exact probabilities; Remark 7
+notes that fixed budgets with probability clipping are equivalent to gradient
+clipping and are what the paper's experiments use (B in {0.01, 0.1, 1}, and
+B_l=10, B_g=1 for EF-SPARSIGNSGD). We support:
+
+  fixed:      B constant (paper's experimental choice).
+  linf_share: TernGrad-style magnitude sharing — B = 1 / max_m ||g_m||_inf,
+              needs one scalar all-reduce(max) per round (32 bits of uplink).
+  l2_norm:    B = sqrt(d) / ||g||_2 (keeps expected sparsity ~ |g| E[non-zeros]).
+  target_sparsity: pick B so the *expected* nonzero fraction equals a target:
+              E[nnz]/d = mean(min(|g| B, 1)) -> solved per tensor by a few
+              bisection steps (monotone in B). This is the knob a production
+              deployment actually wants ("spend at most k bits/coord").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetConfig:
+    kind: str = "fixed"          # fixed | linf_share | l2_norm | target_sparsity
+    value: float = 1.0           # B for fixed; target nnz fraction for target_sparsity
+    local_value: Optional[float] = None  # B_l for local steps (EF-SPARSIGNSGD); None -> value
+
+
+def expected_sparsity(g: jnp.ndarray, budget) -> jnp.ndarray:
+    """E[nnz]/d = mean(clip(|g| * B, 0, 1)) (Def. 1)."""
+    return jnp.mean(jnp.clip(jnp.abs(g.astype(jnp.float32)) * budget, 0.0, 1.0))
+
+
+def solve_budget_for_sparsity(g: jnp.ndarray, target: float, iters: int = 30) -> jnp.ndarray:
+    """Bisection for B with mean(clip(|g|B,0,1)) == target. Monotone, so robust."""
+    absg = jnp.abs(g.astype(jnp.float32)).reshape(-1)
+    hi0 = 1.0 / jnp.maximum(jnp.min(jnp.where(absg > 0, absg, jnp.inf)), 1e-20)
+    hi0 = jnp.minimum(hi0, jnp.float32(1e20))
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        s = jnp.mean(jnp.clip(absg * mid, 0.0, 1.0))
+        return jnp.where(s < target, mid, lo), jnp.where(s < target, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (jnp.float32(0.0), hi0))
+    return 0.5 * (lo + hi)
+
+
+def resolve_budget(cfg: BudgetConfig, g: jnp.ndarray, *, shared_linf: Optional[jnp.ndarray] = None):
+    """Returns the scalar B to feed sparsign for tensor ``g``."""
+    if cfg.kind == "fixed":
+        return jnp.float32(cfg.value)
+    if cfg.kind == "linf_share":
+        s = shared_linf if shared_linf is not None else jnp.max(jnp.abs(g.astype(jnp.float32)))
+        return jnp.float32(1.0) / jnp.maximum(s, 1e-12)
+    if cfg.kind == "l2_norm":
+        n = jnp.linalg.norm(g.astype(jnp.float32).reshape(-1))
+        return jnp.sqrt(jnp.float32(g.size)) / jnp.maximum(n, 1e-12) * jnp.float32(cfg.value)
+    if cfg.kind == "target_sparsity":
+        return solve_budget_for_sparsity(g, cfg.value)
+    raise ValueError(f"unknown budget kind {cfg.kind!r}")

@@ -1,0 +1,239 @@
+"""Gradient compressors: the paper's ``sparsign`` (Def. 1) plus every baseline
+from §6 / Appendix B, as pure composable JAX functions.
+
+All worker-side compressors share the signature::
+
+    compress(g, *, budget, seed, counter_base=0) -> CompressedGrad
+
+where ``g`` is a float array, ``budget`` the paper's ``B`` (scalar or per-coord),
+``seed`` a uint32 stream seed and ``counter_base`` the logical index of g's first
+coordinate (used when a large tensor is compressed shard-by-shard so that every
+coordinate keeps its layout-invariant Bernoulli draw).
+
+Ternary compressors return int8 arrays with values in {-1, 0, +1}; the wire
+scaling (if any — TernGrad/QSGD rescale by a norm) is carried separately in
+``scale`` so that bit accounting stays honest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prng
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CompressedGrad:
+    """A compressed gradient message.
+
+    values: int8 ternary {-1,0,+1} (sign-family) or int8/float payload.
+    scale:  scalar float multiplier applied at decode time (1.0 for sparsign /
+            signSGD — they are scale-free by design, the whole point of the paper).
+    """
+
+    values: jnp.ndarray
+    scale: jnp.ndarray
+
+    def decode(self) -> jnp.ndarray:
+        return self.values.astype(jnp.float32) * self.scale
+
+
+def _counters(g: jnp.ndarray, counter_base) -> jnp.ndarray:
+    n = g.size
+    idx = jnp.arange(n, dtype=jnp.uint32).reshape(g.shape)
+    return idx + jnp.asarray(counter_base, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# The paper's compressor (Definition 1)
+# ---------------------------------------------------------------------------
+
+def sparsign(g: jnp.ndarray, *, budget, seed, counter_base=0) -> CompressedGrad:
+    """Magnitude-aware stochastic ternarization (Def. 1).
+
+    Q(g_i) = sign(g_i) w.p. min(|g_i| * B_i, 1) else 0.
+
+    Probabilities > 1 are clipped (Remark 7 — equivalent to gradient clipping).
+    Scale-free: the receiver only ever needs the ternary symbol.
+    """
+    p = jnp.clip(jnp.abs(g).astype(jnp.float32) * jnp.asarray(budget, jnp.float32), 0.0, 1.0)
+    u = prng.uniform01(seed, _counters(g, counter_base))
+    keep = u < p
+    vals = jnp.where(keep, jnp.sign(g).astype(jnp.int8), jnp.int8(0))
+    return CompressedGrad(values=vals, scale=jnp.float32(1.0))
+
+
+# ---------------------------------------------------------------------------
+# Baselines (Appendix B)
+# ---------------------------------------------------------------------------
+
+def sign_compressor(g, *, budget=None, seed=None, counter_base=0) -> CompressedGrad:
+    """signSGD (Bernstein et al. 2018): deterministic sign. sign(0)=0 (jnp.sign)."""
+    return CompressedGrad(values=jnp.sign(g).astype(jnp.int8), scale=jnp.float32(1.0))
+
+
+def scaled_sign(g, *, budget=None, seed=None, counter_base=0) -> CompressedGrad:
+    """Scaled signSGD (Karimireddy et al. 2019): (||g||_1 / d) * sign(g)."""
+    d = g.size
+    scale = jnp.sum(jnp.abs(g)).astype(jnp.float32) / jnp.float32(d)
+    return CompressedGrad(values=jnp.sign(g).astype(jnp.int8), scale=scale)
+
+
+def noisy_sign(g, *, budget=1.0, seed=0, counter_base=0) -> CompressedGrad:
+    """Noisy signSGD (Chen et al. 2020a): sign(g + n), n ~ N(0, sigma^2).
+
+    ``budget`` is reused as sigma (the tuned noise std in Appendix B).
+    Gaussian noise from two counter-stream uniforms via Box-Muller.
+    """
+    c = _counters(g, counter_base)
+    u1 = prng.uniform01(prng.fold_seed(seed, 1), c)
+    u2 = prng.uniform01(prng.fold_seed(seed, 2), c)
+    # Guard u1=0 for the log.
+    u1 = jnp.maximum(u1, jnp.float32(1e-12))
+    n = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    noisy = g.astype(jnp.float32) + jnp.asarray(budget, jnp.float32) * n
+    return CompressedGrad(values=jnp.sign(noisy).astype(jnp.int8), scale=jnp.float32(1.0))
+
+
+def _stochastic_ternary(g, norm, seed, counter_base) -> jnp.ndarray:
+    """sign(g_i) w.p. |g_i|/norm else 0 — shared by TernGrad/1-bit QSGD."""
+    p = jnp.clip(jnp.abs(g).astype(jnp.float32) / jnp.maximum(norm, 1e-12), 0.0, 1.0)
+    u = prng.uniform01(seed, _counters(g, counter_base))
+    return jnp.where(u < p, jnp.sign(g).astype(jnp.int8), jnp.int8(0))
+
+
+def qsgd_1bit_l2(g, *, budget=None, seed=0, counter_base=0) -> CompressedGrad:
+    """1-bit L2-norm QSGD (Alistarh et al. 2017, s=1): ||g||_2 * sign * Bernoulli(|g|/||g||_2)."""
+    norm = jnp.linalg.norm(g.astype(jnp.float32).reshape(-1))
+    vals = _stochastic_ternary(g, norm, seed, counter_base)
+    return CompressedGrad(values=vals, scale=norm.astype(jnp.float32))
+
+
+def qsgd_1bit_linf(g, *, budget=None, seed=0, counter_base=0) -> CompressedGrad:
+    """1-bit L-inf-norm QSGD: replaces ||.||_2 with ||.||_inf."""
+    norm = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    vals = _stochastic_ternary(g, norm, seed, counter_base)
+    return CompressedGrad(values=vals, scale=norm.astype(jnp.float32))
+
+
+def terngrad(g, *, budget=None, seed=0, counter_base=0, shared_max: Optional[jnp.ndarray] = None) -> CompressedGrad:
+    """TernGrad (Wen et al. 2017): s_t * sign(g) * Bernoulli(|g|/s_t).
+
+    ``shared_max`` is the magnitude-sharing protocol value max_m ||g_m||_inf; when
+    None it degrades to the local L-inf norm (single-worker TernGrad).
+    """
+    s_t = shared_max if shared_max is not None else jnp.max(jnp.abs(g.astype(jnp.float32)))
+    vals = _stochastic_ternary(g, s_t, seed, counter_base)
+    return CompressedGrad(values=vals, scale=jnp.asarray(s_t, jnp.float32))
+
+
+def qsgd(g, *, s: int, seed=0, counter_base=0) -> CompressedGrad:
+    """Full QSGD with s quantization levels (Appendix B Eq. 42-43). Used by the
+    FedCom baseline (8-bit => s = 2**8 - 1 levels). Payload is int8-like small ints
+    times scale/s; we keep values as int32 level*sign for exact bit accounting."""
+    gf = g.astype(jnp.float32)
+    norm = jnp.maximum(jnp.linalg.norm(gf.reshape(-1)), 1e-12)
+    r = jnp.abs(gf) * (s / norm)
+    l = jnp.floor(r)
+    frac = r - l
+    u = prng.uniform01(seed, _counters(g, counter_base))
+    level = l + (u < frac).astype(jnp.float32)
+    vals = (jnp.sign(gf) * level).astype(jnp.int32)
+    return CompressedGrad(values=vals, scale=(norm / s).astype(jnp.float32))
+
+
+def identity(g, *, budget=None, seed=None, counter_base=0) -> CompressedGrad:
+    """Uncompressed baseline (D-SGD)."""
+    return CompressedGrad(values=g, scale=jnp.float32(1.0))
+
+
+# ---------------------------------------------------------------------------
+# Registry / pytree-level application
+# ---------------------------------------------------------------------------
+
+COMPRESSORS: dict[str, Callable] = {
+    "sparsign": sparsign,
+    "sign": sign_compressor,
+    "scaled_sign": scaled_sign,
+    "noisy_sign": noisy_sign,
+    "qsgd_1bit_l2": qsgd_1bit_l2,
+    "qsgd_1bit_linf": qsgd_1bit_linf,
+    "terngrad": terngrad,
+    "identity": identity,
+}
+
+
+def get_compressor(name: str) -> Callable:
+    try:
+        return COMPRESSORS[name]
+    except KeyError:
+        raise KeyError(f"unknown compressor {name!r}; known: {sorted(COMPRESSORS)}") from None
+
+
+def compress_leaf_chunked(fn, g, *, budget, seed, counter_base=0, max_chunk: int = 1 << 23):
+    """Apply a ternary compressor to a large leaf in chunks.
+
+    Stream-identical to one-shot compression (counter = flat coordinate index),
+    but bounds the transient u32/f32 RNG buffers to max_chunk coordinates —
+    without this, compressing an embedding table materializes index/uniform
+    arrays as large as the table itself (the Pallas kernel regenerates them
+    in-register on TPU; this is the jnp path's equivalent).
+    """
+    n = g.size
+    if n <= max_chunk:
+        return fn(g, budget=budget, seed=seed, counter_base=counter_base)
+    k = -(-n // max_chunk)
+    while n % k:
+        k += 1
+    chunk = n // k
+    flat = g.reshape(-1)
+    base = jnp.asarray(counter_base, jnp.uint32)
+
+    def body(_, i):
+        seg = jax.lax.dynamic_slice(flat, (i * chunk,), (chunk,))
+        msg = fn(seg, budget=budget, seed=seed,
+                 counter_base=base + (i * chunk).astype(jnp.uint32))
+        return None, msg.values
+
+    _, vals = jax.lax.scan(body, None, jnp.arange(k))
+    # chunking is only valid for scale-free compressors (sparsign/sign/noisy):
+    # norm-carrying ones (qsgd/terngrad) must see the whole tensor at once
+    return CompressedGrad(values=vals.reshape(g.shape), scale=jnp.float32(1.0))
+
+
+SCALE_FREE = ("sparsign", "sign", "noisy_sign")
+
+
+def leaf_counter_bases(tree) -> list[int]:
+    """Starting logical-coordinate index for each leaf of a gradient pytree.
+
+    Gives every parameter coordinate in the model a fixed global index so that
+    per-leaf compression draws from disjoint slices of one logical stream.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    bases, acc = [], 0
+    for leaf in leaves:
+        bases.append(acc)
+        acc += int(leaf.size)
+    return bases
+
+
+def compress_tree(grads, *, name: str, budget, seed, extra_salt: int = 0):
+    """Apply a compressor leaf-wise with disjoint counter ranges.
+
+    Returns a pytree of CompressedGrad mirroring ``grads``.
+    """
+    fn = get_compressor(name)
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    bases = leaf_counter_bases(grads)
+    out = [
+        fn(leaf, budget=budget, seed=prng.fold_seed(seed, extra_salt), counter_base=base)
+        for leaf, base in zip(leaves, bases)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)

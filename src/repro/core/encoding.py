@@ -1,0 +1,107 @@
+"""Communication-bit accounting (paper §6, Eq. 12) + wire formats.
+
+Two views of "how many bits does a round cost":
+
+1. *Information-theoretic* (what the paper tabulates): sparse ternary streams are
+   coded as Golomb-coded run lengths of the nonzero positions plus 1 sign bit per
+   nonzero (Sattler et al. 2019a). Eq. 12:
+
+       b_bar = b* + 1 / (1 - (1-p)^(2^b*)),
+       b*    = 1 + floor(log2( log(phi - ?) ... ))   [see golomb_bstar]
+
+   with p the nonzero (sparsity) ratio. Dense ternary costs log2(3) bits/coord;
+   sign costs 1 bit/coord; fp32 costs 32.
+
+2. *Physical TPU wire bytes*: what the HLO collectives actually move (int8 votes
+   or 2-bit packed lanes). Reported by the dry-run; see launch/hlo_stats.py.
+
+Keeping both lets us reproduce the paper's tables exactly while also reporting
+honest hardware numbers.
+"""
+
+from __future__ import annotations
+
+import math
+
+GOLDEN_RATIO = (math.sqrt(5.0) + 1.0) / 2.0
+
+
+def golomb_bstar(p: float) -> int:
+    """Optimal Golomb parameter b* = 1 + floor(log2(log(phi-1)/log(1-p))).
+
+    (Sattler et al. 2019a; the paper's Eq. 12 writes log(sqrt(5)+1/2) which is
+    the same phi-based constant.) p is the nonzero ratio in (0, 1).
+    """
+    if not 0.0 < p < 1.0:
+        raise ValueError(f"sparsity ratio p must be in (0,1), got {p}")
+    num = math.log(GOLDEN_RATIO - 1.0)  # log(0.618...) < 0
+    den = math.log(1.0 - p)             # < 0
+    return max(0, 1 + int(math.floor(math.log2(num / den))))
+
+
+def golomb_bits_per_index(p: float) -> float:
+    """Average bits per nonzero index, Eq. 12."""
+    bstar = golomb_bstar(p)
+    return bstar + 1.0 / (1.0 - (1.0 - p) ** (2.0 ** bstar))
+
+
+def ternary_stream_bits(d: int, nnz: int, *, coder: str = "golomb") -> float:
+    """Total uplink bits for one worker's d-dim ternary message with nnz nonzeros.
+
+    golomb: Eq. 12 position bits + 1 sign bit per nonzero (paper's accounting).
+    dense:  log2(3) bits per coordinate (Wen et al. 2017).
+    naive_index: log2(d) bits per nonzero index + 1 sign bit (Remark 8).
+    packed2bit: the TPU wire format - 2 bits per coordinate.
+    """
+    if nnz <= 0:
+        return 0.0
+    p = min(max(nnz / d, 1e-12), 1.0 - 1e-12)
+    if coder == "golomb":
+        return nnz * (golomb_bits_per_index(p) + 1.0)
+    if coder == "dense":
+        return d * math.log2(3.0)
+    if coder == "naive_index":
+        return nnz * (math.log2(max(d, 2)) + 1.0)
+    if coder == "packed2bit":
+        return d * 2.0
+    raise ValueError(f"unknown coder {coder!r}")
+
+
+def round_bits(
+    d: int,
+    nnz_per_worker: float,
+    n_workers: int,
+    *,
+    coder: str = "golomb",
+    downlink: str = "sign",
+) -> float:
+    """Worker->server bits for one communication round (the paper's tables count
+    uplink only; downlink option included for completeness).
+
+    downlink: 'sign' = 1 bit/coord broadcast, 'ternary' = Golomb again, 'free' =
+    TPU majority-vote-by-psum (no broadcast at all).
+    """
+    up = n_workers * ternary_stream_bits(d, int(round(nnz_per_worker)), coder=coder)
+    if downlink == "free":
+        down = 0.0
+    elif downlink == "sign":
+        down = d
+    elif downlink == "ternary":
+        down = ternary_stream_bits(d, int(round(nnz_per_worker)), coder=coder)
+    else:
+        raise ValueError(downlink)
+    return up + down
+
+
+def baseline_bits_per_round(d: int, algorithm: str, *, nnz: float | None = None) -> float:
+    """Uplink bits per worker per round for each §6 baseline."""
+    if algorithm in ("sign", "scaled_sign", "noisy_sign"):
+        return float(d)  # 1 bit per coordinate (+32 for the scale; negligible, matches paper)
+    if algorithm in ("qsgd_1bit_l2", "qsgd_1bit_linf", "terngrad", "sparsign"):
+        assert nnz is not None, "ternary methods need the realized nnz"
+        return ternary_stream_bits(d, int(round(nnz)), coder="golomb") + 32.0
+    if algorithm == "identity":
+        return 32.0 * d
+    if algorithm.startswith("qsgd"):
+        return 8.0 * d  # 8-bit QSGD as in FedCom comparison
+    raise ValueError(algorithm)

@@ -1,0 +1,84 @@
+"""Executable versions of the paper's theory (Thm 1, Cor 1, Thm 2's kappa).
+
+These are used by tests (Monte-Carlo vs closed-form bound) and by the
+bench_theory_bound benchmark that reproduces the 'probability of wrong
+aggregation' curves of Figs 1-2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wrong_aggregation_bound(p_bar, q_bar, m: int):
+    """Theorem 1: P(wrong vote) <= [1 - (sqrt(q_bar) - sqrt(p_bar))^2]^M, valid
+    when q_bar > p_bar."""
+    p_bar = jnp.asarray(p_bar, jnp.float64) if jax.config.jax_enable_x64 else jnp.asarray(p_bar, jnp.float32)
+    base = 1.0 - (jnp.sqrt(q_bar) - jnp.sqrt(p_bar)) ** 2
+    return base ** m
+
+
+def sparsign_pq(u: jnp.ndarray, budget, p_select=1.0):
+    """Corollary 1: (p_bar, q_bar) for sparsign on fixed worker scalars u_m.
+
+    A  = workers whose sign disagrees with sign(mean(u))  -> contribute to p_bar
+    Ac = workers whose sign agrees                        -> contribute to q_bar
+    """
+    u = u.astype(jnp.float32)
+    s = jnp.sign(jnp.mean(u))
+    keep_prob = jnp.clip(jnp.abs(u) * budget, 0.0, 1.0) * p_select
+    agree = jnp.sign(u) == s
+    q_bar = jnp.mean(jnp.where(agree & (jnp.sign(u) != 0), keep_prob, 0.0))
+    p_bar = jnp.mean(jnp.where(~agree & (jnp.sign(u) != 0), keep_prob, 0.0))
+    return p_bar, q_bar
+
+
+def deterministic_sign_pq(u: jnp.ndarray, p_select=1.0):
+    """(p_bar, q_bar) for the deterministic sign compressor (signSGD): every
+    selected worker always transmits its sign."""
+    u = u.astype(jnp.float32)
+    s = jnp.sign(jnp.mean(u))
+    agree = (jnp.sign(u) == s) & (jnp.sign(u) != 0)
+    disagree = (jnp.sign(u) != s) & (jnp.sign(u) != 0)
+    return jnp.mean(jnp.where(disagree, p_select, 0.0)), jnp.mean(jnp.where(agree, p_select, 0.0))
+
+
+def monte_carlo_wrong_aggregation(key, u: jnp.ndarray, budget, n_trials: int = 4096,
+                                  p_select: float = 1.0, n_sampled: int | None = None):
+    """Empirical P(sign(sum of sparsign votes) != sign(mean u)) by simulation.
+
+    Ties (vote sum == 0) count as wrong (no update in the right direction),
+    matching the X_m >= 0 event in the Thm 1 proof.
+    """
+    m = u.shape[0]
+    s = jnp.sign(jnp.mean(u))
+
+    def trial(k):
+        k1, k2 = jax.random.split(k)
+        if n_sampled is not None:
+            sel = jax.random.permutation(k1, m)[:n_sampled]
+            mask = jnp.zeros((m,), bool).at[sel].set(True)
+        else:
+            mask = jax.random.uniform(k1, (m,)) < p_select
+        keep = jax.random.uniform(k2, (m,)) < jnp.clip(jnp.abs(u) * budget, 0.0, 1.0)
+        votes = jnp.where(mask & keep, jnp.sign(u), 0.0)
+        return jnp.sign(jnp.sum(votes)) != s
+
+    wrong = jax.vmap(trial)(jax.random.split(key, n_trials))
+    return jnp.mean(wrong.astype(jnp.float32))
+
+
+def kappa(g_workers: jnp.ndarray, budget, p_select=1.0):
+    """Theorem 2's kappa for one coordinate given the per-worker gradients
+    g_workers [M]. kappa < 1/2 is the convergence-enabling event."""
+    g = g_workers.astype(jnp.float32)
+    m = g.shape[0]
+    mean_g = jnp.mean(g)
+    s = jnp.sign(mean_g)
+    agree = jnp.sign(g) == s
+    sum_agree = jnp.sum(jnp.where(agree, jnp.abs(g), 0.0)) / m
+    sum_dis = jnp.sum(jnp.where(~agree, jnp.abs(g), 0.0)) / m
+    denom = (jnp.sqrt(sum_agree) + jnp.sqrt(sum_dis)) ** 2
+    ratio = jnp.abs(mean_g) / jnp.maximum(denom, 1e-20)
+    return (1.0 - budget * p_select * ratio) ** m

@@ -1,0 +1,88 @@
+"""Small models for the paper's §6 experiments, on flattened parameter vectors.
+
+The FL simulation works on a single ravelled parameter vector per worker (the
+paper's math is coordinate-wise), so models expose init -> (vector, apply_fn).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def mlp_fashion(key, in_dim: int = 784, hidden=(256, 128), n_classes: int = 10):
+    """The paper's Fashion-MNIST net: 784-256-128-10 MLP with ReLU."""
+    ks = jax.random.split(key, len(hidden) + 1)
+    dims = (in_dim,) + tuple(hidden) + (n_classes,)
+    params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = jax.random.normal(ks[i], (a, b)) * (a ** -0.5)
+        params[f"b{i}"] = jnp.zeros((b,))
+    vec, unravel = ravel_pytree(params)
+    n_layers = len(dims) - 1
+
+    def apply_fn(v, x):
+        p = unravel(v)
+        h = x.reshape(x.shape[0], -1)
+        for i in range(n_layers):
+            h = h @ p[f"w{i}"] + p[f"b{i}"]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return vec, apply_fn
+
+
+def cnn_cifar(key, shape=(32, 32, 3), n_classes: int = 10, width: int = 32):
+    """Reduced VGG-style CNN for the CIFAR-10 analog (VGG-9 scaled down for the
+    1-core CPU budget; same block structure: 2 conv blocks + dense)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c = shape[-1]
+    params = {
+        "c1": jax.random.normal(k1, (3, 3, c, width)) * (9 * c) ** -0.5,
+        "c2": jax.random.normal(k2, (3, 3, width, 2 * width)) * (9 * width) ** -0.5,
+        "w1": jax.random.normal(k3, ((shape[0] // 4) * (shape[1] // 4) * 2 * width, 128))
+               * ((shape[0] // 4) * (shape[1] // 4) * 2 * width) ** -0.5,
+        "b1": jnp.zeros((128,)),
+        "w2": jax.random.normal(k4, (128, n_classes)) * 128 ** -0.5,
+        "b2": jnp.zeros((n_classes,)),
+    }
+    vec, unravel = ravel_pytree(params)
+
+    def apply_fn(v, x):
+        p = unravel(v)
+        h = x
+        h = jax.lax.conv_general_dilated(h, p["c1"], (1, 1), "SAME",
+                                         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        h = jax.lax.conv_general_dilated(h, p["c2"], (1, 1), "SAME",
+                                         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    return vec, apply_fn
+
+
+def xent_loss(apply_fn: Callable):
+    def loss(v, x, y):
+        logits = apply_fn(v, x)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - tgt)
+    return loss
+
+
+def accuracy(apply_fn: Callable, v, x, y, batch: int = 512) -> float:
+    n = x.shape[0]
+    correct = 0
+    for i in range(0, n, batch):
+        logits = apply_fn(v, x[i:i + batch])
+        correct += int((jnp.argmax(logits, -1) == y[i:i + batch]).sum())
+    return correct / n

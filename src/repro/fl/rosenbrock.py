@@ -1,0 +1,103 @@
+"""§6.1: Rosenbrock minimization with 100 heterogeneous workers (Figs 1-2).
+
+Heterogeneity: worker m sees v_m * F(.) with sum(v_m) = 1 and 80 of 100 v_m
+negative (Eq. 11) — the signs of 80 workers' gradients OPPOSE the true
+gradient, the adversarial regime where deterministic signSGD provably
+diverges and sparsign's magnitude-awareness saves the vote.
+
+Note: the paper's Eq. 10 prints F_i = 100(x_{i+1} - x_i^2) + (1 - x_i)^2 —
+missing the square on the first term vs the standard Rosenbrock used by
+Safaryan & Richtarik; we implement the standard form (their reference).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prng
+from repro.core.compressors import sparsign
+
+
+def rosenbrock(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(100.0 * (x[1:] - x[:-1] ** 2) ** 2 + (1.0 - x[:-1]) ** 2)
+
+
+def make_heterogeneity(m: int = 100, n_neg: int = 80, seed: int = 0,
+                       neg_mass: float = 0.8) -> np.ndarray:
+    """v with sum=1 and n_neg negative entries (Eq. 11).
+
+    The paper's construction fixes only the count and the sum; the regime its
+    figures show is 'many wrong signs, little wrong mass': 80 workers carry
+    negative scales of small total magnitude (neg_mass), the 20 positive
+    workers carry 1 + neg_mass. Majority-by-heads (signSGD) is then wrong with
+    probability ~1 while magnitude-weighted voting (sparsign) recovers the true
+    sign — exactly the separation Fig. 1 plots.
+    """
+    rng = np.random.RandomState(seed)
+    neg = rng.uniform(0.5, 1.5, size=n_neg)
+    neg *= neg_mass / neg.sum()
+    pos = rng.uniform(0.5, 1.5, size=m - n_neg)
+    pos *= (1.0 + neg_mass) / pos.sum()
+    v = np.concatenate([-neg, pos])
+    rng.shuffle(v)
+    return v
+
+
+@dataclasses.dataclass
+class RosenbrockResult:
+    values: np.ndarray          # F(x_t)
+    wrong_agg: np.ndarray       # per-round wrong-aggregation probability
+    x_final: np.ndarray
+
+
+def run(
+    compressor: str = "sparsign",
+    budget: float = 0.01,
+    *,
+    m: int = 100,
+    n_sel: int = 10,
+    rounds: int = 300,
+    d: int = 10,
+    lr: float = 2e-4,
+    seed: int = 0,
+) -> RosenbrockResult:
+    """signSGD ('sign') vs SPARSIGNSGD ('sparsign') under Eq. 11 heterogeneity."""
+    v_scales = jnp.asarray(make_heterogeneity(m, seed=seed))
+    x = jnp.full((d,), -0.5)
+    grad_f = jax.grad(rosenbrock)
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def round_fn(x, r, key):
+        g_true = grad_f(x)                        # true global gradient direction
+        g_workers = v_scales[:, None] * g_true[None, :]   # [M, d]
+        ksel = jax.random.fold_in(key, r)
+        sel = jax.random.permutation(ksel, m)[:n_sel]
+        mask = jnp.zeros((m,), bool).at[sel].set(True)
+
+        def msg(gm, widx):
+            if compressor == "sign":
+                return jnp.sign(gm).astype(jnp.int8)
+            wseed = prng.fold_seed(jnp.uint32(seed), 7) + widx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) \
+                    + jnp.uint32(r) * jnp.uint32(0x85EBCA6B)
+            return sparsign(gm, budget=budget, seed=wseed).values
+
+        votes = jax.vmap(msg)(g_workers, jnp.arange(m))   # [M, d] int8
+        votes = jnp.where(mask[:, None], votes, jnp.int8(0))
+        vote_sum = jnp.sum(votes.astype(jnp.int32), axis=0)
+        agg = jnp.sign(vote_sum)
+        wrong = jnp.mean((agg != jnp.sign(g_true)).astype(jnp.float32))
+        x = x - lr * agg.astype(x.dtype)
+        return x, wrong
+
+    values, wrongs = [], []
+    for r in range(rounds):
+        x, wrong = round_fn(x, jnp.int32(r), key)
+        values.append(float(rosenbrock(x)))
+        wrongs.append(float(wrong))
+    return RosenbrockResult(values=np.array(values), wrong_agg=np.array(wrongs),
+                            x_final=np.asarray(x))

@@ -1,0 +1,166 @@
+"""M-worker federated simulation of Algorithms 1 & 2 — the paper's §6 engine.
+
+One jit'd round on flattened parameter vectors:
+
+  select |S| workers -> each runs tau compressed local steps (Alg. 2) or one
+  gradient (Alg. 1) -> uplink Q(., B_g) -> server mean + C(.) [+ EF] -> update.
+
+Workers are vmapped; per-worker batches are drawn from Dirichlet-partitioned
+shards with per-(round, worker) seeds, so runs are deterministic end-to-end.
+The same core.algorithm compressors drive the mesh trainers — this module IS
+the paper's experiment, the trainers are its production deployment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prng
+from repro.core.algorithm import CompressionConfig
+from repro.core.budgets import resolve_budget
+from repro.core.compressors import get_compressor
+from repro.core.encoding import baseline_bits_per_round, ternary_stream_bits
+from repro.fl.models import accuracy, xent_loss
+
+
+@dataclasses.dataclass
+class FLConfig:
+    n_workers: int = 100
+    participation: float = 1.0      # fraction sampled per round
+    rounds: int = 200
+    batch_size: int = 128
+    lr: float = 0.01                # eta (server)
+    local_lr: float = 0.01          # eta_L (Alg. 2)
+    comp: CompressionConfig = dataclasses.field(default_factory=CompressionConfig)
+    seed: int = 0
+    eval_every: int = 10
+
+
+def _worker_batch_idx(key, shard_sizes, batch):
+    """Per-worker minibatch indices into each worker's shard (uniform w/ repl.)."""
+    return jax.random.randint(key, (batch,), 0, shard_sizes)
+
+
+def build_round_fn(loss_fn: Callable, cfg: FLConfig, x_parts, y_parts):
+    """x_parts: [M, shard, ...] stacked per-worker data (padded to equal shard)."""
+    comp = cfg.comp
+    fn = get_compressor(comp.compressor)
+    m = cfg.n_workers
+    n_sel = max(1, int(round(cfg.participation * m)))
+    shard_len = x_parts.shape[1]
+
+    def worker_msg(v, widx, key, round_idx):
+        """One worker's uplink message (decoded float) + stats."""
+        wseed = prng.fold_seed(jnp.uint32(cfg.seed), 0x5EED) + widx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+        wseed = wseed + round_idx.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+
+        def grad_at(w, salt):
+            kb = jax.random.fold_in(key, salt)
+            idx = jax.random.randint(kb, (cfg.batch_size,), 0, shard_len)
+            xb = x_parts[widx][idx]
+            yb = y_parts[widx][idx]
+            return jax.grad(loss_fn)(w, xb, yb)
+
+        if comp.local_steps == 1:
+            g = grad_at(v, 0)
+            budget = resolve_budget(comp.budget, g)
+            msg = fn(g, budget=budget, seed=wseed, counter_base=0)
+        else:
+            b_l = jnp.float32(comp.local_budget if comp.local_budget is not None else 1.0)
+            sp = get_compressor("sparsign")
+
+            def body(carry, c):
+                w, acc = carry
+                g = grad_at(w, c + 1)
+                q = sp(g, budget=b_l, seed=prng.fold_seed(wseed, 1000),
+                       counter_base=c * g.size).values
+                w = w - cfg.local_lr * q.astype(w.dtype)
+                return (w, acc + q.astype(jnp.int32)), None
+
+            acc0 = jnp.zeros(v.shape, jnp.int32)
+            (_, acc), _ = jax.lax.scan(body, (v, acc0), jnp.arange(comp.local_steps))
+            src = acc.astype(jnp.float32)
+            budget = resolve_budget(comp.budget, src)
+            msg = fn(src, budget=budget, seed=prng.fold_seed(wseed, 2), counter_base=0)
+        dec = msg.values.astype(jnp.float32) * msg.scale
+        nnz = jnp.sum(jnp.abs(jnp.sign(msg.values)).astype(jnp.float32))
+        return dec, nnz
+
+    @jax.jit
+    def round_fn(v, ef, round_idx, key):
+        ksel, kw = jax.random.split(jax.random.fold_in(key, round_idx))
+        sel = jax.random.permutation(ksel, m)[:n_sel]
+        keys = jax.random.split(kw, n_sel)
+        dec, nnz = jax.vmap(lambda w, k: worker_msg(v, w, k, round_idx))(sel, keys)
+        mean_delta = jnp.mean(dec, axis=0)
+        if comp.server == "majority_vote":
+            g_tilde = jnp.sign(mean_delta)
+        elif comp.server == "scaled_sign_ef":
+            acc = mean_delta + ef
+            scale = jnp.sum(jnp.abs(acc)) / acc.size
+            g_tilde = scale * jnp.sign(acc)
+            ef = acc - g_tilde
+        else:
+            g_tilde = mean_delta
+        eta = cfg.lr * (cfg.local_lr / cfg.lr if False else 1.0)
+        v = v - cfg.lr * g_tilde
+        return v, ef, jnp.mean(nnz)
+
+    return round_fn
+
+
+def run_fl(
+    v0: jnp.ndarray,
+    apply_fn: Callable,
+    cfg: FLConfig,
+    x_parts: np.ndarray, y_parts: np.ndarray,
+    x_test: np.ndarray, y_test: np.ndarray,
+    *,
+    log: Optional[Callable[[str], None]] = None,
+) -> dict:
+    """Returns {'acc': [(round, acc)], 'bits_per_round': float, 'final_acc': float}."""
+    loss_fn = xent_loss(apply_fn)
+    round_fn = build_round_fn(loss_fn, cfg, jnp.asarray(x_parts), jnp.asarray(y_parts))
+    v = v0
+    ef = jnp.zeros_like(v0)
+    key = jax.random.PRNGKey(cfg.seed)
+    accs, nnzs = [], []
+    d = int(v0.size)
+    for r in range(cfg.rounds):
+        v, ef, nnz = round_fn(v, ef, jnp.int32(r), key)
+        nnzs.append(float(nnz))
+        if (r + 1) % cfg.eval_every == 0 or r == cfg.rounds - 1:
+            acc = accuracy(apply_fn, v, jnp.asarray(x_test), jnp.asarray(y_test))
+            accs.append((r + 1, acc))
+            if log:
+                log(f"[fl] round {r+1}: acc={acc:.4f} nnz={nnz:.0f}")
+    mean_nnz = float(np.mean(nnzs)) if nnzs else 0.0
+    if cfg.comp.is_ternary and cfg.comp.compressor != "sign":
+        bits = ternary_stream_bits(d, int(mean_nnz), coder="golomb") + 32.0
+    else:
+        bits = baseline_bits_per_round(d, cfg.comp.compressor, nnz=mean_nnz)
+    n_sel = max(1, int(round(cfg.participation * cfg.n_workers)))
+    return {
+        "acc": accs,
+        "final_acc": accs[-1][1] if accs else float("nan"),
+        "mean_nnz": mean_nnz,
+        "uplink_bits_per_round": bits * n_sel,
+        "d": d,
+    }
+
+
+def stack_partitions(x, y, parts) -> tuple[np.ndarray, np.ndarray]:
+    """Per-worker shards stacked to [M, shard_max, ...] (wrap-padded)."""
+    shard = max(len(p) for p in parts)
+    xs, ys = [], []
+    for idx in parts:
+        reps = np.resize(idx, shard)
+        xs.append(x[reps])
+        ys.append(y[reps])
+    return np.stack(xs), np.stack(ys)

@@ -1,0 +1,68 @@
+"""Shared plumbing for the compression kernels.
+
+All kernels operate on a canonical 2D layout: the caller's tensor is flattened
+row-major and viewed as (rows, LANES) with LANES a multiple of 128 (TPU lane
+width) and rows padded to the sublane tile of the widest dtype in play
+(int8 tiles are (32, 128), f32 tiles are (8, 128) — we pad rows to 32-multiples
+so one BlockSpec serves mixed-dtype kernels).
+
+The logical coordinate of element (r, c) is ``r * LANES + c`` — identical to its
+index in the caller's flat tensor — so the counter-based RNG stream is invariant
+to this packing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+LANES = 512            # lane-dim width of the canonical view (4 * 128)
+SUBLANE_PAD = 32       # row padding multiple (int8 sublane tile)
+DEFAULT_BLOCK_ROWS = 256
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode everywhere except real TPUs."""
+    return jax.default_backend() != "tpu"
+
+
+def to_2d(flat: jnp.ndarray, lanes: int = LANES, row_pad: int = SUBLANE_PAD):
+    """Pad a flat array to a (rows, lanes) canonical view.
+
+    Returns (view, original_size). Padding is zeros (harmless for every kernel
+    here: sign(0)=0, votes 0, pack of 0 is 0).
+    """
+    assert flat.ndim == 1
+    n = flat.shape[0]
+    rows = -(-n // lanes)
+    rows = -(-rows // row_pad) * row_pad
+    padded = jnp.zeros((rows * lanes,), dtype=flat.dtype).at[:n].set(flat)
+    return padded.reshape(rows, lanes), n
+
+
+def from_2d(view: jnp.ndarray, n: int, shape, dtype=None):
+    out = view.reshape(-1)[:n].reshape(shape)
+    return out.astype(dtype) if dtype is not None else out
+
+
+def block_rows_for(rows: int, want: int = DEFAULT_BLOCK_ROWS) -> int:
+    """Largest divisor of ``rows`` that is <= want and a multiple of SUBLANE_PAD."""
+    want = min(want, rows)
+    want = max(SUBLANE_PAD, (want // SUBLANE_PAD) * SUBLANE_PAD)
+    while rows % want:
+        want -= SUBLANE_PAD
+    return max(want, SUBLANE_PAD)
+
+
+def smem_scalar(x, dtype) -> jnp.ndarray:
+    """Scalars ride in SMEM as (1, 1) arrays."""
+    return jnp.asarray(x, dtype=dtype).reshape(1, 1)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes(block_rows: int, lanes: int, *dtypes) -> int:
+    per = {jnp.float32.dtype: 4, jnp.bfloat16.dtype: 2, jnp.int8.dtype: 1,
+           jnp.uint8.dtype: 1, jnp.int32.dtype: 4, jnp.uint32.dtype: 4}
+    return sum(block_rows * lanes * per[jnp.dtype(d)] for d in dtypes)

@@ -1,0 +1,28 @@
+"""Public fused EF-server op (arbitrary shapes)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.ef_server.kernel import ef_server_2d
+from repro.kernels.ef_server.ref import ef_scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ef_server_op(delta_mean: jnp.ndarray, residual: jnp.ndarray, *, interpret: bool | None = None):
+    """Fused Eq. 8: returns (g_tilde, new_residual), both float32, shape of input."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    scale = ef_scale(delta_mean, residual)
+    d2, n = common.to_2d(delta_mean.astype(jnp.float32).reshape(-1))
+    e2, _ = common.to_2d(residual.astype(jnp.float32).reshape(-1))
+    br = common.block_rows_for(d2.shape[0])
+    out2, newe2 = ef_server_2d(d2, e2, scale, block_rows=br, interpret=interpret)
+    return (
+        common.from_2d(out2, n, delta_mean.shape),
+        common.from_2d(newe2, n, delta_mean.shape),
+    )

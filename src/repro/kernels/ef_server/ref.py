@@ -1,0 +1,25 @@
+"""Oracle for the fused server EF step (Alg. 2 server side, Eq. 8).
+
+Given the vote mean d, residual e and the *precomputed* scale s = ||d+e||_1 / n
+(one jnp reduction pass), the fused pass computes
+
+    out  = s * sign(d + e)        # C(acc), scaled-sign alpha-approx compressor
+    e'   = (d + e) - out
+
+in a single read of (d, e) and single write of (out, e').
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ef_scale(delta_mean: jnp.ndarray, residual: jnp.ndarray) -> jnp.ndarray:
+    acc = delta_mean.astype(jnp.float32) + residual.astype(jnp.float32)
+    return jnp.sum(jnp.abs(acc)) / jnp.float32(acc.size)
+
+
+def ef_server_ref(delta_mean: jnp.ndarray, residual: jnp.ndarray, scale) -> tuple[jnp.ndarray, jnp.ndarray]:
+    acc = delta_mean.astype(jnp.float32) + residual.astype(jnp.float32)
+    out = jnp.asarray(scale, jnp.float32) * jnp.sign(acc)
+    return out, acc - out

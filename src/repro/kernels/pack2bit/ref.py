@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for 2-bit ternary packing.
+
+Wire format: *block-interleaved* packing over the canonical (rows, LANES) view.
+Byte j of a row packs the 4 ternary symbols at columns
+(j, j + L/4, j + 2L/4, j + 3L/4) — contiguous lane slices, so the TPU kernel is
+pure vector ops (no sub-lane shuffles). Codes: 0 -> 00, +1 -> 01, -1 -> 10.
+
+Any decoder must use the same (documented) permutation; unpack(pack(x)) == x is
+the property tests enforce.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _encode(t: jnp.ndarray) -> jnp.ndarray:
+    """ternary int8 {-1,0,1} -> 2-bit code uint8 {2,0,1}."""
+    return jnp.where(t < 0, jnp.uint8(2), t.astype(jnp.uint8))
+
+
+def _decode(c: jnp.ndarray) -> jnp.ndarray:
+    """2-bit code -> ternary int8. Code 3 (invalid) decodes as 0."""
+    return jnp.where(c == 1, jnp.int8(1), jnp.where(c == 2, jnp.int8(-1), jnp.int8(0)))
+
+
+def pack2bit_ref(t2d: jnp.ndarray) -> jnp.ndarray:
+    """(rows, L) int8 ternary -> (rows, L//4) uint8."""
+    rows, lanes = t2d.shape
+    q = lanes // 4
+    c0 = _encode(t2d[:, 0 * q:1 * q])
+    c1 = _encode(t2d[:, 1 * q:2 * q])
+    c2 = _encode(t2d[:, 2 * q:3 * q])
+    c3 = _encode(t2d[:, 3 * q:4 * q])
+    return c0 | (c1 << 2) | (c2 << 4) | (c3 << 6)
+
+
+def unpack2bit_ref(p2d: jnp.ndarray) -> jnp.ndarray:
+    """(rows, L//4) uint8 -> (rows, L) int8 ternary."""
+    parts = [_decode((p2d >> (2 * k)) & jnp.uint8(3)) for k in range(4)]
+    return jnp.concatenate(parts, axis=1)

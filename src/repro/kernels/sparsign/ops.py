@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the sparsign kernel: arbitrary shapes/dtypes,
+pad -> canonical 2D -> kernel -> unpad."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.sparsign.kernel import sparsign_2d
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def sparsign_op(
+    g: jnp.ndarray,
+    budget,
+    seed,
+    counter_base=0,
+    *,
+    interpret: bool | None = None,
+    block_rows: int | None = None,
+) -> jnp.ndarray:
+    """int8 ternary sparsign of ``g`` (any shape, f32/bf16) via the Pallas kernel."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    view, n = common.to_2d(g.reshape(-1))
+    br = block_rows or common.block_rows_for(view.shape[0])
+    budget_bits = jax.lax.bitcast_convert_type(jnp.asarray(budget, jnp.float32), jnp.uint32)
+    scalars = jnp.stack(
+        [jnp.asarray(seed, jnp.uint32), jnp.asarray(counter_base, jnp.uint32), budget_bits]
+    ).reshape(1, 3)
+    out2d = sparsign_2d(view, scalars, block_rows=br, interpret=interpret)
+    return common.from_2d(out2d, n, g.shape)

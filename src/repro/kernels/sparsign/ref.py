@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the sparsign kernel.
+
+Must match the Pallas kernel bit-for-bit: same counter-hash RNG, same float32
+threshold comparison, same clipping.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import prng
+
+
+def sparsign_ref(g: jnp.ndarray, budget, seed, counter_base=0) -> jnp.ndarray:
+    """int8 ternary sparsign over an arbitrary-shape tensor."""
+    gf = g.astype(jnp.float32)
+    p = jnp.clip(jnp.abs(gf) * jnp.float32(budget), 0.0, 1.0)
+    idx = jnp.arange(g.size, dtype=jnp.uint32).reshape(g.shape) + jnp.asarray(counter_base, jnp.uint32)
+    u = prng.uniform01(seed, idx)
+    return jnp.where(u < p, jnp.sign(gf), 0.0).astype(jnp.int8)

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: fused majority-vote sign + SGD update.
+
+Consumes the int8/int32 vote sums straight out of the psum collective and
+applies w' = w - eta * sign(votes) (with optional quorum deadband) in one pass:
+read w (2/4 B) + votes (1/4 B), write w' — versus sign->cast->scale->sub jnp
+chain at ~4 passes. The weight buffers are the largest arrays a round touches,
+so this is the top memory-roofline win of the optimizer tail.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+
+def _kernel(scalars_ref, w_ref, v_ref, out_ref):
+    eta = jax.lax.bitcast_convert_type(scalars_ref[0, 0], jnp.float32)
+    quorum = scalars_ref[0, 1].astype(jnp.int32)
+    v = v_ref[...].astype(jnp.int32)
+    step = jnp.where(jnp.abs(v) >= quorum, jnp.sign(v), 0).astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[...] = (w - eta * step).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def vote_update_2d(w2d, v2d, scalars, *, block_rows: int, interpret: bool):
+    rows, lanes = w2d.shape
+    spec_w = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    spec_v = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), spec_w, spec_v],
+        out_specs=spec_w,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), w2d.dtype),
+        interpret=interpret,
+    )(scalars, w2d, v2d)

@@ -1,0 +1,26 @@
+"""Public fused vote->update op."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.vote_update.kernel import vote_update_2d
+
+
+@functools.partial(jax.jit, static_argnames=("quorum", "interpret"))
+def vote_update_op(w: jnp.ndarray, votes: jnp.ndarray, eta, *, quorum: int = 1,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """w' = w - eta * sign(votes) with quorum deadband; any shape, w dtype preserved."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    w2, n = common.to_2d(w.reshape(-1))
+    v2, _ = common.to_2d(votes.reshape(-1))
+    br = common.block_rows_for(w2.shape[0])
+    eta_bits = jax.lax.bitcast_convert_type(jnp.asarray(eta, jnp.float32), jnp.uint32)
+    scalars = jnp.stack([eta_bits, jnp.asarray(quorum, jnp.uint32)]).reshape(1, 2)
+    out2 = vote_update_2d(w2, v2, scalars, block_rows=br, interpret=interpret)
+    return common.from_2d(out2, n, w.shape)

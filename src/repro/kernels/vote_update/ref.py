@@ -1,0 +1,16 @@
+"""Oracle for the fused vote->parameter-update: w' = w - eta * sign(votes).
+
+Optionally applies a quorum threshold (beyond-paper knob): coordinates with
+|votes| < quorum produce no update — a robustness/deadband filter on top of the
+majority vote (quorum=1 is the paper's rule: any nonzero sum moves).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def vote_update_ref(w: jnp.ndarray, votes: jnp.ndarray, eta, quorum: int = 1) -> jnp.ndarray:
+    v = votes.astype(jnp.int32)
+    step = jnp.where(jnp.abs(v) >= quorum, jnp.sign(v), 0).astype(jnp.float32)
+    return (w.astype(jnp.float32) - jnp.float32(eta) * step).astype(w.dtype)

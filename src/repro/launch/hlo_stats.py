@@ -1,0 +1,119 @@
+"""Post-SPMD HLO parsing: collective census + wire-byte estimates.
+
+Parses ``compiled.as_text()`` (per-device shapes after SPMD partitioning) and
+tallies every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute. Per-device wire bytes use ring-algorithm estimates:
+
+  all-reduce        2 * (n-1)/n * result_bytes
+  all-gather        (n-1)/n * result_bytes
+  reduce-scatter    (n-1) * result_bytes        (operand = n * result)
+  all-to-all        (n-1)/n * result_bytes
+  collective-permute  result_bytes
+
+IMPORTANT caveat (documented in EXPERIMENTS.md): ops inside while-loop bodies
+appear ONCE in the text; the dry-run handles this by compiling depth-1 and
+depth-2 variants of each model and extrapolating linearly in the repeat count
+(exact for scan-structured programs). The parser itself reports the static
+census — also exactly what the §Perf loop diffs between variants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(?:\{(?P<explicit>.*?)\}\}|\[(?P<iota>[0-9,]+)\]<=\[(?P<total>[0-9x,]+)\])")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    if m.group("iota"):
+        dims = [int(x) for x in m.group("iota").split(",")]
+        # [G, n] <= [N]: groups of size = product(dims)/G ... last dim(s) form group
+        # v2 iota format: first dim = num groups, rest = group size product
+        if len(dims) == 1:
+            return dims[0]
+        g = dims[0]
+        size = 1
+        for d in dims[1:]:
+            size *= d
+        return size
+    expl = m.group("explicit")
+    first = expl.split("}")[0].lstrip("{")
+    return max(1, len([x for x in first.split(",") if x.strip() != ""]))
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_op: dict
+    wire_bytes: float
+
+    def as_dict(self):
+        return {"counts": dict(self.counts), "bytes_by_op": dict(self.bytes_by_op),
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
+    counts = defaultdict(int)
+    bytes_by_op = defaultdict(float)
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        rb = _shape_bytes(m.group("shape"))
+        n = _group_size(line, default_group)
+        if op == "all-reduce":
+            w = 2.0 * (n - 1) / max(n, 1) * rb
+        elif op == "all-gather":
+            w = (n - 1) / max(n, 1) * rb
+        elif op == "reduce-scatter":
+            w = (n - 1) * rb
+        elif op == "all-to-all":
+            w = (n - 1) / max(n, 1) * rb
+        else:  # collective-permute
+            w = float(rb)
+        counts[op] += 1
+        bytes_by_op[op] += w
+        wire += w
+    return CollectiveStats(counts=counts, bytes_by_op=bytes_by_op, wire_bytes=wire)
+
+
+def op_census(hlo_text: str, ops=("fusion", "while", "dot", "convolution",
+                                  "custom-call", "dynamic-slice", "dynamic-update-slice")) -> dict:
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"= [a-z0-9\[\],()/{{}}]* ?{op}\(", hlo_text))
+    return out

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never touches
+jax device state. Single pod: (16, 16) = 256 chips ('data', 'model'); multi-pod
+adds the leading 'pod' axis: (2, 16, 16) = 512 chips. The ('pod', 'data') axes
+are the paper's workers; 'model' carries TP/EP/SP.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def worker_axes_of(mesh) -> tuple:
+    """The paper's 'worker' axes for a production mesh."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_host_mesh(data: int = 4, model: int = 2):
+    """Small mesh for host-device tests (8 forced CPU devices)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,87 @@
+"""Serving launcher: batched prefill + decode with the KV/SSM cache machinery.
+
+``python -m repro.launch.serve --arch mamba2-370m --tokens 32`` runs a greedy
+batched generation loop on the smoke config (CPU); with --full and a TPU mesh
+the same driver serves the production configs (decode cells of the dry-run
+prove they lower/compile at 32k/500k cache depths).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.serve.decode import build_decode_step, build_prefill
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=True)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
+    model = Model(cfg)
+    mesh = make_host_mesh(1, 1)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    rng = np.random.RandomState(args.seed)
+    b, s = args.batch, args.prompt_len
+    if cfg.input_kind == "tokens":
+        prompt = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32)
+    else:
+        prompt = jnp.asarray(rng.randn(b, s, cfg.d_model) * 0.3, cfg.activation_dtype)
+    batch = {"inputs": prompt,
+             "positions": jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32),
+             "labels": jnp.zeros((b, s), jnp.int32)}
+    if cfg.mrope:
+        batch["positions3"] = jnp.broadcast_to(batch["positions"][..., None], (b, s, 3))
+
+    prefill = build_prefill(model, mesh, worker_axes=("data",))
+    decode = build_decode_step(model, mesh, worker_axes=("data",))
+
+    # NOTE: prefill emits ring/SSD caches sized to the prompt; decode continues
+    # into a max_len cache. For the smoke loop we re-init a full-depth cache and
+    # replay the prompt through decode (exact, and exercises the decode path).
+    max_len = s + args.tokens
+    caches = model.init_cache(b, max_len)
+    t0 = time.time()
+    tok = None
+    for pos in range(s + args.tokens - 1):
+        if pos < s:
+            inp = prompt[:, pos:pos + 1]
+        else:
+            inp = tok
+        dec_batch = {"inputs": inp, "positions": jnp.full((b, 1), pos, jnp.int32)}
+        if cfg.mrope:
+            dec_batch["positions3"] = jnp.full((b, 1, 3), pos, jnp.int32)
+        logits, caches = decode(params, caches, dec_batch)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if cfg.input_kind == "tokens":
+            tok = nxt
+        else:  # embedding-input stubs: feed the argmax id through a fixed table
+            tok = jnp.take(params.get("embed", jnp.zeros((cfg.vocab_size, cfg.d_model),
+                           cfg.activation_dtype)), nxt[:, 0], axis=0)[:, None] \
+                  if "embed" in params else jnp.zeros((b, 1, cfg.d_model), cfg.activation_dtype)
+    dt = time.time() - t0
+    n_generated = args.tokens * b
+    print(f"generated {n_generated} tokens in {dt:.2f}s "
+          f"({n_generated / dt:.1f} tok/s on CPU smoke config)")
+    if cfg.input_kind == "tokens":
+        print("sample token ids:", np.asarray(nxt[:, 0])[:8].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it drives reduced (smoke) configs end-to-end — the same
+code path a TPU deployment uses with the full configs and the production mesh
+(the mesh geometry and trainer mode come from the registry; nothing else
+changes). Checkpoints/resume/failure-injection are live here.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, trainer_mode
+from repro.core.algorithm import CompressionConfig
+from repro.core.budgets import BudgetConfig
+from repro.data.synthetic import LMStreamConfig, lm_batch
+from repro.launch.mesh import make_host_mesh, make_production_mesh, worker_axes_of
+from repro.models.model import Model
+from repro.train import loop as loop_lib
+from repro.train.state import LrSchedule, init_state
+from repro.train.step_simple import TrainStepConfig, build_train_step
+from repro.train.step_streamed import (StreamedStepConfig, build_streamed_train_step,
+                                       fsdp_param_shardings)
+
+
+def build_everything(args):
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    if args.mesh == "host":
+        mesh = make_host_mesh(args.host_data, args.host_model)
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    wa = worker_axes_of(mesh)
+    comp = CompressionConfig(
+        compressor=args.compressor,
+        budget=BudgetConfig(kind="fixed", value=args.budget),
+        server=args.server,
+        local_steps=args.tau,
+        local_budget=args.local_budget,
+        worker_sample_fraction=args.participation,
+    )
+    lr = LrSchedule(base=args.lr, warmup=args.warmup)
+    mode = args.mode or trainer_mode(args.arch)
+    if mode == "simple":
+        step = build_train_step(model, TrainStepConfig(
+            compression=comp, lr=lr, local_lr=args.local_lr, worker_axes=wa), mesh)
+        params = model.init(jax.random.PRNGKey(args.seed))
+    else:
+        step = build_streamed_train_step(model, StreamedStepConfig(
+            compression=comp, lr=lr, worker_axes=wa), mesh)
+        params = model.init(jax.random.PRNGKey(args.seed))
+        params = jax.tree_util.tree_map(jax.device_put, params,
+                                        fsdp_param_shardings(model, mesh))
+    state = init_state(params, server=comp.server, seed=args.seed)
+    return cfg, model, mesh, step, state, comp
+
+
+def batch_fn_for(cfg, args):
+    stream = LMStreamConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                            global_batch=args.batch, seed=args.seed)
+
+    def fn(step_idx: int) -> dict:
+        b = lm_batch(stream, step_idx)
+        if cfg.input_kind != "tokens":
+            rng = np.random.RandomState(step_idx)
+            b["inputs"] = rng.randn(args.batch, args.seq_len, cfg.d_model).astype(np.float32) * 0.3
+        out = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.mrope:
+            out["positions3"] = jnp.broadcast_to(
+                out["positions"][..., None], out["positions"].shape + (3,))
+        if args.tau > 1:
+            out = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (args.tau,) + x.shape), out)
+        return out
+
+    return fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="full config (TPU deployment)")
+    ap.add_argument("--mesh", default="host", choices=["host", "pod", "multipod"])
+    ap.add_argument("--host-data", type=int, default=1)
+    ap.add_argument("--host-model", type=int, default=1)
+    ap.add_argument("--mode", default=None, choices=[None, "simple", "streamed"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--local-lr", type=float, default=1e-2)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--compressor", default="sparsign")
+    ap.add_argument("--server", default="scaled_sign_ef")
+    ap.add_argument("--budget", type=float, default=1.0)
+    ap.add_argument("--local-budget", type=float, default=10.0)
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--history-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg, model, mesh, step, state, comp = build_everything(args)
+    lcfg = loop_lib.LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                               ckpt_every=args.ckpt_every, fail_at_step=args.fail_at)
+    with jax.sharding.set_mesh(mesh):
+        state, history = loop_lib.run(step, state, batch_fn_for(cfg, args), lcfg)
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump(history, f, indent=1)
+    print(f"done: {len(history)} log points, final loss "
+          f"{history[-1]['loss'] if history else float('nan'):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Attention: GQA with RoPE/M-RoPE, blockwise (flash-style) softmax, sliding
+windows, and decode against (ring-buffered) KV caches.
+
+Layout: all score/accumulator tensors use the FUSED head axis [B, H, ...] with
+an explicit sharding hint on H ('heads' -> TP axis) inside every scan body —
+GSPMD does not reliably propagate head sharding through the online-softmax
+scan in the GQA-split [B, KV, G, ...] layout (measured: 16 GiB/device
+unsharded score buffers on the 72B configs), so we pin it. KV heads are
+repeated to H per chunk (transient, head-sharded, ~MBs) — the classic
+GQA-bandwidth saving still holds where it matters (the KV *cache* and K/V
+projections stay at KV width).
+
+Three structured paths, all pure jnp:
+  chunked_attention   — online-softmax scan over KV chunks; chunk bodies are
+                        jax.checkpoint'ed (flash semantics under AD: per-chunk
+                        probabilities are recomputed, not saved).
+  windowed_attention  — scan over query chunks, each attending to a
+                        structurally-sliced KV span: O(S*window) compiled FLOPs.
+  decode_attention    — single-token query vs cache (linear in cache length).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import hint
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B,C,KV,D] -> [B,C,H,D] (head-sharded via hint; transient per chunk)."""
+    b, c, n_kv, d = k.shape
+    g = n_heads // n_kv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, c, n_kv, g, d)).reshape(b, c, n_heads, d)
+    return hint(k, "batch", None, "heads", None)
+
+
+def chunked_attention(
+    q: jnp.ndarray,               # [B,Sq,H,D]
+    k: jnp.ndarray,               # [B,Skv,KV,D]
+    v: jnp.ndarray,               # [B,Skv,KV,D]
+    *,
+    positions_q: jnp.ndarray,     # [B,Sq] int32
+    positions_kv: jnp.ndarray,    # [B,Skv] int32
+    kv_valid: Optional[jnp.ndarray] = None,  # [B,Skv] bool
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions_kv = jnp.pad(positions_kv, ((0, 0), (0, pad)), constant_values=-1)
+    valid = kv_valid if kv_valid is not None else jnp.ones((b, skv), bool)
+    if pad:
+        valid = jnp.pad(valid, ((0, 0), (0, pad)), constant_values=False)
+
+    qh = hint(q.astype(jnp.float32) * (d ** -0.5), "batch", None, "heads", None)
+    qh = qh.transpose(0, 2, 1, 3)                      # [B,H,Sq,D]
+    kc = k.reshape(b, n_chunks, chunk, n_kv, d)
+    vc = v.reshape(b, n_chunks, chunk, n_kv, d)
+    pc = positions_kv.reshape(b, n_chunks, chunk)
+    mc = valid.reshape(b, n_chunks, chunk)
+
+    def body(carry, xs):
+        acc, m, l = carry                               # [B,H,Sq,D], [B,H,Sq], [B,H,Sq]
+        k_i, v_i, p_i, ok_i = xs                        # [B,C,KV,D], ..., [B,C], [B,C]
+        k_r = _repeat_kv(k_i, h).astype(jnp.float32)    # [B,C,H,D]
+        v_r = _repeat_kv(v_i, h).astype(jnp.float32)
+        scores = jnp.einsum("bhqd,bchd->bhqc", qh, k_r)
+        scores = hint(scores, "batch", "heads", None, None)
+        ok = ok_i[:, None, :]
+        if causal:
+            ok = ok & (p_i[:, None, :] <= positions_q[:, :, None])
+        if window is not None:
+            ok = ok & (positions_q[:, :, None] - p_i[:, None, :] < window)
+        scores = jnp.where(ok[:, None, :, :], scores, NEG_INF)  # [B,1,Sq,C] bcast on H
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhqc,bchd->bhqd", p, v_r)
+        acc = hint(acc * alpha[..., None] + pv, "batch", "heads", None, None)
+        return (acc, m_new, l_new), None
+
+    body = jax.checkpoint(body)  # flash semantics: recompute p in backward
+    init = (
+        hint(jnp.zeros((b, h, sq, d), jnp.float32), "batch", "heads", None, None),
+        jnp.full((b, h, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, h, sq), jnp.float32),
+    )
+    (acc, _, l), _ = jax.lax.scan(
+        body, init,
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         pc.transpose(1, 0, 2), mc.transpose(1, 0, 2)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.where(l[..., None] > 0, out, 0.0)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)    # [B,Sq,H,D]
+
+
+def windowed_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+    positions: jnp.ndarray,       # [B,S] shared q/kv positions (self-attention)
+    window: int,
+    q_chunk: int = 512,
+) -> jnp.ndarray:
+    """Causal sliding-window self-attention with structural O(S*window) cost."""
+    b, s_orig, h, d = q.shape
+    n_kv = k.shape[2]
+    q_chunk = min(q_chunk, s_orig)
+    pad_s = (-s_orig) % q_chunk
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad_s)), constant_values=-1)
+    s = s_orig + pad_s
+    span = (-(-window // q_chunk)) * q_chunk + q_chunk  # kv span per q chunk
+
+    front = span - q_chunk
+    kp = jnp.pad(k, ((0, 0), (front, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (front, 0), (0, 0), (0, 0)))
+    pos_p = jnp.pad(positions, ((0, 0), (front, 0)), constant_values=-1)
+
+    qh = hint(q.astype(jnp.float32) * (d ** -0.5), "batch", None, "heads", None)
+    qh = qh.transpose(0, 2, 1, 3)                       # [B,H,S,D]
+
+    def body(_, i):
+        q_i = jax.lax.dynamic_slice_in_dim(qh, i * q_chunk, q_chunk, axis=2)   # [B,H,cq,D]
+        pq_i = jax.lax.dynamic_slice_in_dim(positions, i * q_chunk, q_chunk, axis=1)
+        k_i = jax.lax.dynamic_slice_in_dim(kp, i * q_chunk, span, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(vp, i * q_chunk, span, axis=1)
+        pk_i = jax.lax.dynamic_slice_in_dim(pos_p, i * q_chunk, span, axis=1)
+        k_r = _repeat_kv(k_i, h).astype(jnp.float32)
+        v_r = _repeat_kv(v_i, h).astype(jnp.float32)
+        scores = jnp.einsum("bhqd,bchd->bhqc", q_i, k_r)
+        scores = hint(scores, "batch", "heads", None, None)
+        ok = ((pk_i[:, None, :] <= pq_i[:, :, None])
+              & (pq_i[:, :, None] - pk_i[:, None, :] < window)
+              & (pk_i[:, None, :] >= 0))
+        scores = jnp.where(ok[:, None, :, :], scores, NEG_INF)
+        p_max = scores.max(axis=-1, keepdims=True)
+        p = jnp.exp(scores - p_max)
+        l = p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bhqc,bchd->bhqd", p / jnp.maximum(l, 1e-30), v_r)
+        return None, hint(o, "batch", "heads", None, None)
+
+    body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, None, jnp.arange(s // q_chunk))
+    # outs: [n, B, H, cq, D] -> [B, n*cq = S, H, D]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+    if pad_s:
+        out = out[:, :s_orig]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,               # [B,1,H,D]
+    k_cache: jnp.ndarray,         # [B,W,KV,D]
+    v_cache: jnp.ndarray,         # [B,W,KV,D]
+    cache_pos: jnp.ndarray,       # [B,W] int32, -1 = empty slot
+    positions_q: jnp.ndarray,     # [B,1]
+    *,
+    window: Optional[int] = None,
+    chunk: int = 8192,
+) -> jnp.ndarray:
+    """One-token attention over a (possibly ring-buffered) cache.
+
+    Chunked over the cache so 500k-long caches only materialize [B,H,chunk]
+    score tiles per step.
+    """
+    valid = cache_pos >= 0
+    return chunked_attention(
+        q, k_cache, v_cache,
+        positions_q=positions_q, positions_kv=cache_pos, kv_valid=valid,
+        causal=True, window=window, chunk=chunk,
+    )

@@ -1,0 +1,264 @@
+"""Block assembly: (mixer -> residual) + (FFN -> residual), both pre-normed.
+
+``block_param_defs`` is the single source of truth for parameter shapes, dtypes
+and logical sharding axes; init, eval_shape, and the dist layer all derive from
+it. Stacked leading axis R (pattern repeats) is added by the model.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba2, moe as moe_lib
+from repro.models.common import hint, rms_norm, swiglu
+from repro.models.rope import apply_mrope, apply_rope
+
+
+def moe_dims(cfg: ModelConfig) -> moe_lib.MoEDims:
+    return moe_lib.MoEDims(
+        n_experts=cfg.n_experts,
+        n_experts_padded=cfg.n_experts_padded or cfg.n_experts,
+        top_k=cfg.top_k,
+        d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff,
+        capacity_factor=cfg.capacity_factor,
+        router_act=cfg.router_act,
+        renorm_topk=cfg.renorm_topk,
+    )
+
+
+def mamba_dims(cfg: ModelConfig) -> mamba2.MambaDims:
+    return mamba2.MambaDims(
+        d_model=cfg.d_model,
+        d_inner=cfg.d_inner,
+        n_heads=cfg.ssm_heads,
+        head_dim=cfg.ssm_head_dim,
+        d_state=cfg.ssm_state,
+        d_conv=cfg.ssm_conv,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions: name -> (shape, dtype, logical_axes)
+# ---------------------------------------------------------------------------
+
+def block_param_defs(cfg: ModelConfig, spec: LayerSpec) -> dict:
+    dt = cfg.activation_dtype
+    d, hd = cfg.d_model, cfg.head_dim
+    defs: dict = {"ln1": ((d,), dt, (None,))}
+    if spec.ffn:
+        defs["ln2"] = ((d,), dt, (None,))
+
+    if spec.mixer == "attn":
+        defs.update({
+            "wq": ((d, cfg.n_heads * hd), dt, (None, "heads")),
+            "wk": ((d, cfg.n_kv_heads * hd), dt, (None, "heads")),
+            "wv": ((d, cfg.n_kv_heads * hd), dt, (None, "heads")),
+            "wo": ((cfg.n_heads * hd, d), dt, ("heads", None)),
+        })
+        if cfg.qkv_bias:
+            defs.update({
+                "bq": ((cfg.n_heads * hd,), dt, ("heads",)),
+                "bk": ((cfg.n_kv_heads * hd,), dt, ("heads",)),
+                "bv": ((cfg.n_kv_heads * hd,), dt, ("heads",)),
+            })
+    elif spec.mixer == "mamba":
+        defs.update({f"ssm_{k}": v for k, v in mamba2.mamba_param_defs(mamba_dims(cfg), dt).items()})
+    else:
+        raise ValueError(spec.mixer)
+
+    if not spec.ffn:
+        return defs
+    if spec.moe:
+        md = moe_dims(cfg)
+        shapes = moe_lib.moe_param_shapes(md, cfg.n_shared_experts, dt)
+        logical = {
+            "router": (None, None),
+            "w_gate": ("expert", None, None),
+            "w_up": ("expert", None, None),
+            "w_down": ("expert", None, None),
+            "shared_w_gate": (None, "ff"),
+            "shared_w_up": (None, "ff"),
+            "shared_w_down": ("ff", None),
+        }
+        defs.update({f"moe_{k}": (shp, dt_, logical[k]) for k, (shp, dt_) in shapes.items()})
+    else:
+        if cfg.mlp_variant == "swiglu":
+            defs.update({
+                "w_gate": ((d, cfg.d_ff), dt, (None, "ff")),
+                "w_up": ((d, cfg.d_ff), dt, (None, "ff")),
+                "w_down": ((cfg.d_ff, d), dt, ("ff", None)),
+            })
+        else:  # gelu MLP (hubert)
+            defs.update({
+                "w1": ((d, cfg.d_ff), dt, (None, "ff")),
+                "b1": ((cfg.d_ff,), dt, ("ff",)),
+                "w2": ((cfg.d_ff, d), dt, ("ff", None)),
+                "b2": ((d,), dt, (None,)),
+            })
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _rope_qk(cfg: ModelConfig, spec: LayerSpec, q, k, positions, positions3):
+    if not spec.use_rope:
+        return q, k
+    if cfg.mrope:
+        assert positions3 is not None
+        return (apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections),
+                apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections))
+    return (apply_rope(q, positions, cfg.rope_theta),
+            apply_rope(k, positions, cfg.rope_theta))
+
+
+def _ffn(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, d = x.shape
+    if spec.moe:
+        moe_params = {k[len("moe_"):]: v for k, v in p.items() if k.startswith("moe_")}
+        y = moe_lib.moe_ffn(moe_params, x.reshape(b * s, d), moe_dims(cfg), cfg.moe_impl)
+        return y.reshape(b, s, d)
+    if cfg.mlp_variant == "swiglu":
+        h = swiglu(hint(x @ p["w_gate"], "batch", "seq", "ff"),
+                   hint(x @ p["w_up"], "batch", "seq", "ff"))
+        return h @ p["w_down"]
+    h = jax.nn.gelu((x @ p["w1"]) + p["b1"])
+    return (h @ p["w2"]) + p["b2"]
+
+
+def block_forward(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: dict,
+    h: jnp.ndarray,                  # [B,S,D]
+    positions: jnp.ndarray,          # [B,S]
+    positions3: Optional[jnp.ndarray] = None,
+    return_cache: bool = False,
+):
+    """Training/prefill forward for one block. Optionally returns the decode cache."""
+    cache = None
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        q, k, v = _project_qkv(cfg, p, x)
+        q, k = _rope_qk(cfg, spec, q, k, positions, positions3)
+        # hint q on the fused head axis only; k/v keep the propagated kv-head
+        # sharding (kv_heads may not divide the TP width — forcing it causes
+        # involuntary reshards)
+        q = hint(q, "batch", None, "heads", None)
+        if spec.window is not None and cfg.causal:
+            out = attn_lib.windowed_attention(q, k, v, positions=positions,
+                                              window=spec.window, q_chunk=min(cfg.q_chunk, q.shape[1]))
+        else:
+            out = attn_lib.chunked_attention(q, k, v, positions_q=positions,
+                                             positions_kv=positions, causal=cfg.causal,
+                                             window=spec.window, chunk=cfg.attn_chunk)
+        b, s, _, _ = out.shape
+        mixer_out = out.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]
+        if return_cache:
+            w = spec.window if spec.window is not None else None
+            if w is not None and w < k.shape[1]:
+                # ring state: scatter all positions into the ring; later writes win
+                slots = positions % w
+                kk = jnp.zeros((b, w) + k.shape[2:], k.dtype).at[jnp.arange(b)[:, None], slots].set(k)
+                vv = jnp.zeros((b, w) + v.shape[2:], v.dtype).at[jnp.arange(b)[:, None], slots].set(v)
+                pp = jnp.full((b, w), -1, jnp.int32).at[jnp.arange(b)[:, None], slots].set(positions)
+                cache = {"k": kk, "v": vv, "pos": pp}
+            else:
+                cache = {"k": k, "v": v, "pos": positions}
+    elif spec.mixer == "mamba":
+        ssm_params = {k[len("ssm_"):]: v for k, v in p.items() if k.startswith("ssm_")}
+        if return_cache:
+            mixer_out, (conv_tail, state) = mamba2.mamba_forward(
+                ssm_params, x, mamba_dims(cfg), return_cache=True)
+            cache = {"conv": conv_tail, "state": state}
+        else:
+            mixer_out = mamba2.mamba_forward(ssm_params, x, mamba_dims(cfg))
+    else:
+        raise ValueError(spec.mixer)
+
+    h = h + mixer_out
+    if spec.ffn:
+        x = rms_norm(h, p["ln2"], cfg.norm_eps)
+        h = h + _ffn(cfg, spec, p, x)
+    h = hint(h, "batch", "seq", None)
+    return (h, cache) if return_cache else h
+
+
+def block_decode(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: dict,
+    h: jnp.ndarray,                  # [B,1,D]
+    cache: dict,
+    positions: jnp.ndarray,          # [B,1]
+    positions3: Optional[jnp.ndarray] = None,
+):
+    """One-token decode for one block; returns (h', cache')."""
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        q, k, v = _project_qkv(cfg, p, x)
+        q, k = _rope_qk(cfg, spec, q, k, positions, positions3)
+        w = cache["k"].shape[1]
+        b = h.shape[0]
+        slot = (positions[:, 0] % w).astype(jnp.int32)
+        bidx = jnp.arange(b)
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+        pos_cache = cache["pos"].at[bidx, slot].set(positions[:, 0])
+        out = attn_lib.decode_attention(
+            q, k_cache, v_cache, pos_cache, positions,
+            window=spec.window, chunk=cfg.decode_chunk)
+        mixer_out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache}
+    elif spec.mixer == "mamba":
+        ssm_params = {k[len("ssm_"):]: v for k, v in p.items() if k.startswith("ssm_")}
+        mixer_out, (ring, state) = mamba2.mamba_decode_step(
+            ssm_params, x, (cache["conv"], cache["state"]), mamba_dims(cfg))
+        new_cache = {"conv": ring, "state": state}
+    else:
+        raise ValueError(spec.mixer)
+
+    h = h + mixer_out
+    if spec.ffn:
+        x = rms_norm(h, p["ln2"], cfg.norm_eps)
+        h = h + _ffn(cfg, spec, p, x)
+    return h, new_cache
+
+
+def block_cache_defs(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int) -> dict:
+    """name -> (shape, dtype) for one block's decode cache."""
+    dt = cfg.activation_dtype
+    if spec.mixer == "attn":
+        w = min(spec.window, max_len) if spec.window is not None else max_len
+        return {
+            "k": ((batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": ((batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+            "pos": ((batch, w), jnp.int32),
+        }
+    md = mamba_dims(cfg)
+    return {
+        "conv": ((batch, md.d_conv - 1, md.d_inner + 2 * md.d_state), dt),
+        "state": ((batch, md.n_heads, md.head_dim, md.d_state), jnp.float32),
+    }

@@ -1,0 +1,222 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer block.
+
+Implements the minimal SSD algorithm: chunked scan with intra-chunk einsums
+(MXU-friendly matmuls) and an inter-chunk state recurrence carried by
+``lax.scan`` — the TPU-native adaptation of the paper's GPU kernel: instead of
+a fused triton scan, chunk-local work becomes batched matmuls the MXU executes
+at full tilt and the only sequential piece is the O(S/Q) chunk recurrence.
+
+TPU adaptation notes (see DESIGN.md):
+  * The reference packs [z, x, B, C, dt] into one in_proj; we split it into
+    separate projections (w_z, w_x, w_bc, w_dt) so the head-structured pieces
+    shard over the tensor-parallel axis while B/C stay replicated — the packed
+    layout cannot shard without resharding collectives on every slice.
+  * single B/C group (ngroups=1; the assigned mamba2-370m uses 1)
+  * gated RMSNorm simplified to RMSNorm of the gated output; D-term per head.
+
+Decode is the exact O(1) recurrence; equivalence with the chunked path is a
+unit test (tests/test_mamba.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import hint, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_inner: int        # expand * d_model
+    n_heads: int        # d_inner // head_dim
+    head_dim: int
+    d_state: int        # N
+    d_conv: int = 4
+    chunk: int = 128
+
+
+def mamba_param_defs(dims: MambaDims, dtype) -> dict:
+    """name -> (shape, dtype, logical_axes)."""
+    di, n, h = dims.d_inner, dims.d_state, dims.n_heads
+    return {
+        "w_z": ((dims.d_model, di), dtype, (None, "ff")),
+        "w_x": ((dims.d_model, di), dtype, (None, "ff")),
+        "w_bc": ((dims.d_model, 2 * n), dtype, (None, None)),
+        "w_dt": ((dims.d_model, h), dtype, (None, None)),
+        "conv_x": ((dims.d_conv, di), dtype, (None, "ff")),
+        "conv_bc": ((dims.d_conv, 2 * n), dtype, (None, None)),
+        "conv_b_x": ((di,), dtype, ("ff",)),
+        "conv_b_bc": ((2 * n,), dtype, (None,)),
+        "A_log": ((h,), jnp.float32, (None,)),
+        "dt_bias": ((h,), jnp.float32, (None,)),
+        "D": ((h,), jnp.float32, (None,)),
+        "norm": ((di,), dtype, ("ff",)),
+        "w_out": ((di, dims.d_model), dtype, ("ff", None)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, conv_w: jnp.ndarray, conv_b: jnp.ndarray,
+                 init: jnp.ndarray | None = None):
+    """Depthwise causal conv along seq. x: [B,S,C]; conv_w: [K,C].
+
+    Returns (out [B,S,C], tail [B,K-1,C]) — the tail primes the decode ring.
+    """
+    k = conv_w.shape[0]
+    b, s, c = x.shape
+    front = init if init is not None else jnp.zeros((b, k - 1, c), x.dtype)
+    xp = jnp.concatenate([front, x], axis=1)
+    out = jnp.zeros((b, s, c), jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + s].astype(jnp.float32) * conv_w[i].astype(jnp.float32)
+    out = jax.nn.silu(out + conv_b.astype(jnp.float32))
+    return out.astype(x.dtype), xp[:, s:]
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Causal segment sums: out[..., i, j] = sum_{j < k <= i} x[..., k] (=-inf j>i)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, dims: MambaDims,
+                init_state=None):
+    """SSD over a full sequence.
+
+    x:     [B,S,H,P]   (values)
+    dt:    [B,S,H]     (pre-softplus)
+    b_mat: [B,S,N], c_mat: [B,S,N]  (single group)
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    bsz, s_orig, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(dims.chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:
+        # dt -> -inf makes softplus(dt)=0: padded steps leave the state untouched
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))            # [B,S,H]
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # [H]
+    da = hint(dt * a[None, None, :], "batch", None, "heads")  # [B,S,H] log decay
+    xdt = hint(x.astype(jnp.float32) * dt[..., None], "batch", None, "heads", None)
+
+    # chunk views
+    da_c = da.reshape(bsz, nc, q, h)
+    x_c = xdt.reshape(bsz, nc, q, h, p)
+    b_c = b_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+    c_c = c_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    # intra-chunk (diagonal blocks): y[i] = sum_j (C_i.B_j) L[h,i,j] x[j]
+    l_mat = jnp.exp(_segsum(da_c.transpose(0, 1, 3, 2)))     # [B,nc,H,q,q]
+    cb = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)             # [B,nc,q,q]
+    y_intra = jnp.einsum("bcij,bchij,bcjhp->bcihp", cb, l_mat, x_c)
+
+    # chunk-final states: sum_j exp(sum_{k>j} da) B_j x_j
+    da_cum = jnp.cumsum(da_c, axis=2)                        # [B,nc,q,H]
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)    # [B,nc,q,H]
+    chunk_state = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", b_c, decay_to_end, x_c)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])               # [B,nc,H]
+
+    def scan_body(state, inp):
+        cs_, cd = inp                                        # [B,H,P,N], [B,H]
+        out_state = state                                    # state entering this chunk
+        state = state * cd[..., None, None] + cs_
+        return state, out_state
+
+    init = init_state if init_state is not None else jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, states_in = jax.lax.scan(
+        scan_body, init,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    states_in = states_in.transpose(1, 0, 2, 3, 4)           # [B,nc,H,P,N]
+
+    # off-diagonal contribution: y_off = C_i . (decay_in * state_in)
+    decay_in = jnp.exp(da_cum)                               # [B,nc,q,H]
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", c_c, decay_in, states_in)
+
+    y = (y_intra + y_off).reshape(bsz, s, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    if pad:
+        y = y[:, :s_orig]
+    return y, final_state
+
+
+def mamba_forward(params: dict, hidden: jnp.ndarray, dims: MambaDims,
+                  conv_init=None, ssd_init=None, return_cache: bool = False):
+    """Full mixer: projections -> conv -> SSD -> gated norm -> out_proj.
+
+    hidden: [B,S,Dm]. conv_init: [B,K-1,di+2n]. Returns out [B,S,Dm]
+    (+ (conv_tail, final_state) if return_cache).
+    """
+    bsz, s, _ = hidden.shape
+    di, n = dims.d_inner, dims.d_state
+    z = hidden @ params["w_z"]                               # [B,S,di]
+    x_raw = hint(hidden @ params["w_x"], "batch", "seq", "ff")
+    bc_raw = hidden @ params["w_bc"]
+    dt = (hidden @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"]
+
+    conv_in_x = conv_init[..., :di] if conv_init is not None else None
+    conv_in_bc = conv_init[..., di:] if conv_init is not None else None
+    x_conv, tail_x = _causal_conv(x_raw, params["conv_x"], params["conv_b_x"], conv_in_x)
+    bc_conv, tail_bc = _causal_conv(bc_raw, params["conv_bc"], params["conv_b_bc"], conv_in_bc)
+
+    x = x_conv.reshape(bsz, s, dims.n_heads, dims.head_dim)
+    b_mat, c_mat = bc_conv[..., :n], bc_conv[..., n:]
+    y, final_state = ssd_chunked(x, dt, params["A_log"], b_mat, c_mat, params["D"], dims, ssd_init)
+    y = y.reshape(bsz, s, di).astype(hidden.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])
+    out = y @ params["w_out"]
+    if return_cache:
+        return out, (jnp.concatenate([tail_x, tail_bc], axis=-1), final_state)
+    return out
+
+
+def mamba_decode_step(params: dict, hidden: jnp.ndarray, cache, dims: MambaDims):
+    """One-token recurrence. hidden: [B,1,Dm]; cache = (conv_ring [B,K-1,di+2n],
+    state [B,H,P,N])."""
+    conv_ring, state = cache
+    bsz = hidden.shape[0]
+    di, n = dims.d_inner, dims.d_state
+    h0 = hidden[:, 0]
+    z = h0 @ params["w_z"]
+    x_raw = h0 @ params["w_x"]
+    bc_raw = h0 @ params["w_bc"]
+    dt = (h0 @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"]
+
+    window = jnp.concatenate([conv_ring, jnp.concatenate([x_raw, bc_raw], -1)[:, None, :]], axis=1)
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_bc"]], axis=-1)
+    conv_b = jnp.concatenate([params["conv_b_x"], params["conv_b_bc"]], axis=-1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), conv_w.astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + conv_b.astype(jnp.float32)).astype(hidden.dtype)
+    new_ring = window[:, 1:]
+
+    x = conv_out[..., :di].reshape(bsz, dims.n_heads, dims.head_dim)
+    b_vec = conv_out[..., di:di + n].astype(jnp.float32)
+    c_vec = conv_out[..., di + n:].astype(jnp.float32)
+
+    dtf = jax.nn.softplus(dt)                                # [B,H]
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dtf * a[None, :])                        # [B,H]
+    upd = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32) * dtf[..., None], b_vec)
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_vec)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, di).astype(hidden.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])
+    out = (y @ params["w_out"])[:, None, :]
+    return out, (new_ring, state)

@@ -1,0 +1,253 @@
+"""Model assembly: embedding -> scan(pattern superblocks) -> norm -> LM head.
+
+Exposes the three stages separately (embed_stage / superblock_apply /
+head_loss) so the streamed trainer can run its manual per-superblock backward;
+``loss`` composes them with lax.scan (+remat) for the simple path, and
+``prefill`` / ``decode_step`` provide serving.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as blocks_lib
+from repro.models.common import dense_init, hint, rms_norm
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+
+    def param_defs(self):
+        """pytree of (shape, dtype, logical_axes) matching the params pytree."""
+        cfg = self.cfg
+        dt = cfg.activation_dtype
+        r = cfg.n_repeats
+        defs = {}
+        if cfg.input_kind == "tokens":
+            defs["embed"] = ((cfg.vocab_size, cfg.d_model), dt, ("vocab", None))
+        block_defs = []
+        for spec in cfg.pattern:
+            bd = blocks_lib.block_param_defs(cfg, spec)
+            block_defs.append({
+                k: ((r,) + shape, dtype, (None,) + tuple(logical))
+                for k, (shape, dtype, logical) in bd.items()
+            })
+        defs["blocks"] = tuple(block_defs)
+        if cfg.tail_pattern:
+            defs["tail"] = tuple(blocks_lib.block_param_defs(cfg, spec) for spec in cfg.tail_pattern)
+        defs["final_norm"] = ((cfg.d_model,), dt, (None,))
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = ((cfg.d_model, cfg.vocab_size), dt, (None, "vocab"))
+        return defs
+
+    def param_shapes(self):
+        return jax.tree_util.tree_map(
+            lambda d: jax.ShapeDtypeStruct(d[0], d[1]),
+            self.param_defs(),
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple),
+        )
+
+    def param_logical_axes(self):
+        return jax.tree_util.tree_map(
+            lambda d: d[2],
+            self.param_defs(),
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple),
+        )
+
+    def init(self, key) -> dict:
+        flat_defs, treedef = jax.tree_util.tree_flatten(
+            self.param_defs(),
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple),
+        )
+        keys = jax.random.split(key, len(flat_defs))
+        leaves = []
+        for (shape, dtype, _), k in zip(flat_defs, keys):
+            if len(shape) == 1 or shape[-1] == 1:
+                leaves.append(jnp.zeros(shape, dtype))  # norms / biases
+            else:
+                leaves.append(dense_init(k, shape, dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def head_weight(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    # ------------------------------------------------------------------
+    # Stages
+    # ------------------------------------------------------------------
+
+    def embed_stage(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        x = batch["inputs"]
+        if cfg.input_kind == "tokens":
+            h = jnp.take(params["embed"], x, axis=0)
+        else:
+            h = x.astype(cfg.activation_dtype)
+        return hint(h, "batch", "seq", None)
+
+    def _remat_policy(self):
+        """§Perf H4: 'dots' saves matmul outputs (recompute elementwise only),
+        cutting the training matmul factor from ~4 passes to ~3.2."""
+        if self.cfg.remat_policy == "dots":
+            return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return None  # 'full': save nothing
+
+    def _superblock(self, h, block_slices, positions, positions3):
+        for spec, p in zip(self.cfg.pattern, block_slices):
+            fwd = functools.partial(blocks_lib.block_forward, self.cfg, spec)
+            if self.cfg.remat and len(self.cfg.pattern) > 1:
+                # nested remat: peak memory = ONE block's internals, not the
+                # whole superblock's (critical for jamba/hybrid superblocks)
+                fwd = jax.checkpoint(fwd, policy=self._remat_policy())
+            h = fwd(p, h, positions, positions3)
+        return h
+
+    def superblock_apply(self, block_slices, h, positions, positions3=None):
+        """Public single-superblock forward (streamed trainer entry point)."""
+        return self._superblock(h, block_slices, positions, positions3)
+
+    def forward_hidden(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        h = self.embed_stage(params, batch)
+        positions = batch["positions"]
+        positions3 = batch.get("positions3")
+
+        def body(carry, xs):
+            return self._superblock(carry, xs, positions, positions3), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, policy=self._remat_policy())
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+        for spec, p in zip(cfg.tail_pattern, params.get("tail", ())):
+            h = blocks_lib.block_forward(cfg, spec, p, h, positions, positions3)
+        return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+    def head_loss(self, params, h, labels):
+        """Chunked softmax-xent: never materializes [B,S,V] logits."""
+        cfg = self.cfg
+        w = self.head_weight(params)
+        b, s, d = h.shape
+        c = min(cfg.loss_chunk, s)
+        pad = (-s) % c
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+            s += pad
+        hc = h.reshape(b, s // c, c, d).transpose(1, 0, 2, 3)
+        yc = labels.reshape(b, s // c, c).transpose(1, 0, 2)
+
+        def chunk(carry, xs):
+            h_i, y_i = xs
+            logits = (h_i @ w).astype(jnp.float32)
+            logits = hint(logits, "batch", None, "vocab")
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(logits, jnp.maximum(y_i, 0)[..., None], axis=-1)[..., 0]
+            mask = (y_i >= 0).astype(jnp.float32)
+            nll, cnt = carry
+            return (nll + jnp.sum((logz - tgt) * mask), cnt + jnp.sum(mask)), None
+
+        body = jax.checkpoint(chunk) if cfg.remat else chunk
+        (nll, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hc, yc))
+        return nll / jnp.maximum(cnt, 1.0)
+
+    def loss(self, params, batch):
+        h = self.forward_hidden(params, batch)
+        loss = self.head_loss(params, h, batch["labels"])
+        return loss, {"loss": loss}
+
+    # ------------------------------------------------------------------
+    # Serving
+    # ------------------------------------------------------------------
+
+    def cache_shapes(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        r = cfg.n_repeats
+        body = []
+        for spec in cfg.pattern:
+            defs = blocks_lib.block_cache_defs(cfg, spec, batch_size, max_len)
+            body.append({k: jax.ShapeDtypeStruct((r,) + shape, dtype) for k, (shape, dtype) in defs.items()})
+        out = {"body": tuple(body)}
+        if cfg.tail_pattern:
+            out["tail"] = tuple(
+                {k: jax.ShapeDtypeStruct(shape, dtype)
+                 for k, (shape, dtype) in blocks_lib.block_cache_defs(cfg, spec, batch_size, max_len).items()}
+                for spec in cfg.tail_pattern)
+        return out
+
+    def init_cache(self, batch_size: int, max_len: int):
+        def mk(sds):
+            if sds.dtype == jnp.int32:  # position slots start empty
+                return jnp.full(sds.shape, -1, sds.dtype)
+            return jnp.zeros(sds.shape, sds.dtype)
+        return jax.tree_util.tree_map(mk, self.cache_shapes(batch_size, max_len))
+
+    def prefill(self, params, batch):
+        """Forward that also emits decode caches; returns (hidden_last, caches)."""
+        cfg = self.cfg
+        h = self.embed_stage(params, batch)
+        positions = batch["positions"]
+        positions3 = batch.get("positions3")
+
+        def body(carry, xs):
+            hh = carry
+            caches = []
+            for spec, p in zip(cfg.pattern, xs):
+                hh, cache = blocks_lib.block_forward(cfg, spec, p, hh, positions, positions3,
+                                                     return_cache=True)
+                caches.append(cache)
+            return hh, tuple(caches)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, body_caches = jax.lax.scan(body, h, params["blocks"])
+        caches = {"body": body_caches}
+        if cfg.tail_pattern:
+            tail_caches = []
+            for spec, p in zip(cfg.tail_pattern, params["tail"]):
+                h, cache = blocks_lib.block_forward(cfg, spec, p, h, positions, positions3,
+                                                    return_cache=True)
+                tail_caches.append(cache)
+            caches["tail"] = tuple(tail_caches)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return h, caches
+
+    def decode_step(self, params, caches, batch):
+        """One token for every sequence. batch: {"inputs": [B,1] (or [B,1,D]),
+        "positions": [B,1], optional "positions3": [B,1,3]}.
+        Returns (logits [B,V], new_caches)."""
+        cfg = self.cfg
+        h = self.embed_stage(params, batch)
+        positions = batch["positions"]
+        positions3 = batch.get("positions3")
+
+        def body(carry, xs):
+            hh = carry
+            block_slices, cache_slices = xs
+            new_caches = []
+            for spec, p, c in zip(cfg.pattern, block_slices, cache_slices):
+                hh, nc = blocks_lib.block_decode(cfg, spec, p, hh, c, positions, positions3)
+                new_caches.append(nc)
+            return hh, tuple(new_caches)
+
+        h, new_body = jax.lax.scan(body, h, (params["blocks"], caches["body"]))
+        new_caches = {"body": new_body}
+        if cfg.tail_pattern:
+            new_tail = []
+            for spec, p, c in zip(cfg.tail_pattern, params["tail"], caches["tail"]):
+                h, nc = blocks_lib.block_decode(cfg, spec, p, h, c, positions, positions3)
+                new_tail.append(nc)
+            new_caches["tail"] = tuple(new_tail)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = (h[:, 0] @ self.head_weight(params)).astype(jnp.float32)
+        return hint(logits, "batch", "vocab"), new_caches

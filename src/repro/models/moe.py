@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN: top-k routing with shared experts.
+
+Two implementations with identical semantics (tested equal when capacity drops
+nothing):
+
+  dense  — every expert runs on every token, gated combine. O(T*E*F) compute;
+           only for smoke-scale configs and as the correctness oracle.
+  gather — production path: per-expert top-C token selection (priority = gate
+           probability), gather -> per-expert SwiGLU einsum -> scatter-add
+           combine. Experts shard over the 'expert' logical axis (EP over the
+           mesh 'model' axis); capacity C = ceil(cf * T * k / E). Tokens beyond
+           capacity are dropped (GShard semantics), which the paper's vote
+           aggregation is insensitive to.
+
+Expert count is padded to a multiple of the EP shard count by the config layer
+(e.g. qwen2-moe 60 -> 64 with 4 null experts the router never selects... the
+router logits for padded experts are masked to -inf here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import hint, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int            # real (un-padded) routed experts
+    n_experts_padded: int     # >= n_experts, multiple of EP shards
+    top_k: int
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    capacity_factor: float = 1.25
+    router_act: str = "softmax"   # softmax | sigmoid (llama4-style top-1)
+    renorm_topk: bool = False
+
+
+def capacity(dims: MoEDims, n_tokens: int) -> int:
+    c = max(1, int(dims.capacity_factor * n_tokens * dims.top_k / dims.n_experts))
+    return min(-(-c // 8) * 8, n_tokens)  # round up to 8, cap at T
+
+
+def router_probs(x: jnp.ndarray, w_router: jnp.ndarray, dims: MoEDims) -> jnp.ndarray:
+    """[T, E_padded] routing probabilities; padded experts masked out."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    if dims.n_experts_padded > dims.n_experts:
+        pad_mask = jnp.arange(dims.n_experts_padded) >= dims.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    if dims.router_act == "softmax":
+        return jax.nn.softmax(logits, axis=-1)
+    return jax.nn.sigmoid(logits)
+
+
+def _topk_gates(probs: jnp.ndarray, dims: MoEDims):
+    gate_vals, expert_idx = jax.lax.top_k(probs, dims.top_k)  # [T, k]
+    if dims.renorm_topk:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    return gate_vals, expert_idx
+
+
+def _expert_ffn(xin: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    """xin: [E, C, Dm]; weights [E, Dm, F] / [E, F, Dm]."""
+    h = swiglu(jnp.einsum("ecd,edf->ecf", xin, w_gate),
+               jnp.einsum("ecd,edf->ecf", xin, w_up))
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_ffn_gather(params: dict, x: jnp.ndarray, dims: MoEDims) -> jnp.ndarray:
+    """x: [T, Dm] -> [T, Dm]."""
+    t = x.shape[0]
+    probs = router_probs(x, params["router"], dims)
+    gate_vals, expert_idx = _topk_gates(probs, dims)
+
+    # token->expert gate matrix [T, E] (0 where not routed)
+    assign = jnp.zeros((t, dims.n_experts_padded), jnp.float32)
+    assign = assign.at[jnp.arange(t)[:, None], expert_idx].set(gate_vals)
+
+    c = capacity(dims, t)
+    # per-expert top-C tokens by gate (priority). [E, C]
+    sel_gate, sel_tok = jax.lax.top_k(assign.T, c)
+    valid = sel_gate > 0.0
+
+    xin = x[sel_tok.reshape(-1)].reshape(dims.n_experts_padded, c, dims.d_model)
+    xin = hint(xin, "expert", None, None)
+    out = _expert_ffn(xin.astype(x.dtype), params["w_gate"], params["w_up"], params["w_down"])
+    out = out * (sel_gate * valid)[..., None].astype(out.dtype)
+    out = hint(out, "expert", None, None)
+
+    y = jnp.zeros((t, dims.d_model), jnp.float32)
+    y = y.at[sel_tok.reshape(-1)].add(out.reshape(-1, dims.d_model).astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def moe_ffn_dense(params: dict, x: jnp.ndarray, dims: MoEDims) -> jnp.ndarray:
+    """Oracle path: all experts on all tokens (top-k gates, no capacity drops)."""
+    probs = router_probs(x, params["router"], dims)
+    gate_vals, expert_idx = _topk_gates(probs, dims)
+    t = x.shape[0]
+    gates = jnp.zeros((t, dims.n_experts_padded), jnp.float32)
+    gates = gates.at[jnp.arange(t)[:, None], expert_idx].set(gate_vals)
+
+    def one_expert(w_gate, w_up, w_down):
+        h = swiglu(x @ w_gate, x @ w_up)
+        return h @ w_down  # [T, Dm]
+
+    outs = jax.vmap(one_expert)(params["w_gate"], params["w_up"], params["w_down"])  # [E,T,Dm]
+    return jnp.einsum("te,etd->td", gates, outs.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, dims: MoEDims, impl: str = "gather") -> jnp.ndarray:
+    """Routed experts + optional always-on shared expert (params['shared_*'])."""
+    fn = moe_ffn_gather if impl == "gather" else moe_ffn_dense
+    y = fn(params, x, dims)
+    if "shared_w_gate" in params:
+        y = y + swiglu(x @ params["shared_w_gate"], x @ params["shared_w_up"]) @ params["shared_w_down"]
+    return y
+
+
+def moe_param_shapes(dims: MoEDims, n_shared: int, dtype) -> dict:
+    e, dm, f = dims.n_experts_padded, dims.d_model, dims.d_ff
+    shapes = {
+        "router": ((dm, e), jnp.float32),
+        "w_gate": ((e, dm, f), dtype),
+        "w_up": ((e, dm, f), dtype),
+        "w_down": ((e, f, dm), dtype),
+    }
+    if n_shared > 0:
+        fs = n_shared * f
+        shapes.update({
+            "shared_w_gate": ((dm, fs), dtype),
+            "shared_w_up": ((dm, fs), dtype),
+            "shared_w_down": ((fs, dm), dtype),
+        })
+    return shapes

@@ -1,0 +1,67 @@
+"""Rotary position embeddings: standard RoPE and qwen2-vl's M-RoPE.
+
+M-RoPE splits the head_dim/2 frequency bands into three sections
+(temporal, height, width); each section rotates by its own position stream.
+For text tokens all three positions coincide, recovering standard RoPE —
+the property test in tests/test_rope.py checks exactly that.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """[head_dim/2] inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S] int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin,
+         x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin],
+        axis=-1,
+    )
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions3: jnp.ndarray,
+    theta: float = 10000.0,
+    sections: Sequence[int] = (16, 24, 24),
+) -> jnp.ndarray:
+    """qwen2-vl M-RoPE. x: [..., S, H, Dh]; positions3: [..., S, 3] (t, h, w).
+
+    ``sections`` are the per-axis frequency-band counts; they must sum to Dh/2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # [half]
+    # Pick which position stream drives each frequency band.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)  # [half]
+    pos = positions3.astype(jnp.float32)  # [..., S, 3]
+    pos_per_band = jnp.take_along_axis(
+        pos[..., None, :], sec_id[None, :, None].astype(jnp.int32) * jnp.ones(pos.shape[:-1] + (half, 1), jnp.int32),
+        axis=-1,
+    )[..., 0]  # [..., S, half]
+    angles = pos_per_band * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin,
+         x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin],
+        axis=-1,
+    )
+    return out.astype(x.dtype)

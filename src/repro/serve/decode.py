@@ -1,0 +1,87 @@
+"""Serving step builders (prefill / decode) — plain jit + GSPMD.
+
+The paper's technique lives in the training exchange; serving is included to
+prove the parallelism layer covers the assigned inference shapes. Decode cells
+lower ``serve_step`` = one new token against a seq_len-deep cache; long_500k
+(batch 1) shards the cache *sequence* axis across the worker axes and lets
+GSPMD insert the distributed-softmax reductions.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ACT_RULES_SERVE, cache_shardings_tree, tp_param_shardings
+from repro.models.common import axis_rules
+from repro.models.model import Model
+
+
+def build_decode_step(model: Model, mesh, *, worker_axes: Sequence[str] = ("data",),
+                      shard_seq: bool = False):
+    """Returns (jit'd step, params_shardings, cache_shardings_builder)."""
+    rules = dict(ACT_RULES_SERVE)
+    rules["batch"] = tuple(worker_axes) if not shard_seq else None
+
+    def step(params, caches, batch):
+        with axis_rules(rules, mesh):
+            return model.decode_step(params, caches, batch)
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def build_prefill(model: Model, mesh, *, worker_axes: Sequence[str] = ("data",),
+                  with_cache: bool = True):
+    rules = dict(ACT_RULES_SERVE)
+    rules["batch"] = tuple(worker_axes)
+
+    if with_cache and model.cfg.supports_decode:
+        def step(params, batch):
+            with axis_rules(rules, mesh):
+                h, caches = model.prefill(params, batch)
+                logits = (h[:, -1] @ model.head_weight(params)).astype(jnp.float32)
+                return logits, caches
+    else:
+        # encoder-only 'prefill': the full forward + per-frame logits-loss probe
+        def step(params, batch):
+            with axis_rules(rules, mesh):
+                h = model.forward_hidden(params, batch)
+                return model.head_loss(params, h, batch["labels"])
+
+    return jax.jit(step)
+
+
+def serve_input_specs(cfg, shape, *, mesh, worker_axes=("data",), shard_seq=False):
+    """ShapeDtypeStructs (with shardings) for one decode cell: (params, caches, batch)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    model = Model(cfg)
+    b = shape.global_batch
+    wa = tuple(worker_axes) if len(worker_axes) > 1 else worker_axes[0]
+
+    params_sh = tp_param_shardings(model, mesh)
+    params_sds = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        model.param_shapes(), params_sh)
+
+    cache_shapes = model.cache_shapes(b, shape.seq_len)
+    cache_sh = cache_shardings_tree(cache_shapes, mesh, worker_axes=worker_axes,
+                                    shard_seq=shard_seq)
+    cache_sds = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_shapes, cache_sh)
+
+    bspec = P(wa) if not shard_seq else P()
+    bsh = NamedSharding(mesh, bspec)
+    if cfg.input_kind == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=bsh)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.activation_dtype, sharding=bsh)
+    batch_sds = {
+        "inputs": inputs,
+        "positions": jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=bsh),
+    }
+    if cfg.mrope:
+        batch_sds["positions3"] = jax.ShapeDtypeStruct((b, 1, 3), jnp.int32, sharding=bsh)
+    return params_sds, cache_sds, batch_sds

@@ -1,0 +1,85 @@
+"""Training driver: step loop + checkpoint/restart + failure handling.
+
+Fault model (DESIGN.md §4):
+  * straggler / transient worker failure  -> worker sampling already excludes it
+    from the round (algorithm-level, Cor. 1); nothing to do here.
+  * process / pod loss                    -> resume from the last atomic
+    checkpoint; the data stream is a pure function of (seed, step) so the
+    restarted run replays the exact same rounds (bitwise, tested).
+  * elastic rescale                       -> restore() re-shards the logical
+    checkpoint onto the new mesh; majority-vote state has no per-worker terms,
+    so M can change freely between rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train.state import TrainState
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    fail_at_step: Optional[int] = None   # failure injection (tests)
+
+
+def run(
+    train_step: Callable,
+    state: TrainState,
+    batch_fn: Callable[[int], dict],
+    cfg: LoopConfig,
+    *,
+    log: Callable[[str], None] = print,
+) -> tuple[TrainState, list[dict]]:
+    """Runs the loop; resumes from cfg.ckpt_dir if a checkpoint exists.
+
+    ``batch_fn`` must be a pure function of the step index — that is what makes
+    restart/elastic replay exact (the resumed run re-requests step k's batch).
+    """
+    start = int(state.step)
+    if cfg.ckpt_dir:
+        steps = ckpt_lib.latest_steps(cfg.ckpt_dir)
+        if steps:
+            state, manifest = ckpt_lib.restore(cfg.ckpt_dir, state)
+            start = int(manifest["step"])
+            log(f"[loop] resumed from step {start}")
+
+    history = []
+    t0 = time.time()
+    for step_idx in range(start, cfg.total_steps):
+        if cfg.fail_at_step is not None and step_idx == cfg.fail_at_step:
+            raise RuntimeError(f"injected failure at step {step_idx}")
+        batch = batch_fn(step_idx)
+        state, metrics = train_step(state, batch)
+        if step_idx % cfg.log_every == 0 or step_idx == cfg.total_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step_idx
+            m["wall_s"] = round(time.time() - t0, 2)
+            history.append(m)
+            log(f"[loop] step {step_idx}: " +
+                " ".join(f"{k}={v:.5g}" for k, v in m.items() if k != "step"))
+        if cfg.ckpt_dir and cfg.ckpt_every and (step_idx + 1) % cfg.ckpt_every == 0:
+            ckpt_lib.save(cfg.ckpt_dir, step_idx + 1, state, keep=cfg.keep)
+    if cfg.ckpt_dir:
+        ckpt_lib.save(cfg.ckpt_dir, cfg.total_steps, state, keep=cfg.keep)
+    return state, history
+
+
+def batches_from_fn(batch_fn: Callable[[int], dict], start_step: int = 0) -> Iterator:
+    """Adapter: pure (step -> batch) function to an iterator that replays
+    deterministically after restarts (the iterator tracks its own cursor)."""
+    step = start_step
+    while True:
+        yield batch_fn(step)
+        step += 1

@@ -1,0 +1,31 @@
+"""Worker sampling = the paper's partial participation = straggler/failure
+tolerance on the mesh.
+
+Each round, worker m participates iff hash(round_seed, m) < p_s. On a TPU mesh
+every device still executes the program (SPMD), but a masked worker contributes
+zeros to the vote and is excluded from the divisor — algorithmically identical
+to not being sampled (Cor. 1), which is also exactly what we do when a host is
+known-slow or down: the scheduler marks it unsampled instead of stalling the
+round. Deterministic given (seed, round), so restarts reproduce the same
+participation sequence.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import prng
+
+
+def participation_mask(seed, round_idx, worker_idx, p_sample: float) -> jnp.ndarray:
+    """bool scalar (per worker) — participates this round?"""
+    if p_sample >= 1.0:
+        return jnp.bool_(True)
+    u = prng.uniform01(prng.fold_seed(seed, 0xFA17, 1),
+                       jnp.asarray(round_idx, jnp.uint32) * jnp.uint32(1_000_003)
+                       + jnp.asarray(worker_idx, jnp.uint32))
+    return u < p_sample
+
+
+def round_seed(base_seed, round_idx) -> jnp.ndarray:
+    return prng.fold_seed(base_seed, 0x52D) + jnp.asarray(round_idx, jnp.uint32) * jnp.uint32(0x9E3779B9)

@@ -1,0 +1,48 @@
+"""Training state + schedules."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    ef_residual: Any          # pytree of f32 residuals (or None) — server EF
+    step: jnp.ndarray         # int32 round counter
+    seed: jnp.ndarray         # uint32 base seed
+
+
+def init_state(params, *, server: str, seed: int) -> TrainState:
+    ef = None
+    if server == "scaled_sign_ef":
+        ef = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(
+        params=params,
+        ef_residual=ef,
+        step=jnp.int32(0),
+        seed=jnp.uint32(seed),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LrSchedule:
+    base: float = 1e-3
+    warmup: int = 0
+    decay_steps: Optional[int] = None   # cosine horizon; None = constant
+    min_ratio: float = 0.1
+
+    def __call__(self, step):
+        lr = jnp.float32(self.base)
+        if self.warmup > 0:
+            lr = lr * jnp.minimum(1.0, (step + 1) / self.warmup)
+        if self.decay_steps:
+            t = jnp.clip((step - self.warmup) / max(self.decay_steps - self.warmup, 1), 0.0, 1.0)
+            cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+            lr = lr * (self.min_ratio + (1.0 - self.min_ratio) * cos)
+        return lr

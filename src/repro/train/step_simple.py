@@ -1,0 +1,211 @@
+"""`simple`-mode distributed train step (DESIGN.md §3 mode 1).
+
+Top level: ``jax.shard_map`` manual over the worker axes ('pod','data') — the
+paper's M workers — and auto (GSPMD) over 'model' (TP/EP/SP). Parameters are
+replicated across workers and sharded over 'model' by their placement +
+``hint()`` constraints inside the model code.
+
+Per round (Algorithm 1 / Algorithm 2 with tau=1..):
+  1. every worker computes the local gradient of its microbatch
+     (optionally tau compressed local steps, Alg. 2),
+  2. compresses each gradient leaf with its worker-specific counter stream,
+  3. one integer psum over the worker axes = upload + server sum,
+  4. C(.) (majority vote sign, or scaled-sign with server-side EF) computed
+     redundantly everywhere = free downlink,
+  5. SGD update; params stay bitwise identical across workers.
+
+Baselines (terngrad/qsgd/identity) need the worker scale on the wire, so they
+psum decoded float32 — honestly costing fp32 collective bytes, which is exactly
+the communication gap the paper's tables report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import prng
+from repro.core.algorithm import CompressionConfig
+from repro.core.budgets import resolve_budget
+from repro.core.compressors import get_compressor
+from repro.dist import collectives
+from repro.dist.sharding import ACT_RULES_TRAIN
+from repro.models.common import axis_rules
+from repro.train import sampling
+from repro.train.state import LrSchedule, TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    compression: CompressionConfig
+    lr: LrSchedule
+    local_lr: float = 1.0          # eta_L (Alg. 2)
+    worker_axes: Sequence[str] = ("data",)
+    vote_impl: str = "psum"        # psum | hier | allgather_packed
+    donate: bool = True
+
+
+def _leaf_seeds(worker_seed, tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    seeds = [prng.fold_seed(worker_seed, i) for i in range(len(leaves))]
+    return jax.tree_util.tree_unflatten(treedef, seeds)
+
+
+def _compress_leaf(g, cfg: CompressionConfig, seed, counter_base=0):
+    from repro.core.compressors import SCALE_FREE, compress_leaf_chunked
+    budget = resolve_budget(cfg.budget, g)
+    fn = get_compressor(cfg.compressor)
+    if cfg.compressor in SCALE_FREE:
+        return compress_leaf_chunked(fn, g, budget=budget, seed=seed,
+                                     counter_base=counter_base)
+    return fn(g, budget=budget, seed=seed, counter_base=counter_base)
+
+
+def _vote(values: jnp.ndarray, step_cfg: TrainStepConfig, n_workers: int) -> jnp.ndarray:
+    axes = tuple(step_cfg.worker_axes)
+    if step_cfg.vote_impl == "hier" and len(axes) == 2:
+        return collectives.vote_psum_hier(
+            values, axes[1], axes[0],
+            jax.lax.axis_size(axes[1]), jax.lax.axis_size(axes[0]))
+    if step_cfg.vote_impl == "allgather_packed":
+        return collectives.vote_allgather_packed(values, axes, n_workers)
+    return collectives.vote_psum(values, axes, n_workers)
+
+
+def _local_grads(model, params, batch, comp_cfg: CompressionConfig, wseed, local_lr):
+    """Returns (loss, message_source_tree).
+
+    tau == 1: message source = the raw local gradient (Alg. 1).
+    tau > 1 : message source = sum of the tau compressed local steps (Alg. 2);
+              batch leaves carry a leading tau axis.
+    """
+    loss_fn = lambda p, b: model.loss(p, b)[0]
+    tau = comp_cfg.local_steps
+    if tau == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    b_l = jnp.float32(comp_cfg.local_budget if comp_cfg.local_budget is not None else 1.0)
+    sp = get_compressor("sparsign")
+
+    def body(carry, c):
+        w, acc = carry
+        micro = jax.tree_util.tree_map(lambda x: x[c], batch)
+        loss, grads = jax.value_and_grad(loss_fn)(w, micro)
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        qs = []
+        for i, g in enumerate(leaves):
+            seed = prng.fold_seed(wseed, 7000 + i)
+            q = sp(g, budget=b_l, seed=seed, counter_base=c * g.size).values
+            qs.append(q)
+        q_tree = jax.tree_util.tree_unflatten(treedef, qs)
+        w = jax.tree_util.tree_map(lambda p, q: p - local_lr * q.astype(p.dtype), w, q_tree)
+        acc = jax.tree_util.tree_map(lambda a, q: a + q.astype(jnp.int32), acc, q_tree)
+        return (w, acc), loss
+
+    acc0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.int32), params)
+    (_, acc), losses = jax.lax.scan(body, (params, acc0), jnp.arange(tau))
+    msg_source = jax.tree_util.tree_map(lambda a: a.astype(jnp.float32), acc)
+    return jnp.mean(losses), msg_source
+
+
+def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
+    """Returns jit'd train_step(state, batch) -> (state, metrics)."""
+    comp = step_cfg.compression
+    axes = tuple(step_cfg.worker_axes)
+
+    # activation hints may only target auto (non-worker) mesh axes; in pure-DP
+    # mode every axis is a worker and no constraints are needed (all compute local)
+    act_rules = {k: v for k, v in ACT_RULES_TRAIN.items()
+                 if not (isinstance(v, str) and v in axes)}
+
+    def body(state: TrainState, batch):
+        with axis_rules(act_rules, mesh):
+            return _body_inner(state, batch)
+
+    def _body_inner(state: TrainState, batch):
+        params = state.params
+        widx = collectives.worker_index(axes)
+        n_workers = collectives.worker_count(axes)
+        rseed = sampling.round_seed(state.seed, state.step)
+        wseed = prng.fold_seed(rseed, 0x5EED) + widx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+        mask = sampling.participation_mask(rseed, state.step, widx, comp.worker_sample_fraction)
+
+        loss, msg_src = _local_grads(model, params, batch, comp, wseed, step_cfg.local_lr)
+
+        leaves, treedef = jax.tree_util.tree_flatten(msg_src)
+        new_leaves, ef_leaves = [], []
+        ef_flat = (jax.tree_util.tree_leaves(state.ef_residual)
+                   if state.ef_residual is not None else [None] * len(leaves))
+        p_leaves = jax.tree_util.tree_flatten(params)[0]
+        lr = step_cfg.lr(state.step)
+        nnz_acc = jnp.float32(0.0)
+        total = 0
+
+        for i, (g, p, ef) in enumerate(zip(leaves, p_leaves, ef_flat)):
+            seed_i = prng.fold_seed(wseed, i)
+            if comp.is_ternary:
+                msg = _compress_leaf(g, comp, seed_i)
+                votes = jnp.where(mask, msg.values, jnp.int8(0))
+                vote_sum = _vote(votes, step_cfg, n_workers)
+                nnz_acc += jnp.sum(jnp.abs(votes).astype(jnp.float32))
+                if comp.server == "majority_vote":
+                    upd = jnp.sign(vote_sum).astype(jnp.float32)
+                    new_ef = ef
+                elif comp.server == "scaled_sign_ef":
+                    n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+                    mean_delta = vote_sum.astype(jnp.float32) / jnp.maximum(n_sel, 1.0)
+                    acc = mean_delta + ef
+                    scale = jnp.sum(jnp.abs(acc)) / jnp.float32(acc.size)
+                    upd = scale * jnp.sign(acc)
+                    new_ef = acc - upd
+                else:  # mean of ternary (w/ scale) — TernGrad/QSGD-style baseline
+                    n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+                    dec = msg.values.astype(jnp.float32) * msg.scale
+                    dec = jnp.where(mask, dec, 0.0)
+                    upd = jax.lax.psum(dec, axes) / jnp.maximum(n_sel, 1.0)
+                    new_ef = ef
+            else:  # identity / full-precision DP baseline
+                n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+                dec = jnp.where(mask, g.astype(jnp.float32), 0.0)
+                upd = jax.lax.psum(dec, axes) / jnp.maximum(n_sel, 1.0)
+                new_ef = ef
+                nnz_acc += jnp.sum(jnp.abs(jnp.sign(g)).astype(jnp.float32))
+            total += g.size
+            new_leaves.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+            ef_leaves.append(new_ef)
+
+        new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        new_ef_tree = (jax.tree_util.tree_unflatten(treedef, ef_leaves)
+                       if state.ef_residual is not None else None)
+        loss_mean = jax.lax.psum(loss, axes) / n_workers
+        nnz_mean = jax.lax.psum(nnz_acc, axes) / n_workers / jnp.float32(total)
+        metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
+                   "participated": jax.lax.psum(mask.astype(jnp.float32), axes)}
+        new_state = TrainState(params=new_params, ef_residual=new_ef_tree,
+                               step=state.step + 1, seed=state.seed)
+        return new_state, metrics
+
+    state_spec = P()   # replicated w.r.t. the manual worker axes
+    batch_axis = 1 if comp.local_steps > 1 else 0
+    def batch_spec(x=None):
+        spec = [None] * 4
+        spec[batch_axis] = axes if len(axes) > 1 else axes[0]
+        return P(*spec[:batch_axis + 1])
+
+    wrapped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(state_spec, batch_spec()),
+        out_specs=(state_spec, state_spec),
+        axis_names=set(axes),
+        check_vma=False,
+    )
+    if step_cfg.donate:
+        return jax.jit(wrapped, donate_argnums=(0,))
+    return jax.jit(wrapped)

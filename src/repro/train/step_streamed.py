@@ -1,0 +1,357 @@
+"""`streamed`-mode distributed train step (DESIGN.md §3 mode 2) — for models
+whose local gradient cannot exist in HBM all at once (qwen2-vl-72b, jamba-398b,
+llama4-scout).
+
+ALL parameters (block stacks AND embed/head) are FSDP-sharded along 'data'
+(and over 'model' via GSPMD). One round:
+
+  forward:  lax.scan over superblocks; each iteration all-gathers ONLY that
+            block's param shards (bf16) and emits the block input — O(1 block)
+            of gathered params live at any time.
+  head:     gather embed/head, loss + vjp for the outer params.
+  backward: reverse lax.scan; per superblock: re-gather params, recompute under
+            jax.vjp (remat), compress the *local, unreduced* block gradient,
+            psum the int votes over the worker axes, then do ALL server math
+            (sign / scaled-sign EF, SGD) on this rank's shard only — the full
+            fp32 update tensor never exists. Gradients die block-by-block.
+
+Counter streams are laid out identically to simple mode (leaf salt = canonical
+tree position, counter = offset within the stacked leaf) — the cross-mode
+equivalence test relies on this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import prng
+from repro.core.algorithm import CompressionConfig
+from repro.core.budgets import resolve_budget
+from repro.core.compressors import SCALE_FREE, compress_leaf_chunked, get_compressor
+from repro.dist import collectives
+from repro.dist.sharding import ACT_RULES_TRAIN
+from repro.models.common import axis_rules, rms_norm
+from repro.train import sampling
+from repro.train.state import LrSchedule, TrainState
+
+REPLICATED = -1  # sentinel: leaf not FSDP-sharded (None is not a pytree leaf)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamedStepConfig:
+    compression: CompressionConfig
+    lr: LrSchedule
+    worker_axes: Sequence[str] = ("data",)
+    fsdp_axis: str = "data"
+    donate: bool = True
+
+
+# ---------------------------------------------------------------------------
+# FSDP sharding layout
+# ---------------------------------------------------------------------------
+
+def fsdp_shard_axis(shape, n_shards: int, min_axis: int = 0, avoid=()) -> int:
+    """Largest axis (>= min_axis, not in avoid) divisible by n_shards;
+    REPLICATED if none. ``avoid`` holds axes already claimed by TP ('model')."""
+    best, best_size = REPLICATED, 0
+    for ax in range(min_axis, len(shape)):
+        if ax in avoid:
+            continue
+        if shape[ax] % n_shards == 0 and shape[ax] >= n_shards and shape[ax] > best_size:
+            best, best_size = ax, shape[ax]
+    return best
+
+
+def _spec_of(ax: int, axis_name: str) -> P:
+    if ax == REPLICATED:
+        return P()
+    parts = [None] * (ax + 1)
+    parts[ax] = axis_name
+    return P(*parts)
+
+
+def _is_logical(x):
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+def build_fsdp_layout(shapes_tree, n_shards: int, axis_name: str, min_axis: int = 1,
+                      logical_tree=None):
+    """(PartitionSpec tree, shard-axis int tree). min_axis=1 skips the stacked R
+    axis for block leaves; outer leaves use min_axis=0. When ``logical_tree`` is
+    given, axes that TP would claim (DESIGN: vocab/heads/ff/expert -> model) are
+    excluded so the data and model shardings never collide on one dim."""
+    from repro.dist.sharding import TP_RULES
+
+    leaves, treedef = jax.tree_util.tree_flatten(shapes_tree)
+    if logical_tree is None:
+        lg_leaves = [()] * len(leaves)
+    else:
+        lg_leaves = treedef.flatten_up_to(logical_tree)
+    ax_leaves = []
+    for s, lg in zip(leaves, lg_leaves):
+        avoid = tuple(i for i, name in enumerate(lg)
+                      if name is not None and TP_RULES.get(name) is not None)
+        ax_leaves.append(fsdp_shard_axis(s.shape, n_shards, min_axis, avoid))
+    axes_tree = jax.tree_util.tree_unflatten(treedef, ax_leaves)
+    specs_tree = jax.tree_util.tree_map(lambda a: _spec_of(a, axis_name), axes_tree)
+    return specs_tree, axes_tree
+
+
+def streamed_shardings(model, mesh, fsdp_axis: str = "data"):
+    """Single source of truth for streamed-mode parameter placement:
+    returns (NamedSharding tree [FSDP+TP merged], shard-axis tree, shard-map
+    PartitionSpec tree [manual/FSDP part only])."""
+    from jax.sharding import NamedSharding
+    from repro.dist.sharding import logical_to_spec, sanitize_spec
+
+    shapes = model.param_shapes()
+    logical = model.param_logical_axes()
+    n = mesh.shape[fsdp_axis]
+    named, manual_specs, axes = {}, {}, {}
+    for k in shapes:
+        min_axis = 1 if k == "blocks" else 0
+        specs_k, axes_k = build_fsdp_layout(shapes[k], n, fsdp_axis,
+                                            min_axis=min_axis, logical_tree=logical[k])
+
+        lg_leaves, treedef = jax.tree_util.tree_flatten(logical[k], is_leaf=_is_logical)
+        ax_leaves = treedef.flatten_up_to(axes_k)
+        sh_leaves = treedef.flatten_up_to(shapes[k])
+        merged = []
+        for lg, ax, sds in zip(lg_leaves, ax_leaves, sh_leaves):
+            # TP part first, sanitized to the actual dims (placement must divide)
+            spec = list(sanitize_spec(logical_to_spec(lg), sds.shape, mesh))
+            while len(spec) <= max(ax, 0):
+                spec.append(None)
+            if ax != REPLICATED:
+                assert spec[ax] is None, (k, lg, ax)
+                spec[ax] = fsdp_axis
+            merged.append(NamedSharding(mesh, P(*spec)))
+        named[k] = jax.tree_util.tree_unflatten(treedef, merged)
+        manual_specs[k] = specs_k
+        axes[k] = axes_k
+    return named, axes, manual_specs
+
+
+# ---------------------------------------------------------------------------
+# Step builder
+# ---------------------------------------------------------------------------
+
+def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Callable:
+    cfg = model.cfg
+    assert not cfg.tail_pattern, "streamed mode does not support tail blocks"
+    assert not cfg.tie_embeddings, "streamed mode expects untied embeddings"
+    comp = step_cfg.compression
+    assert comp.local_steps == 1, "streamed mode implements Alg. 1 exchange (tau=1)"
+    axes = tuple(step_cfg.worker_axes)
+    fsdp_ax = step_cfg.fsdp_axis
+    n_shards = mesh.shape[fsdp_ax]
+
+    shapes = model.param_shapes()
+    _, axes_all, manual_specs = streamed_shardings(model, mesh, fsdp_ax)
+    block_specs, block_axes = manual_specs["blocks"], axes_all["blocks"]
+    outer_keys = [k for k in shapes if k != "blocks"]
+    outer_specs = {k: manual_specs[k] for k in outer_keys}
+    outer_axes = {k: axes_all[k] for k in outer_keys}
+
+    ax_flat = jax.tree_util.tree_leaves(block_axes)
+    flat_shapes, shapes_treedef = jax.tree_util.tree_flatten(shapes)
+    idx_tree = jax.tree_util.tree_unflatten(shapes_treedef, list(range(len(flat_shapes))))
+    blocks_idx_flat = jax.tree_util.tree_leaves(idx_tree["blocks"])
+    total_coords = sum(int(jnp.prod(jnp.array(s.shape))) for s in flat_shapes)
+
+    def _gather(leaf, ax):
+        return leaf if ax == REPLICATED else jax.lax.all_gather(leaf, fsdp_ax, axis=ax, tiled=True)
+
+    def _slice(full, ax, shard_size):
+        if ax == REPLICATED:
+            return full
+        start = jax.lax.axis_index(fsdp_ax) * shard_size
+        return jax.lax.dynamic_slice_in_dim(full, start, shard_size, axis=ax)
+
+    def leaf_update(p_shard, g_full, *, seed, counter_base, ef_shard, mask, lr,
+                    shard_ax: int, leaf_size: int):
+        """compress(full) -> vote(full, int8) -> server math + SGD on the SHARD.
+
+        The fp32 update/EF tensors only ever exist at shard size; the full-size
+        artifacts are the bf16/f32 gradient (transient, from vjp) and the int8
+        votes (1 B/coord)."""
+        budget = resolve_budget(comp.budget, g_full)
+        fn = get_compressor(comp.compressor)
+        if comp.compressor in SCALE_FREE:
+            msg = compress_leaf_chunked(fn, g_full, budget=budget, seed=seed,
+                                        counter_base=counter_base)
+        else:
+            msg = fn(g_full, budget=budget, seed=seed, counter_base=counter_base)
+        votes = jnp.where(mask, msg.values, jnp.int8(0))
+        vote_sum = collectives.vote_psum(votes, axes, collectives.worker_count(axes))
+        nnz = jnp.sum(jnp.abs(votes).astype(jnp.float32))
+        shard_size = p_shard.shape[shard_ax] if shard_ax != REPLICATED else None
+        vs = _slice(vote_sum, shard_ax, shard_size)
+        if comp.server == "majority_vote":
+            upd = jnp.sign(vs).astype(jnp.float32)
+            new_ef = ef_shard
+        elif comp.server == "scaled_sign_ef":
+            n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+            acc = vs.astype(jnp.float32) / jnp.maximum(n_sel, 1.0) + ef_shard
+            part = jnp.sum(jnp.abs(acc))
+            if shard_ax != REPLICATED:
+                part = jax.lax.psum(part, fsdp_ax)  # shards partition the leaf
+            scale = part / jnp.float32(leaf_size)
+            upd = scale * jnp.sign(acc)
+            new_ef = acc - upd
+        else:
+            raise ValueError(f"streamed mode supports vote servers, got {comp.server}")
+        new_shard = (p_shard.astype(jnp.float32) - lr * upd).astype(p_shard.dtype)
+        return new_shard, new_ef, nnz
+
+    def body(state: TrainState, batch):
+        with axis_rules(ACT_RULES_TRAIN, mesh):
+            return _body_inner(state, batch)
+
+    def _body_inner(state: TrainState, batch):
+        params = state.params
+        widx = collectives.worker_index(axes)
+        n_workers = collectives.worker_count(axes)
+        rseed = sampling.round_seed(state.seed, state.step)
+        wseed = prng.fold_seed(rseed, 0x5EED) + widx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+        mask = sampling.participation_mask(rseed, state.step, widx, comp.worker_sample_fraction)
+        lr = step_cfg.lr(state.step)
+        positions = batch["positions"]
+        positions3 = batch.get("positions3")
+        has_ef = state.ef_residual is not None
+
+        def gather_block(block_slice):
+            leaves, treedef = jax.tree_util.tree_flatten(block_slice)
+            out = [_gather(l, (a - 1 if a != REPLICATED else a))
+                   for l, a in zip(leaves, ax_flat)]
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        # ---------------- forward ----------------
+        outer_full = {k: _gather(params[k], outer_axes[k]) for k in outer_keys}
+        h0 = model.embed_stage(outer_full if cfg.input_kind == "tokens" else params, batch)
+
+        def fwd_body(h, block_shard):
+            full = gather_block(block_shard)
+            return model.superblock_apply(full, h, positions, positions3), h
+
+        h_final, h_inputs = jax.lax.scan(fwd_body, h0, params["blocks"])
+
+        # ---------------- head / loss ----------------
+        def head_fn(outer_p, h):
+            hn = rms_norm(h, outer_p["final_norm"], cfg.norm_eps)
+            return model.head_loss(outer_p, hn, batch["labels"])
+
+        loss, head_vjp = jax.vjp(head_fn, outer_full, h_final)
+        g_outer, g_h = head_vjp(jnp.float32(1.0))
+
+        # ---------------- backward over superblocks ----------------
+        def bwd_body(carry, xs):
+            g_h, nnz_acc = carry
+            if has_ef:
+                block_shard, h_in, layer, ef_slice = xs
+            else:
+                block_shard, h_in, layer = xs
+            full = gather_block(block_shard)
+
+            def fwd(bp, h):
+                return model.superblock_apply(bp, h, positions, positions3)
+
+            _, vjp = jax.vjp(fwd, full, h_in)
+            g_block, g_h_prev = vjp(g_h)
+
+            g_leaves, g_def = jax.tree_util.tree_flatten(g_block)
+            ps_leaves = g_def.flatten_up_to(block_shard)
+            ef_leaves = (g_def.flatten_up_to(ef_slice) if has_ef
+                         else [jnp.float32(0.0)] * len(g_leaves))
+
+            new_shards, new_efs = [], []
+            for g, p_shard, ef, ax, leaf_idx in zip(
+                    g_leaves, ps_leaves, ef_leaves, ax_flat, blocks_idx_flat):
+                seed_i = prng.fold_seed(wseed, leaf_idx)
+                base = layer.astype(jnp.uint32) * jnp.uint32(g.size)
+                sh_ax = ax - 1 if ax != REPLICATED else REPLICATED
+                new_shard, new_ef, nnz = leaf_update(
+                    p_shard, g, seed=seed_i, counter_base=base, ef_shard=ef,
+                    mask=mask, lr=lr, shard_ax=sh_ax, leaf_size=g.size)
+                nnz_acc = nnz_acc + nnz
+                new_shards.append(new_shard)
+                new_efs.append(new_ef)
+            outs = (jax.tree_util.tree_unflatten(g_def, new_shards),)
+            if has_ef:
+                outs = outs + (jax.tree_util.tree_unflatten(g_def, new_efs),)
+            return (g_h_prev, nnz_acc), outs
+
+        xs = (params["blocks"], h_inputs, jnp.arange(cfg.n_repeats))
+        if has_ef:
+            xs = xs + (state.ef_residual["blocks"],)
+        (g_h0, nnz_acc), ys = jax.lax.scan(bwd_body, (g_h, jnp.float32(0.0)), xs, reverse=True)
+        new_blocks = ys[0]
+        new_ef_blocks = ys[1] if has_ef else None
+
+        # ---------------- embed backward + outer updates ----------------
+        g_embed = None
+        if cfg.input_kind == "tokens":
+            def embed_fn(emb):
+                return model.embed_stage({"embed": emb}, batch)
+            _, embed_vjp = jax.vjp(embed_fn, outer_full["embed"])
+            (g_embed,) = embed_vjp(g_h0)
+
+        new_params = {"blocks": new_blocks}
+        new_ef = {"blocks": new_ef_blocks} if has_ef else None
+        for k in outer_keys:
+            g_k = g_outer[k]
+            if k == "embed" and g_embed is not None:
+                g_k = g_k + g_embed
+            seed_i = prng.fold_seed(wseed, idx_tree[k])
+            ef_k = state.ef_residual[k] if has_ef else jnp.float32(0.0)
+            new_shard, new_ef_k, nnz = leaf_update(
+                params[k], g_k, seed=seed_i, counter_base=jnp.uint32(0),
+                ef_shard=ef_k, mask=mask, lr=lr,
+                shard_ax=outer_axes[k], leaf_size=g_k.size)
+            nnz_acc = nnz_acc + nnz
+            new_params[k] = new_shard
+            if has_ef:
+                new_ef[k] = new_ef_k
+
+        loss_mean = jax.lax.psum(loss, axes) / n_workers
+        nnz_mean = jax.lax.psum(nnz_acc, axes) / n_workers / jnp.float32(total_coords)
+        metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
+                   "participated": jax.lax.psum(mask.astype(jnp.float32), axes)}
+        new_state = TrainState(params=new_params, ef_residual=new_ef,
+                               step=state.step + 1, seed=state.seed)
+        return new_state, metrics
+
+    # ------------------------------------------------------------------
+    # shard_map wiring
+    # ------------------------------------------------------------------
+    p_specs = {"blocks": block_specs}
+    for k in outer_keys:
+        p_specs[k] = outer_specs[k]
+    state_specs = TrainState(
+        params=p_specs,
+        ef_residual=(p_specs if comp.server == "scaled_sign_ef" else None),
+        step=P(), seed=P())
+    batch_spec = P(axes if len(axes) > 1 else axes[0])
+
+    wrapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(state_specs, batch_spec),
+        out_specs=(state_specs, P()),
+        axis_names=set(axes) | {fsdp_ax},
+        check_vma=False,
+    )
+    if step_cfg.donate:
+        return jax.jit(wrapped, donate_argnums=(0,))
+    return jax.jit(wrapped)
+
+
+def fsdp_param_shardings(model, mesh, fsdp_axis: str = "data"):
+    """NamedShardings (FSDP over data + TP over model) to place params for the
+    streamed trainer."""
+    named, _, _ = streamed_shardings(model, mesh, fsdp_axis)
+    return named

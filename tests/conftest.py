@@ -1,0 +1,16 @@
+"""Test-session guards.
+
+The dry-run forces 512 host devices via XLA_FLAGS — that env var must NEVER be
+set here: smoke tests and benches are written for the default 1-device CPU
+client, and multi-device suites spawn their own subprocesses with their own
+flags (tests/mdev/*).
+"""
+
+import os
+
+# Fail fast if a stray XLA_FLAGS from a dry-run shell would skew every test.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" in _flags:
+    raise RuntimeError(
+        "XLA_FLAGS forces a host device count; unset it before running pytest "
+        "(the multi-device tests manage their own subprocess flags)")

@@ -1,0 +1,116 @@
+"""Unit + property tests for the compressor family (Def. 1 + Appendix B)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.budgets import BudgetConfig, expected_sparsity, resolve_budget, solve_budget_for_sparsity
+from repro.core.compressors import (COMPRESSORS, compress_leaf_chunked, get_compressor,
+                                    qsgd_1bit_l2, sparsign, terngrad)
+
+TERNARY = ("sparsign", "sign", "scaled_sign", "noisy_sign",
+           "qsgd_1bit_l2", "qsgd_1bit_linf", "terngrad")
+
+
+@pytest.mark.parametrize("name", TERNARY)
+def test_ternary_domain(name):
+    g = jnp.asarray(np.random.RandomState(0).randn(4096) * 3, jnp.float32)
+    msg = get_compressor(name)(g, budget=0.5, seed=7, counter_base=0)
+    vals = np.asarray(msg.values)
+    assert set(np.unique(vals)).issubset({-1, 0, 1}), name
+    assert msg.values.dtype == jnp.int8
+
+
+@given(budget=st.floats(0.01, 50.0), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_sparsign_expected_sparsity(budget, seed):
+    """Realized nnz ~ sum min(|g|B, 1) (Def. 1) within binomial noise."""
+    rng = np.random.RandomState(seed % 100000)
+    g = jnp.asarray(rng.randn(20000), jnp.float32)
+    msg = sparsign(g, budget=budget, seed=seed)
+    expect = float(expected_sparsity(g, budget)) * g.size
+    realized = float(jnp.sum(jnp.abs(msg.values)))
+    tol = 5.0 * np.sqrt(max(expect, 1.0))  # 5 sigma
+    assert abs(realized - expect) <= tol
+
+
+def test_sparsign_sign_correctness():
+    """Whenever a coordinate is transmitted, it carries the true sign."""
+    g = jnp.asarray(np.random.RandomState(1).randn(10000), jnp.float32)
+    msg = sparsign(g, budget=1.0, seed=3)
+    v = np.asarray(msg.values)
+    gs = np.sign(np.asarray(g))
+    nz = v != 0
+    assert np.array_equal(v[nz], gs[nz])
+
+
+def test_sparsign_counter_layout_invariance():
+    """The Bernoulli draw of a coordinate depends only on its flat index:
+    compressing a reshaped view gives the same symbols."""
+    g = jnp.asarray(np.random.RandomState(2).randn(6, 64), jnp.float32)
+    a = sparsign(g, budget=0.7, seed=11).values
+    b = sparsign(g.reshape(-1), budget=0.7, seed=11).values.reshape(6, 64)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sparsign_counter_base_offsets():
+    """Shard-by-shard compression with counter_base == whole-tensor compression."""
+    g = jnp.asarray(np.random.RandomState(3).randn(1000), jnp.float32)
+    whole = sparsign(g, budget=0.9, seed=5).values
+    parts = [sparsign(g[i * 250:(i + 1) * 250], budget=0.9, seed=5,
+                      counter_base=i * 250).values for i in range(4)]
+    assert np.array_equal(np.asarray(whole), np.concatenate([np.asarray(p) for p in parts]))
+
+
+def test_compress_leaf_chunked_stream_identity():
+    g = jnp.asarray(np.random.RandomState(4).randn(3, 1000), jnp.float32)
+    whole = sparsign(g, budget=0.5, seed=9).values
+    chunked = compress_leaf_chunked(sparsign, g, budget=0.5, seed=9, max_chunk=500).values
+    assert np.array_equal(np.asarray(whole), np.asarray(chunked))
+
+
+@pytest.mark.parametrize("name", ["qsgd_1bit_l2", "qsgd_1bit_linf", "terngrad"])
+def test_stochastic_ternary_unbiased(name):
+    """TernGrad/1-bit QSGD decode is unbiased: E[scale*values] = g.
+
+    Per-coordinate stdev of the n-trial mean is scale*sqrt(p(1-p)/n) with
+    p = |g_i|/scale; we test against 3x the analytic expected |error|."""
+    rng = np.random.RandomState(5)
+    d, n = 200, 400
+    g = jnp.asarray(rng.randn(d), jnp.float32)
+    acc = np.zeros(d, np.float64)
+    scale_val = None
+    for s in range(n):
+        msg = get_compressor(name)(g, seed=s)
+        scale_val = float(msg.scale)
+        acc += np.asarray(msg.values, np.float64) * scale_val
+    est = acc / n
+    p = np.clip(np.abs(np.asarray(g)) / scale_val, 0, 1)
+    expected_abs_err = np.sqrt(2 / np.pi) * scale_val * np.sqrt(p * (1 - p) / n)
+    err = np.abs(est - np.asarray(g))
+    assert err.mean() < 3.0 * max(expected_abs_err.mean(), 1e-6), (name, err.mean())
+
+
+def test_scaled_sign_scale():
+    g = jnp.asarray(np.random.RandomState(6).randn(512), jnp.float32)
+    msg = get_compressor("scaled_sign")(g)
+    assert np.isclose(float(msg.scale), float(jnp.mean(jnp.abs(g))), rtol=1e-5)
+
+
+@given(target=st.floats(0.02, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_budget_bisection_hits_target(target):
+    g = jnp.asarray(np.random.RandomState(7).randn(5000), jnp.float32)
+    b = solve_budget_for_sparsity(g, target)
+    got = float(expected_sparsity(g, b))
+    assert abs(got - target) < 0.02
+
+
+def test_budget_kinds():
+    g = jnp.asarray(np.random.RandomState(8).randn(100), jnp.float32)
+    for kind, val in [("fixed", 2.0), ("linf_share", 1.0), ("l2_norm", 1.0),
+                      ("target_sparsity", 0.3)]:
+        b = resolve_budget(BudgetConfig(kind=kind, value=val), g)
+        assert np.isfinite(float(b)) and float(b) > 0, kind

@@ -1,0 +1,104 @@
+"""FL simulation tests: the paper's §6 claims at test scale."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm import CompressionConfig
+from repro.core.budgets import BudgetConfig
+from repro.data.dirichlet import dirichlet_partition
+from repro.data.synthetic import ImageDataConfig, make_image_dataset
+from repro.fl.models import mlp_fashion
+from repro.fl.rosenbrock import make_heterogeneity, run as run_rosen
+from repro.fl.simulation import FLConfig, run_fl, stack_partitions
+
+
+def test_rosenbrock_paper_claims():
+    """Fig 1: sign wrong-agg ~ 1 & no progress; sparsign < 1/2 & converges."""
+    r_sign = run_rosen("sign", rounds=120, n_sel=100, lr=1e-3)
+    r_sp = run_rosen("sparsign", budget=0.01, rounds=120, n_sel=100, lr=1e-3)
+    assert r_sign.wrong_agg.mean() > 0.9
+    assert r_sp.wrong_agg.mean() < 0.5
+    assert r_sp.values[-1] < r_sp.values[0]
+    assert r_sp.values[-1] < r_sign.values[-1]
+
+
+def test_rosenbrock_worker_sampling_monotone():
+    """Fig 2 / Remark 3: more sampled workers -> lower wrong-aggregation."""
+    wrongs = [run_rosen("sparsign", budget=0.01, rounds=80, n_sel=ns, lr=2e-4).wrong_agg.mean()
+              for ns in (5, 50)]
+    assert wrongs[1] < wrongs[0]
+
+
+def test_heterogeneity_construction():
+    v = make_heterogeneity(100, 80, seed=3)
+    assert np.isclose(v.sum(), 1.0)
+    assert (v < 0).sum() == 80
+
+
+@pytest.fixture(scope="module")
+def fashion_setup():
+    x, y, xt, yt = make_image_dataset(ImageDataConfig(n_train=3000, n_test=600, seed=0))
+    parts = dirichlet_partition(y, n_workers=20, alpha=0.1, seed=0)
+    xp, yp = stack_partitions(x, y, parts)
+    v0, apply_fn = mlp_fashion(jax.random.PRNGKey(0))
+    return xp, yp, xt, yt, v0, apply_fn
+
+
+def _run(fashion_setup, comp, rounds=40, participation=1.0, tau=1, local_lr=0.05,
+         eval_every=None):
+    xp, yp, xt, yt, v0, apply_fn = fashion_setup
+    cfg = FLConfig(n_workers=20, rounds=rounds, participation=participation,
+                   batch_size=64, lr=0.05, local_lr=local_lr, comp=comp,
+                   seed=0, eval_every=eval_every or rounds)
+    return run_fl(v0, apply_fn, cfg, xp, yp, xt, yt)
+
+
+def test_ef_sparsign_learns_under_heterogeneity(fashion_setup):
+    comp = CompressionConfig(compressor="sparsign", budget=BudgetConfig(value=5.0),
+                             server="scaled_sign_ef")
+    res = _run(fashion_setup, comp, rounds=60)
+    assert res["final_acc"] > 0.55, res  # 10 classes, chance = 0.1; reaches ~1.0
+
+
+def test_sparsign_stable_where_sign_oscillates(fashion_setup):
+    """The paper's §6.2 mechanism at test scale: under Dir(0.1) heterogeneity
+    EF-SPARSIGNSGD's accuracy curve is (near-)monotone while deterministic
+    signSGD, lacking magnitude information, is unstable (non-monotone with a
+    large drawdown) — the training-dynamics face of the Fig. 1 divergence."""
+    import numpy as np
+    sp = _run(fashion_setup, CompressionConfig(
+        compressor="sparsign", budget=BudgetConfig(value=5.0),
+        server="scaled_sign_ef"), rounds=60, eval_every=10)
+    sg = _run(fashion_setup, CompressionConfig(compressor="sign",
+              server="majority_vote"), rounds=60, eval_every=10)
+    sp_curve = np.array([a for _, a in sp["acc"]])
+    sg_curve = np.array([a for _, a in sg["acc"]])
+    sp_drawdown = float(np.max(np.maximum.accumulate(sp_curve) - sp_curve))
+    sg_drawdown = float(np.max(np.maximum.accumulate(sg_curve) - sg_curve))
+    assert sp_drawdown <= 0.05, f"sparsign should be stable, drawdown={sp_drawdown}"
+    assert sg_drawdown > sp_drawdown, (sg_drawdown, sp_drawdown)
+    assert sp["final_acc"] > 0.55
+
+
+def test_partial_participation_runs(fashion_setup):
+    comp = CompressionConfig(compressor="sparsign", budget=BudgetConfig(value=1.0),
+                             server="scaled_sign_ef")
+    res = _run(fashion_setup, comp, participation=0.25)
+    assert np.isfinite(res["final_acc"]) and res["final_acc"] > 0.2
+
+
+def test_local_updates_run(fashion_setup):
+    comp = CompressionConfig(compressor="sparsign", budget=BudgetConfig(value=1.0),
+                             server="scaled_sign_ef", local_steps=3, local_budget=10.0)
+    res = _run(fashion_setup, comp, rounds=20, local_lr=0.02)
+    assert np.isfinite(res["final_acc"]) and res["final_acc"] > 0.2
+
+
+def test_bits_accounting_orders_methods(fashion_setup):
+    """sparsign's Golomb-coded uplink must be below 1 bit/coord (sign's cost)."""
+    sp = _run(fashion_setup, CompressionConfig(
+        compressor="sparsign", budget=BudgetConfig(value=1.0), server="scaled_sign_ef"),
+        rounds=10)
+    assert sp["uplink_bits_per_round"] < sp["d"] * 20  # 20 workers x 1 bit/coord

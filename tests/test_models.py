@@ -1,0 +1,248 @@
+"""Model-layer equivalence tests: attention oracles, SSD, MoE, RoPE, loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.attention import chunked_attention, decode_attention, windowed_attention
+from repro.models.mamba2 import MambaDims, mamba_decode_step, mamba_forward, mamba_param_defs, ssd_chunked
+from repro.models.moe import MoEDims, moe_ffn, moe_param_shapes
+from repro.models.model import Model
+from repro.models.rope import apply_mrope, apply_rope
+
+B, S, H, KV, D = 2, 64, 8, 4, 16
+
+
+def _qkv(seed=0):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, KV, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, KV, D), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    return q, k, v, pos
+
+
+def _naive(q, k, v, causal=True, window=None):
+    g = H // KV
+    qg = q.reshape(B, S, KV, g, D) * (D ** -0.5)
+    s_ = jnp.einsum("bqkgd,bckd->bkgqc", qg, k)
+    i = jnp.arange(S)
+    m = jnp.ones((S, S), bool) if not causal else (i[None, :] <= i[:, None])
+    if window is not None:
+        m = m & (i[:, None] - i[None, :] < window)
+    s_ = jnp.where(m[None, None, None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bkgqd", p, v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 7])
+def test_chunked_attention_matches_naive(chunk):
+    q, k, v, pos = _qkv()
+    out = chunked_attention(q, k, v, positions_q=pos, positions_kv=pos,
+                            causal=True, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_naive(q, k, v)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_noncausal_attention():
+    q, k, v, pos = _qkv(1)
+    out = chunked_attention(q, k, v, positions_q=pos, positions_kv=pos,
+                            causal=False, chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_naive(q, k, v, causal=False)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window,q_chunk", [(20, 16), (8, 8), (33, 16)])
+def test_windowed_attention(window, q_chunk):
+    q, k, v, pos = _qkv(2)
+    ref = _naive(q, k, v, window=window)
+    out = windowed_attention(q, k, v, positions=pos, window=window, q_chunk=q_chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+    out2 = chunked_attention(q, k, v, positions_q=pos, positions_kv=pos,
+                             causal=True, window=window, chunk=16)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_full():
+    q, k, v, pos = _qkv(3)
+    ref = _naive(q, k, v)
+    out = decode_attention(q[:, -1:], k, v, pos, pos[:, -1:], chunk=16)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attention_grads_flow():
+    """flash-remat chunk bodies must be differentiable."""
+    q, k, v, pos = _qkv(4)
+
+    def f(q, k, v):
+        return chunked_attention(q, k, v, positions_q=pos, positions_kv=pos,
+                                 causal=True, chunk=16).sum()
+
+    gq, gk, gv = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    for g in (gq, gk, gv):
+        assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.abs(g).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# SSD / Mamba2
+# ---------------------------------------------------------------------------
+
+def _ssd_inputs(seed=0, s=32):
+    dims = MambaDims(d_model=32, d_inner=64, n_heads=4, head_dim=16, d_state=8, chunk=8)
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(B, s, 4, 16) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.randn(B, s, 4), jnp.float32)
+    a_log = jnp.asarray(rng.randn(4) * 0.1, jnp.float32)
+    bm = jnp.asarray(rng.randn(B, s, 8) * 0.5, jnp.float32)
+    cm = jnp.asarray(rng.randn(B, s, 8) * 0.5, jnp.float32)
+    d_skip = jnp.asarray(rng.randn(4), jnp.float32)
+    return dims, x, dt, a_log, bm, cm, d_skip
+
+
+def _ssd_sequential(x, dt, a_log, bm, cm, d_skip):
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    dtf = jax.nn.softplus(dt)
+    a = -jnp.exp(a_log)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dtf[:, t] * a[None, :])
+        upd = jnp.einsum("bhp,bn->bhpn", x[:, t] * dtf[:, t][..., None], bm[:, t])
+        state = state * decay[..., None, None] + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, cm[:, t]) + d_skip[None, :, None] * x[:, t])
+    return jnp.stack(ys, 1), state
+
+
+@pytest.mark.parametrize("s", [32, 17])  # incl. non-chunk-multiple
+def test_ssd_chunked_vs_sequential(s):
+    dims, x, dt, a_log, bm, cm, d_skip = _ssd_inputs(s=s)
+    y_ref, st_ref = _ssd_sequential(x, dt, a_log, bm, cm, d_skip)
+    y, st = ssd_chunked(x, dt, a_log, bm, cm, d_skip, dims)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), rtol=3e-4, atol=3e-4)
+
+
+def test_mamba_forward_vs_decode():
+    dims = MambaDims(d_model=32, d_inner=64, n_heads=4, head_dim=16, d_state=8, chunk=8)
+    rng = np.random.RandomState(1)
+    params = {k: jnp.asarray(rng.randn(*shp) * 0.1, dt)
+              for k, (shp, dt, _) in mamba_param_defs(dims, jnp.float32).items()}
+    h_in = jnp.asarray(rng.randn(B, 32, 32) * 0.5, jnp.float32)
+    out_full, (tail, st_final) = mamba_forward(params, h_in, dims, return_cache=True)
+    cache = (jnp.zeros((B, dims.d_conv - 1, dims.d_inner + 2 * dims.d_state)),
+             jnp.zeros((B, 4, 16, 8)))
+    outs = []
+    for t in range(32):
+        o, cache = mamba_decode_step(params, h_in[:, t:t + 1], cache, dims)
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)), np.asarray(out_full),
+                               rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(cache[1]), np.asarray(st_final), rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(cache[0]), np.asarray(tail), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_gather_equals_dense():
+    dims = MoEDims(n_experts=6, n_experts_padded=8, top_k=2, d_model=16, d_ff=32,
+                   capacity_factor=8.0)
+    rng = np.random.RandomState(2)
+    params = {k: jnp.asarray(rng.randn(*shp) * 0.2, dt)
+              for k, (shp, dt) in moe_param_shapes(dims, 2, jnp.float32).items()}
+    x = jnp.asarray(rng.randn(64, 16) * 0.5, jnp.float32)
+    yg = moe_ffn(params, x, dims, impl="gather")
+    yd = moe_ffn(params, x, dims, impl="dense")
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yd), rtol=3e-4, atol=3e-4)
+
+
+def test_moe_padded_experts_never_selected():
+    dims = MoEDims(n_experts=6, n_experts_padded=8, top_k=2, d_model=16, d_ff=32)
+    rng = np.random.RandomState(3)
+    from repro.models.moe import router_probs
+    w = jnp.asarray(rng.randn(16, 8), jnp.float32)
+    x = jnp.asarray(rng.randn(100, 16), jnp.float32)
+    probs = router_probs(x, w, dims)
+    assert float(probs[:, 6:].max()) == 0.0
+
+
+def test_moe_capacity_drops_tokens():
+    """At capacity_factor << 1, outputs differ from dense (tokens dropped)."""
+    dims = MoEDims(n_experts=4, n_experts_padded=4, top_k=2, d_model=16, d_ff=32,
+                   capacity_factor=0.2)
+    rng = np.random.RandomState(4)
+    params = {k: jnp.asarray(rng.randn(*shp) * 0.2, dt)
+              for k, (shp, dt) in moe_param_shapes(dims, 0, jnp.float32).items()}
+    x = jnp.asarray(rng.randn(256, 16) * 0.5, jnp.float32)
+    yg = moe_ffn(params, x, dims, impl="gather")
+    yd = moe_ffn(params, x, dims, impl="dense")
+    assert float(jnp.abs(yg - yd).max()) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def test_mrope_reduces_to_rope_on_text():
+    """When t==h==w positions (text tokens), M-RoPE == standard RoPE."""
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(2, 16, 4, 16), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16)).astype(jnp.int32)
+    pos3 = jnp.broadcast_to(pos[..., None], (2, 16, 3))
+    a = apply_rope(x, pos)
+    b = apply_mrope(x, pos3, sections=(4, 2, 2))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE inner products depend only on relative positions."""
+    rng = np.random.RandomState(6)
+    q = jnp.asarray(rng.randn(1, 8, 1, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 8, 1, 16), jnp.float32)
+    pos = jnp.arange(8)[None].astype(jnp.int32)
+    s1 = jnp.einsum("bqhd,bkhd->bqk", apply_rope(q, pos), apply_rope(k, pos))
+    s2 = jnp.einsum("bqhd,bkhd->bqk", apply_rope(q, pos + 100), apply_rope(k, pos + 100))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def test_chunked_loss_matches_full_softmax():
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab_size=50, loss_chunk=8,
+                      dtype="float32", remat=False)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    h = jnp.asarray(rng.randn(2, 24, 16), jnp.float32)
+    labels = jnp.asarray(rng.randint(0, 50, (2, 24)), jnp.int32)
+    got = float(m.head_loss(params, h, labels))
+    logits = h @ np.asarray(m.head_weight(params))
+    logz = jax.scipy.special.logsumexp(jnp.asarray(logits), axis=-1)
+    tgt = np.take_along_axis(np.asarray(logits), np.asarray(labels)[..., None], axis=-1)[..., 0]
+    want = float(jnp.mean(logz - tgt))
+    assert abs(got - want) < 1e-4
+
+
+def test_loss_label_masking():
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab_size=50, loss_chunk=8,
+                      dtype="float32", remat=False)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    h = jnp.asarray(np.random.RandomState(8).randn(1, 16, 16), jnp.float32)
+    labels = jnp.asarray(np.random.RandomState(9).randint(0, 50, (1, 16)), jnp.int32)
+    masked = labels.at[:, 8:].set(-1)
+    l_full = float(m.head_loss(params, h, labels))
+    l_mask = float(m.head_loss(params, h, masked))
+    l_first = float(m.head_loss(params, h[:, :8], labels[:, :8]))
+    assert abs(l_mask - l_first) < 1e-4
+    assert abs(l_mask - l_full) > 1e-6

@@ -1,0 +1,125 @@
+"""Serving-path tests: prefill->decode continuation equals full forward, ring
+caches bound window memory, serve builders produce working jits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.serve.decode import build_decode_step, build_prefill
+
+
+def _batch(cfg, b, s, seed=0):
+    rng = np.random.RandomState(seed)
+    out = {
+        "inputs": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "positions": jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32),
+    }
+    if cfg.input_kind != "tokens":
+        out["inputs"] = jnp.asarray(rng.randn(b, s, cfg.d_model) * 0.3, cfg.activation_dtype)
+    if cfg.mrope:
+        out["positions3"] = jnp.broadcast_to(out["positions"][..., None], (b, s, 3))
+    return out
+
+
+# rel-error tolerance per arch: attention-only paths are numerically identical
+# up to summation order; mamba/windowed-ring paths legitimately differ between
+# the chunked-scan (training/prefill) and sequential-recurrence (decode)
+# formulations — percent-level after 8 stacked layers (exactness of each
+# mechanism in isolation is pinned at ~1e-6 in test_models.py).
+_SERVE_TOL = {"qwen2-moe-a2.7b": 3e-3, "gemma3-27b": 5e-2, "jamba-1.5-large-398b": 1.5e-1}
+
+
+@pytest.mark.parametrize("arch", list(_SERVE_TOL))
+def test_prefill_then_decode_equals_full_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+    _, caches = jax.jit(m.prefill)(params, batch)
+    nxt = jnp.asarray([[3], [4]], jnp.int32)
+    dec = {"inputs": nxt, "positions": jnp.full((b, 1), s, jnp.int32)}
+    if cfg.mrope:
+        dec["positions3"] = jnp.full((b, 1, 3), s, jnp.int32)
+    logits_dec, _ = jax.jit(m.decode_step)(params, caches, dec)
+
+    full = _batch(cfg, b, s + 1)
+    full["inputs"] = jnp.concatenate([batch["inputs"], nxt], axis=1)
+    h = m.forward_hidden(params, full)
+    logits_full = (h[:, -1] @ m.head_weight(params)).astype(jnp.float32)
+    rel = float(jnp.max(jnp.abs(logits_dec - logits_full)) / jnp.max(jnp.abs(logits_full)))
+    assert rel < _SERVE_TOL[arch], (arch, rel)
+    # the decision-level invariant holds exactly: same next token
+    assert bool(jnp.all(jnp.argmax(logits_dec, -1) == jnp.argmax(logits_full, -1)))
+
+
+def test_ring_cache_bounds_window_memory():
+    """Windowed layers allocate min(window, max_len) slots, not max_len."""
+    cfg = get_config("gemma3-27b", smoke=True)  # window=8 in smoke cfg
+    m = Model(cfg)
+    shapes = m.cache_shapes(batch_size=2, max_len=1024)
+    # pattern positions 0..4 are windowed (w=8), position 5 is global
+    windowed = shapes["body"][0]["k"].shape
+    global_ = shapes["body"][5]["k"].shape
+    assert windowed[2] == 8, windowed
+    assert global_[2] == 1024, global_
+
+
+def test_ring_cache_decode_beyond_window():
+    """Decoding past the window stays correct (ring overwrite) on a windowed model."""
+    from repro.configs.base import LayerSpec, ModelConfig
+    cfg = ModelConfig(name="w", family="dense", n_layers=2, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=64, vocab_size=64,
+                      pattern=(LayerSpec(mixer="attn", window=6),), dtype="float32",
+                      attn_chunk=8, q_chunk=8, loss_chunk=8, remat=False)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    b, s_total = 1, 20
+    rng = np.random.RandomState(2)
+    toks = jnp.asarray(rng.randint(0, 64, (b, s_total)), jnp.int32)
+    # decode step-by-step through a ring cache of 6 slots
+    caches = m.init_cache(b, max_len=s_total)
+    logits_steps = []
+    for t in range(s_total - 1):
+        dec = {"inputs": toks[:, t:t + 1], "positions": jnp.full((b, 1), t, jnp.int32)}
+        logits, caches = m.decode_step(params, caches, dec)
+        logits_steps.append(logits)
+    # full forward reference at the last position
+    full = {"inputs": toks[:, :-1],
+            "positions": jnp.broadcast_to(jnp.arange(s_total - 1), (b, s_total - 1)).astype(jnp.int32)}
+    h = m.forward_hidden(params, full)
+    ref = (h[:, -1] @ m.head_weight(params)).astype(jnp.float32)
+    err = float(jnp.max(jnp.abs(logits_steps[-1] - ref)))
+    assert err < 5e-3, err
+
+
+def test_serve_builders_run_on_host_mesh():
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    m = Model(cfg)
+    mesh = make_host_mesh(1, 1)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 8)
+    prefill = build_prefill(m, mesh, worker_axes=("data",))
+    logits, caches = prefill(params, batch)
+    assert logits.shape == (2, cfg.vocab_size)
+    decode = build_decode_step(m, mesh, worker_axes=("data",))
+    dec = {"inputs": jnp.asarray([[1], [2]], jnp.int32),
+           "positions": jnp.full((2, 1), 8, jnp.int32)}
+    logits2, _ = decode(params, caches, dec)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_encoder_prefill_builder():
+    cfg = get_config("hubert-xlarge", smoke=True)
+    m = Model(cfg)
+    mesh = make_host_mesh(1, 1)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 8)
+    fwd = build_prefill(m, mesh, worker_axes=("data",))
+    loss = fwd(params, batch)
+    assert bool(jnp.isfinite(loss))

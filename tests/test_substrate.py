@@ -1,0 +1,193 @@
+"""Substrate tests: EF boundedness (Lemma 2), PRNG quality, encoding (Eq. 12),
+checkpointing, data pipelines, worker sampling."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prng
+from repro.core.aggregation import alpha_of_scaled_sign, scaled_sign_server
+from repro.core.encoding import (baseline_bits_per_round, golomb_bits_per_index,
+                                 golomb_bstar, round_bits, ternary_stream_bits)
+from repro.core.error_feedback import ef_server_step, init_ef
+from repro.data.dirichlet import dirichlet_partition, heterogeneity_stats
+from repro.data.synthetic import LMStreamConfig, lm_batch, make_image_dataset, ImageDataConfig
+from repro.train import checkpoint as ckpt
+from repro.train.sampling import participation_mask, round_seed
+from repro.train.state import TrainState
+
+
+# ---------------------------------------------------------------------------
+# Error feedback (Lemma 2)
+# ---------------------------------------------------------------------------
+
+def test_ef_residual_bounded():
+    """||e_t||^2 stays bounded over many rounds (Lemma 2)."""
+    rng = np.random.RandomState(0)
+    d = 2048
+    state = init_ef(jnp.zeros(d))
+    norms = []
+    for t in range(200):
+        delta = jnp.asarray(np.sign(rng.randn(d)) * rng.rand(d), jnp.float32)
+        _, state = ef_server_step(state, delta)
+        norms.append(float(jnp.sum(state.residual ** 2)))
+    # bounded: the last 100 rounds don't grow
+    assert max(norms[100:]) < 4.0 * max(norms[:100]) + 1e-6
+    assert np.isfinite(norms[-1])
+
+
+def test_scaled_sign_is_alpha_approximate():
+    """||C(x) - x||^2 <= (1 - alpha) ||x||^2 with alpha = ||x||_1^2/(d ||x||_2^2)."""
+    rng = np.random.RandomState(1)
+    for _ in range(10):
+        x = jnp.asarray(rng.randn(512) * rng.rand(), jnp.float32)
+        cx = scaled_sign_server(x)
+        alpha = float(alpha_of_scaled_sign(x))
+        assert 0.0 < alpha <= 1.0 + 1e-6
+        lhs = float(jnp.sum((cx - x) ** 2))
+        rhs = (1.0 - alpha) * float(jnp.sum(x ** 2))
+        assert lhs <= rhs + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# PRNG quality
+# ---------------------------------------------------------------------------
+
+def test_prng_uniformity():
+    u = np.asarray(prng.uniform01(123, jnp.arange(200000, dtype=jnp.uint32)))
+    assert abs(u.mean() - 0.5) < 0.005
+    assert abs(np.mean(u < 0.25) - 0.25) < 0.01
+    # serial correlation
+    assert abs(np.corrcoef(u[:-1], u[1:])[0, 1]) < 0.01
+
+
+def test_prng_seed_independence():
+    c = jnp.arange(100000, dtype=jnp.uint32)
+    u1 = np.asarray(prng.uniform01(1, c))
+    u2 = np.asarray(prng.uniform01(2, c))
+    assert abs(np.corrcoef(u1, u2)[0, 1]) < 0.01
+
+
+def test_fold_seed_distinct():
+    seeds = {int(prng.fold_seed(42, i, j)) for i in range(20) for j in range(20)}
+    assert len(seeds) == 400
+
+
+# ---------------------------------------------------------------------------
+# Encoding (Eq. 12)
+# ---------------------------------------------------------------------------
+
+def test_golomb_formula():
+    # sparser streams need more bits per index; b* is nonnegative and monotone
+    assert golomb_bstar(0.5) >= 0
+    assert golomb_bstar(0.01) > golomb_bstar(0.2)
+    assert golomb_bits_per_index(0.01) > golomb_bits_per_index(0.1) > golomb_bits_per_index(0.5)
+
+
+@given(p=st.floats(0.001, 0.6))
+@settings(max_examples=30, deadline=None)
+def test_golomb_beats_naive_for_sparse(p):
+    d = 100000
+    nnz = max(1, int(p * d))
+    g = ternary_stream_bits(d, nnz, coder="golomb")
+    naive = ternary_stream_bits(d, nnz, coder="naive_index")
+    assert g <= naive * 1.05
+
+
+def test_round_bits_downlink_modes():
+    d, nnz, m = 10000, 500, 100
+    free = round_bits(d, nnz, m, downlink="free")
+    sign = round_bits(d, nnz, m, downlink="sign")
+    assert sign == free + d
+
+
+def test_baseline_bits():
+    d = 1000
+    assert baseline_bits_per_round(d, "sign") == d
+    assert baseline_bits_per_round(d, "identity") == 32 * d
+    assert baseline_bits_per_round(d, "sparsign", nnz=100) < d  # sparser than 1 bit/coord
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing / fault tolerance
+# ---------------------------------------------------------------------------
+
+def _tiny_state(seed=0):
+    rng = np.random.RandomState(seed)
+    return TrainState(
+        params={"a": jnp.asarray(rng.randn(4, 8), jnp.float32),
+                "b": (jnp.asarray(rng.randn(3), jnp.bfloat16),)},
+        ef_residual=None,
+        step=jnp.int32(7), seed=jnp.uint32(42))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = _tiny_state()
+    ckpt.save(str(tmp_path), 7, state)
+    restored, manifest = ckpt.restore(str(tmp_path), state)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_rotation_and_latest(tmp_path):
+    state = _tiny_state()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, state, keep=2)
+    assert ckpt.latest_steps(str(tmp_path)) == [4, 5]
+
+
+def test_checkpoint_structure_mismatch_rejected(tmp_path):
+    state = _tiny_state()
+    ckpt.save(str(tmp_path), 1, state)
+    other = TrainState(params={"a": state.params["a"]}, ef_residual=None,
+                       step=state.step, seed=state.seed)
+    with pytest.raises(AssertionError):
+        ckpt.restore(str(tmp_path), other)
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    state = _tiny_state()
+    ckpt.save(str(tmp_path), 3, state)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Data pipelines
+# ---------------------------------------------------------------------------
+
+def test_lm_batch_deterministic():
+    cfg = LMStreamConfig(vocab_size=1000, seq_len=32, global_batch=4, seed=9)
+    a, b = lm_batch(cfg, 5), lm_batch(cfg, 5)
+    assert np.array_equal(a["inputs"], b["inputs"])
+    c = lm_batch(cfg, 6)
+    assert not np.array_equal(a["inputs"], c["inputs"])
+    assert a["inputs"].max() < 1000 and a["inputs"].min() >= 0
+
+
+def test_dirichlet_partition_covers_and_skews():
+    x, y, _, _ = make_image_dataset(ImageDataConfig(n_train=2000, n_test=10))
+    parts = dirichlet_partition(y, n_workers=20, alpha=0.1, seed=0)
+    stats = heterogeneity_stats(y, parts)
+    assert stats["mean_label_entropy"] < 0.75 * stats["max_entropy"], "alpha=0.1 must skew"
+    parts_iid = dirichlet_partition(y, n_workers=20, alpha=100.0, seed=0)
+    stats_iid = heterogeneity_stats(y, parts_iid)
+    assert stats_iid["mean_label_entropy"] > stats["mean_label_entropy"]
+
+
+# ---------------------------------------------------------------------------
+# Worker sampling
+# ---------------------------------------------------------------------------
+
+def test_participation_rate_and_determinism():
+    rs = round_seed(123, 0)
+    hits = [bool(participation_mask(rs, 0, w, 0.3)) for w in range(2000)]
+    rate = np.mean(hits)
+    assert abs(rate - 0.3) < 0.05
+    hits2 = [bool(participation_mask(rs, 0, w, 0.3)) for w in range(2000)]
+    assert hits == hits2
+    assert bool(participation_mask(rs, 0, 5, 1.0)) is True

@@ -1,0 +1,70 @@
+"""Executable theory: Theorem 1 bound vs Monte-Carlo, Corollary 1, Thm 2 kappa."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import theory
+
+
+def _hetero_u(m=100, n_neg=80, seed=0):
+    rng = np.random.RandomState(seed)
+    neg = -rng.uniform(0.005, 0.015, n_neg)
+    pos = rng.uniform(0.05, 0.15, m - n_neg)
+    u = np.concatenate([neg, pos])
+    rng.shuffle(u)
+    return jnp.asarray(u, jnp.float32)
+
+
+def test_theorem1_bound_holds():
+    """MC wrong-aggregation probability <= the Thm 1 closed form."""
+    u = _hetero_u()
+    for budget in (0.5, 2.0, 5.0):
+        p_bar, q_bar = theory.sparsign_pq(u, budget)
+        assert float(q_bar) > float(p_bar), "magnitude-aware voting must favor truth"
+        bound = float(theory.wrong_aggregation_bound(p_bar, q_bar, u.shape[0]))
+        mc = float(theory.monte_carlo_wrong_aggregation(
+            jax.random.PRNGKey(0), u, budget, n_trials=4000))
+        assert mc <= bound + 0.02, (budget, mc, bound)
+
+
+def test_theorem1_bound_nontrivial():
+    """For reasonable budgets the bound itself is < 1/2 at M=100 (Remark 1)."""
+    u = _hetero_u()
+    p_bar, q_bar = theory.sparsign_pq(u, 5.0)
+    assert float(theory.wrong_aggregation_bound(p_bar, q_bar, 100)) < 0.5
+
+
+def test_deterministic_sign_fails():
+    """With 80/100 wrong signs, deterministic sign has p_bar > q_bar: the Thm 1
+    premise fails, and empirically the vote is (nearly) always wrong."""
+    u = _hetero_u()
+    p_bar, q_bar = theory.deterministic_sign_pq(u)
+    assert float(p_bar) > float(q_bar)
+
+    # direct: majority of signs is wrong
+    s = float(jnp.sign(jnp.mean(u)))
+    wrong_heads = float(jnp.mean((jnp.sign(u) != s).astype(jnp.float32)))
+    assert wrong_heads > 0.5
+
+
+def test_worker_sampling_scales_pq():
+    """Cor. 1: p_select multiplies both p_bar and q_bar; bound worsens as p_s drops."""
+    u = _hetero_u()
+    p1, q1 = theory.sparsign_pq(u, 1.0, p_select=1.0)
+    p2, q2 = theory.sparsign_pq(u, 1.0, p_select=0.5)
+    assert np.isclose(float(p2), 0.5 * float(p1), rtol=1e-5)
+    assert np.isclose(float(q2), 0.5 * float(q1), rtol=1e-5)
+    b1 = float(theory.wrong_aggregation_bound(p1, q1, 100))
+    b2 = float(theory.wrong_aggregation_bound(p2, q2, 100))
+    assert b2 >= b1  # fewer expected voters => weaker guarantee (Remark 3)
+
+
+def test_kappa_below_half_and_monotone_in_m():
+    u = _hetero_u()
+    k100 = float(theory.kappa(u, budget=5.0))
+    assert k100 < 0.5
+    k10 = float(theory.kappa(u[:10], budget=5.0))
+    # kappa -> 0 as M grows (Remark 5)
+    assert k100 <= k10 + 1e-6
