@@ -133,10 +133,12 @@ def terngrad(g, *, budget=None, seed=0, counter_base=0, shared_max: Optional[jnp
     return CompressedGrad(values=vals, scale=jnp.asarray(s_t, jnp.float32))
 
 
-def qsgd(g, *, s: int, seed=0, counter_base=0) -> CompressedGrad:
+def qsgd(g, *, s: int, budget=None, seed=0, counter_base=0) -> CompressedGrad:
     """Full QSGD with s quantization levels (Appendix B Eq. 42-43). Used by the
     FedCom baseline (8-bit => s = 2**8 - 1 levels). Payload is int8-like small ints
-    times scale/s; we keep values as int32 level*sign for exact bit accounting."""
+    times scale/s; we keep values as int32 level*sign for exact bit accounting.
+    ``budget`` is accepted (and ignored) for registry-signature compatibility —
+    the level count s, not a magnitude budget, sets this family's rate."""
     gf = g.astype(jnp.float32)
     norm = jnp.maximum(jnp.linalg.norm(gf.reshape(-1)), 1e-12)
     r = jnp.abs(gf) * (s / norm)
@@ -165,6 +167,7 @@ COMPRESSORS: dict[str, Callable] = {
     "qsgd_1bit_l2": qsgd_1bit_l2,
     "qsgd_1bit_linf": qsgd_1bit_linf,
     "terngrad": terngrad,
+    "qsgd8": partial(qsgd, s=255),   # FedCom 8-bit baseline: 2**8 - 1 levels
     "identity": identity,
 }
 

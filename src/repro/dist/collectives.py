@@ -1,0 +1,98 @@
+"""Worker-axis collectives for the vote exchange (Algorithm 1 step 3).
+
+The paper's M workers are the devices along the mesh worker axes ('pod',
+'data'). Each worker holds an int8 ternary message per gradient leaf; the
+server sum is a collective over those axes, computed redundantly on every
+worker so the downlink is free. Three wire-equivalent variants:
+
+- ``vote_psum``:             one integer psum — the production default.
+- ``vote_psum_hier``:        two-level psum (int8 within a pod, widened
+                             across pods) matching the hierarchical wire
+                             model in benchmarks/bench_collectives.py.
+- ``vote_allgather_packed``: all-gather of 2-bit-packed votes (the
+                             kernels/pack2bit wire format) + local decode-sum;
+                             costs M*d/4 bytes on the wire, honest about the
+                             "no integer reduction on the fabric" regime.
+
+All three return the same per-coordinate vote total; the equivalence is
+pinned by tests/mdev/check_collectives.py on a forced 8-device host mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compat
+
+
+def axis_size(name) -> int:
+    """Static size of a named mesh axis (valid inside shard_map)."""
+    return compat.axis_size(name)
+
+
+def worker_count(axes: Sequence[str]) -> int:
+    """M = product of the worker-axis sizes (static)."""
+    n = 1
+    for a in axes:
+        n *= compat.axis_size(a)
+    return n
+
+
+def worker_index(axes: Sequence[str]) -> jnp.ndarray:
+    """This worker's flat index in [0, M): row-major over ``axes`` order."""
+    idx = None
+    for a in axes:
+        i = jax.lax.axis_index(a)
+        idx = i if idx is None else idx * compat.axis_size(a) + i
+    return idx
+
+
+def _sum_dtype(n_workers: int):
+    """Smallest int dtype holding ternary-vote sums in [-M, M] — the psum
+    payload dtype IS the wire format, so don't widen beyond need."""
+    if n_workers <= 127:
+        return jnp.int8
+    if n_workers <= 32767:
+        return jnp.int16
+    return jnp.int32
+
+
+def vote_psum(votes: jnp.ndarray, axes: Sequence[str], n_workers: int) -> jnp.ndarray:
+    """Integer psum of ternary votes over the worker axes."""
+    return jax.lax.psum(votes.astype(_sum_dtype(int(n_workers))), tuple(axes))
+
+
+def vote_psum_hier(votes: jnp.ndarray, inner_axis: str, outer_axis: str,
+                   inner_size: int, outer_size: int) -> jnp.ndarray:
+    """Two-level vote sum: int8-narrow within the fast inner domain ('data',
+    intra-pod ICI), widened only for the slow outer hop ('pod', DCN). Equal to
+    the flat psum; the wire ledger differs (1 B/coord inner + 2 B/coord outer
+    vs 1-4 B/coord flat, cf. bench_collectives.wire_model)."""
+    inner = jax.lax.psum(votes.astype(_sum_dtype(int(inner_size))), inner_axis)
+    total = int(inner_size) * int(outer_size)
+    return jax.lax.psum(inner.astype(_sum_dtype(total)), outer_axis)
+
+
+def vote_allgather_packed(votes: jnp.ndarray, axes: Sequence[str],
+                          n_workers: int) -> jnp.ndarray:
+    """All-gather of 2-bit-packed votes + local decode-sum.
+
+    Wire bytes = M * ceil(d/4) per device (vs the psum's reduced payload) —
+    the trade the paper's Table reports for fabrics without int reductions.
+    Packing uses the pack2bit kernel's canonical block-interleaved format;
+    decode is the pure-jnp oracle vmapped over workers (gathered bytes are
+    small by construction, and the unpack is bandwidth-trivial).
+    """
+    from repro.kernels import common as kcommon
+    from repro.kernels.pack2bit.ops import pack2bit_op
+    from repro.kernels.pack2bit.ref import unpack2bit_ref
+
+    packed = pack2bit_op(votes.astype(jnp.int8))          # (rows, LANES//4) u8
+    gathered = jax.lax.all_gather(packed, tuple(axes), axis=0, tiled=False)
+    ternary = jax.vmap(unpack2bit_ref)(gathered)          # (M, rows, LANES) i8
+    total = jnp.sum(ternary.astype(jnp.int32), axis=0)
+    total = kcommon.from_2d(total, votes.size, votes.shape)
+    return total.astype(_sum_dtype(int(n_workers)))

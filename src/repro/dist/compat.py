@@ -1,0 +1,100 @@
+"""Version bridge to the modern jax sharding API.
+
+The reproduction is written against the current API surface — ``jax.shard_map``
+with ``axis_names``/``check_vma``, ``jax.sharding.set_mesh``, meshes carrying
+``AxisType``, the two-argument ``AbstractMesh`` constructor and
+``jax.lax.axis_size`` — but the pinned container ships jax 0.4.37 which has
+none of them. Every helper here feature-detects at call time, so the same
+call sites run correct (if not always maximally parallel) on both.
+
+Old-jax (0.4.x) fallbacks, and what they cost:
+
+- ``shard_map``: ``jax.experimental.shard_map`` with ALL mesh axes manual.
+  Partial-manual lowering (``auto=...``) is broken in jaxlib 0.4.36 on the
+  host platform — ``axis_index`` lowers to a PartitionId op the SPMD
+  partitioner rejects, and all-gather trips an ``IsManualSubgroup`` check
+  abort — so the non-worker axes are taken manual too. Parameters replicated
+  over 'model' then compute redundantly per model-rank: results are bitwise
+  identical to the partial-auto program, but there is no TP compute split on
+  old jax. New jax re-engages GSPMD over the auto axes automatically.
+- ``set_mesh``: the mesh's own context manager (resource env), which is what
+  makes bare-PartitionSpec ``with_sharding_constraint`` resolve on 0.4.x.
+- ``make_mesh``/``abstract_mesh``: drop ``axis_types`` / use the
+  (name, size)-pairs constructor.
+- ``axis_size``: ``jax.core.axis_frame(name)``, which on 0.4.37 returns the
+  static axis size from the ambient axis env.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_SET_MESH = hasattr(jax.sharding, "set_mesh")
+HAS_ABSTRACT_MESH_CTX = hasattr(jax.sharding, "get_abstract_mesh")
+HAS_LAX_AXIS_SIZE = hasattr(jax.lax, "axis_size")
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """jax.make_mesh with explicit-Auto axis types where supported."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names), devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), devices=devices)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """AbstractMesh under both the (sizes, names) and (name,size)-pairs ctors."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Ambient-mesh context: jax.sharding.set_mesh, or the 0.4.x resource env."""
+    if HAS_SET_MESH:
+        with jax.sharding.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=True):
+    """jax.shard_map, or the jax.experimental fallback (see module docstring).
+
+    ``axis_names`` is the set of manual axes; the rest of the mesh is auto
+    (GSPMD) on new jax and — of necessity — manual on 0.4.x.
+    """
+    if HAS_NEW_SHARD_MAP:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def axis_size(name) -> int:
+    """Static size of a named (manual) mesh axis inside shard_map."""
+    if HAS_LAX_AXIS_SIZE:
+        return jax.lax.axis_size(name)
+    return jax.core.axis_frame(name)
+
+
+def manual_axis_names() -> frozenset:
+    """Names of the manual mesh axes of the current trace (empty outside
+    shard_map). Used to gate sharding hints: a constraint naming a manual
+    axis is an error, and on 0.4.x every shard_map axis is manual."""
+    try:
+        return frozenset(jax.core.unsafe_get_axis_names_DO_NOT_USE())
+    except Exception:  # noqa: BLE001 — introspection-only; absence means "none"
+        return frozenset()

@@ -1,0 +1,181 @@
+"""Logical-axis -> mesh sharding rules and placement builders.
+
+Model code names *logical* axes ("vocab", "heads", "ff", "expert", "batch",
+"seq"); this module owns the mapping onto the production mesh axes
+('pod', 'data' = the paper's workers; 'model' = TP/EP/SP) and the sanitizer
+that nulls any placement the actual dims cannot honor. Everything downstream
+— the train steps' activation hints, the serve builders' param/cache
+placement, the dry-run's input specs — derives from these tables, so a rule
+change here re-shards the whole system coherently.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# Parameter placement (Megatron TP / EP): every feature-parallel logical axis
+# maps onto 'model'. Conflicts on one tensor (e.g. an expert x ff weight) are
+# resolved by sanitize_spec's last-wins dedup, matching hint()'s convention.
+TP_RULES: Mapping[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "ff": "model",
+    "expert": "model",
+}
+
+# Training activations: batch over the worker axis (dropped by the train steps
+# for axes they take manual), sequence between blocks and features inside them
+# over 'model' (Megatron-style SP; hint()'s last-wins keeps the feature axis
+# when both appear on one tensor).
+ACT_RULES_TRAIN: Mapping[str, Optional[str]] = {
+    "batch": "data",
+    "seq": "model",
+    "heads": "model",
+    "ff": "model",
+    "expert": "model",
+    "vocab": "model",
+}
+
+# Serving activations: decode works on [B, 1] tokens — no sequence axis worth
+# sharding (the cache depth is placed by cache_shardings_tree instead); batch
+# rides the worker axes, which the serve builders override per deployment.
+ACT_RULES_SERVE: Mapping[str, Optional[str]] = {
+    "batch": "data",
+    "seq": None,
+    "heads": "model",
+    "ff": "model",
+    "expert": "model",
+    "vocab": "model",
+}
+
+
+# ---------------------------------------------------------------------------
+# Spec construction / sanitation
+# ---------------------------------------------------------------------------
+
+def logical_to_spec(logical: Sequence[Optional[str]],
+                    rules: Mapping[str, Optional[str]] = TP_RULES) -> P:
+    """Map a tuple of logical axis names to a mesh PartitionSpec.
+
+    Unknown / None axes stay unsharded. The result is *raw*: it may repeat a
+    mesh axis or not divide the dims — run it through sanitize_spec against
+    the concrete shape before building a sharding.
+    """
+    return P(*(rules.get(name) if name is not None else None for name in logical))
+
+
+def _entry_names(entry) -> tuple:
+    """Mesh-axis names of one spec entry (scalar, tuple, or list)."""
+    return tuple(entry) if isinstance(entry, (list, tuple)) else (entry,)
+
+
+def sanitize_spec(spec: P, dims: Sequence[int], mesh) -> P:
+    """Null out spec entries the dims cannot honor; dedup repeated mesh axes.
+
+    Per dim: the mesh-axis product (tuple entries multiply) must divide a
+    positive dim, else the entry is replaced by None — sharding a zero-size
+    dim or leaving ragged shards is never worth a partial placement. A mesh
+    axis claimed by several dims keeps only its LAST occurrence (feature dims
+    trail batch/sequence dims in our layouts — same convention as hint()).
+    Works on Mesh and AbstractMesh: only ``mesh.shape`` is consulted.
+    """
+    sizes = dict(mesh.shape)
+    out = []
+    for i, dim in enumerate(dims):
+        entry = spec[i] if i < len(spec) else None
+        if entry is None:
+            out.append(None)
+            continue
+        names = _entry_names(entry)
+        if len(set(names)) != len(names):  # axis repeated inside one dim
+            out.append(None)
+            continue
+        size = 1
+        for name in names:
+            size *= sizes[name]
+        out.append(entry if dim > 0 and dim % size == 0 else None)
+    last = {}
+    for i, entry in enumerate(out):
+        if entry is None:
+            continue
+        for name in _entry_names(entry):
+            if name in last:
+                out[last[name]] = None
+            last[name] = i
+    return P(*out)
+
+
+def _is_logical(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree placements
+# ---------------------------------------------------------------------------
+
+def tp_param_specs(model, mesh):
+    """PartitionSpec tree for TP parameter placement (params replicated over
+    the worker axes, feature axes over 'model', sanitized per leaf)."""
+    shapes = model.param_shapes()
+    logical = model.param_logical_axes()
+    lg_leaves, treedef = jax.tree_util.tree_flatten(logical, is_leaf=_is_logical)
+    sh_leaves = treedef.flatten_up_to(shapes)
+    specs = [sanitize_spec(logical_to_spec(lg), s.shape, mesh)
+             for lg, s in zip(lg_leaves, sh_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tp_param_shardings(model, mesh):
+    """NamedSharding tree placing params for the simple trainer / TP serving."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), tp_param_specs(model, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# Decode-cache leaf layouts, positions counted from the END so the same entry
+# serves stacked (leading superblock-repeat axis) and unstacked (tail) leaves.
+_CACHE_LAYOUT = {
+    "k": {"batch": -4, "seq": -3, "heads": -2},
+    "v": {"batch": -4, "seq": -3, "heads": -2},
+    "pos": {"batch": -2, "seq": -1},
+    "conv": {"batch": -3},            # mamba conv tail: no shardable seq axis
+    "state": {"batch": -4, "heads": -3},
+}
+
+
+def cache_shardings_tree(cache_shapes, mesh, *, worker_axes: Sequence[str] = ("data",),
+                         shard_seq: bool = False):
+    """NamedSharding tree for a decode-cache pytree.
+
+    Default: batch over the worker axes, kv-heads over 'model'. With
+    ``shard_seq`` (long-context, batch < workers) the cache *sequence* axis is
+    sharded over the worker axes instead and batch stays replicated — GSPMD
+    then inserts the distributed-softmax reductions. Every placement is
+    sanitized against the leaf's dims, so non-dividing head counts or window
+    sizes degrade to replication rather than erroring.
+    """
+    wa = tuple(worker_axes)
+    wa_entry = wa if len(wa) > 1 else wa[0]
+
+    def one(path, sds):
+        name = path[-1].key
+        layout = _CACHE_LAYOUT[name]
+        rank = len(sds.shape)
+        spec = [None] * rank
+        if shard_seq:
+            if "seq" in layout:
+                spec[rank + layout["seq"]] = wa_entry
+        else:
+            spec[rank + layout["batch"]] = wa_entry
+        if "heads" in layout:
+            spec[rank + layout["heads"]] = "model"
+        return NamedSharding(mesh, sanitize_spec(P(*spec), sds.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

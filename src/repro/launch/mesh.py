@@ -4,17 +4,20 @@ A FUNCTION (not a module-level constant) so importing this module never touches
 jax device state. Single pod: (16, 16) = 256 chips ('data', 'model'); multi-pod
 adds the leading 'pod' axis: (2, 16, 16) = 512 chips. The ('pod', 'data') axes
 are the paper's workers; 'model' carries TP/EP/SP.
+
+Meshes come from repro.dist.compat so the Auto axis types are attached on jax
+versions that carry them and silently dropped on the pinned 0.4.x.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.dist import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def worker_axes_of(mesh) -> tuple:
@@ -24,5 +27,4 @@ def worker_axes_of(mesh) -> tuple:
 
 def make_host_mesh(data: int = 4, model: int = 2):
     """Small mesh for host-device tests (8 forced CPU devices)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))

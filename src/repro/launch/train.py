@@ -19,6 +19,7 @@ from repro.configs.registry import ARCH_IDS, get_config, trainer_mode
 from repro.core.algorithm import CompressionConfig
 from repro.core.budgets import BudgetConfig
 from repro.data.synthetic import LMStreamConfig, lm_batch
+from repro.dist import compat
 from repro.launch.mesh import make_host_mesh, make_production_mesh, worker_axes_of
 from repro.models.model import Model
 from repro.train import loop as loop_lib
@@ -113,7 +114,7 @@ def main(argv=None):
     cfg, model, mesh, step, state, comp = build_everything(args)
     lcfg = loop_lib.LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                                ckpt_every=args.ckpt_every, fail_at_step=args.fail_at)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state, history = loop_lib.run(step, state, batch_fn_for(cfg, args), lcfg)
     if args.history_out:
         with open(args.history_out, "w") as f:

@@ -33,7 +33,7 @@ from repro.core import prng
 from repro.core.algorithm import CompressionConfig
 from repro.core.budgets import resolve_budget
 from repro.core.compressors import get_compressor
-from repro.dist import collectives
+from repro.dist import collectives, compat
 from repro.dist.sharding import ACT_RULES_TRAIN
 from repro.models.common import axis_rules
 from repro.train import sampling
@@ -71,7 +71,7 @@ def _vote(values: jnp.ndarray, step_cfg: TrainStepConfig, n_workers: int) -> jnp
     if step_cfg.vote_impl == "hier" and len(axes) == 2:
         return collectives.vote_psum_hier(
             values, axes[1], axes[0],
-            jax.lax.axis_size(axes[1]), jax.lax.axis_size(axes[0]))
+            collectives.axis_size(axes[1]), collectives.axis_size(axes[0]))
     if step_cfg.vote_impl == "allgather_packed":
         return collectives.vote_allgather_packed(values, axes, n_workers)
     return collectives.vote_psum(values, axes, n_workers)
@@ -170,12 +170,17 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
                     dec = jnp.where(mask, dec, 0.0)
                     upd = jax.lax.psum(dec, axes) / jnp.maximum(n_sel, 1.0)
                     new_ef = ef
-            else:  # identity / full-precision DP baseline
+            else:  # non-ternary baselines (identity D-SGD, qsgd8/FedCom):
+                # workers ship decode(compress(g)) — fp32 on the wire, which is
+                # honestly the byte cost this family pays (identity's message
+                # IS g, so the DP baseline is bit-identical to raw psum)
+                msg = _compress_leaf(g, comp, seed_i)
                 n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
-                dec = jnp.where(mask, g.astype(jnp.float32), 0.0)
+                dec = msg.values.astype(jnp.float32) * msg.scale
+                dec = jnp.where(mask, dec, 0.0)
                 upd = jax.lax.psum(dec, axes) / jnp.maximum(n_sel, 1.0)
                 new_ef = ef
-                nnz_acc += jnp.sum(jnp.abs(jnp.sign(g)).astype(jnp.float32))
+                nnz_acc += jnp.sum((dec != 0.0).astype(jnp.float32))
             total += g.size
             new_leaves.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
             ef_leaves.append(new_ef)
@@ -198,7 +203,7 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         spec[batch_axis] = axes if len(axes) > 1 else axes[0]
         return P(*spec[:batch_axis + 1])
 
-    wrapped = jax.shard_map(
+    wrapped = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(state_spec, batch_spec()),

@@ -33,7 +33,7 @@ from repro.core import prng
 from repro.core.algorithm import CompressionConfig
 from repro.core.budgets import resolve_budget
 from repro.core.compressors import SCALE_FREE, compress_leaf_chunked, get_compressor
-from repro.dist import collectives
+from repro.dist import collectives, compat
 from repro.dist.sharding import ACT_RULES_TRAIN
 from repro.models.common import axis_rules, rms_norm
 from repro.train import sampling
@@ -338,7 +338,7 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         step=P(), seed=P())
     batch_spec = P(axes if len(axes) > 1 else axes[0])
 
-    wrapped = jax.shard_map(
+    wrapped = compat.shard_map(
         body, mesh=mesh,
         in_specs=(state_specs, batch_spec),
         out_specs=(state_specs, P()),

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import compat
 from repro.configs.registry import get_config
 from repro.core.algorithm import CompressionConfig
 from repro.core.budgets import BudgetConfig
@@ -29,8 +30,7 @@ CKPT = "/tmp/repro_ft_ckpt"
 
 
 def setup(mesh_shape=(4, 2)):
-    mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh(mesh_shape, ("data", "model"))
     cfg = get_config("qwen1.5-4b", smoke=True)
     model = Model(cfg)
     comp = CompressionConfig(compressor="sparsign", budget=BudgetConfig(value=2.0),
@@ -48,7 +48,7 @@ def main():
     shutil.rmtree(CKPT, ignore_errors=True)
     # --- run A: uninterrupted ---
     mesh, step, state, batch_fn = setup()
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         ref_state, _ = loop_lib.run(step, state, batch_fn,
                                     loop_lib.LoopConfig(total_steps=8, log_every=100))
     # --- run B: checkpoint every 2, die at 5, restart ---
@@ -57,7 +57,7 @@ def main():
                                fail_at_step=5, log_every=100)
     died = False
     try:
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             loop_lib.run(step, state, batch_fn, cfgB)
     except RuntimeError as e:
         died = True
@@ -66,7 +66,7 @@ def main():
     # restart (fresh everything, as after a pod loss)
     mesh, step, state, batch_fn = setup()
     cfgB2 = loop_lib.LoopConfig(total_steps=8, ckpt_dir=CKPT, ckpt_every=2, log_every=100)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state_b, _ = loop_lib.run(step, state, batch_fn, cfgB2)
     for pa, pb in zip(jax.tree_util.tree_leaves(ref_state.params),
                       jax.tree_util.tree_leaves(state_b.params)):
@@ -75,7 +75,7 @@ def main():
 
     # --- elastic: restore the checkpoint on a (2, 4) mesh and keep training ---
     mesh2, step2, state2, batch_fn2 = setup(mesh_shape=(2, 4))
-    with jax.sharding.set_mesh(mesh2):
+    with compat.set_mesh(mesh2):
         state2b, hist = loop_lib.run(step2, state2, batch_fn2,
                                      loop_lib.LoopConfig(total_steps=10, ckpt_dir=CKPT,
                                                          ckpt_every=100, log_every=100))

@@ -93,6 +93,39 @@ def test_stochastic_ternary_unbiased(name):
     assert err.mean() < 3.0 * max(expected_abs_err.mean(), 1e-6), (name, err.mean())
 
 
+def test_qsgd8_registered_and_bounded():
+    """The FedCom 8-bit baseline is reachable via the registry; levels stay in
+    [-s, s] and the compressor honors the shared compress signature."""
+    fn = get_compressor("qsgd8")
+    g = jnp.asarray(np.random.RandomState(10).randn(4096) * 2, jnp.float32)
+    msg = fn(g, budget=1.0, seed=3, counter_base=0)
+    vals = np.asarray(msg.values)
+    assert vals.dtype == np.int32
+    assert np.abs(vals).max() <= 255
+    # transmitted coordinates carry the true sign
+    nz = vals != 0
+    assert np.array_equal(np.sign(vals[nz]), np.sign(np.asarray(g))[nz])
+
+
+def test_qsgd8_unbiased_decode():
+    """E[decode] = g: with s=255 levels a single draw is already within
+    half a level, so a small trial count pins the mean tightly."""
+    rng = np.random.RandomState(11)
+    g = jnp.asarray(rng.randn(256), jnp.float32)
+    fn = get_compressor("qsgd8")
+    n = 50
+    acc = np.zeros(256, np.float64)
+    for s in range(n):
+        msg = fn(g, seed=s)
+        acc += np.asarray(msg.values, np.float64) * float(msg.scale)
+    # per-coord sigma of the n-trial mean <= level/(2 sqrt(n)) ~ level/14, so
+    # level/3 passes comfortably for stochastic rounding but fails a biased
+    # floor-only implementation (whose mean error is uniform in [0, level))
+    level = float(np.linalg.norm(np.asarray(g))) / 255.0
+    err = np.abs(acc / n - np.asarray(g))
+    assert err.max() < level / 3.0, err.max()
+
+
 def test_scaled_sign_scale():
     g = jnp.asarray(np.random.RandomState(6).randn(512), jnp.float32)
     msg = get_compressor("scaled_sign")(g)

@@ -7,24 +7,9 @@ devices (the main pytest process must keep jax at 1 device for the smoke tests).
   check_fault_tolerance  — crash/restart bitwise replay; elastic mesh restore.
 """
 
-import pathlib
-import subprocess
-import sys
-
 import pytest
 
-MDEV = pathlib.Path(__file__).parent / "mdev"
-SRC = str(pathlib.Path(__file__).parents[1] / "src")
-
-
-def _run(script: str):
-    proc = subprocess.run(
-        [sys.executable, str(MDEV / script)],
-        capture_output=True, text=True, timeout=1200,
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
-    )
-    assert proc.returncode == 0, f"{script} failed:\n{proc.stdout[-3000:]}\n{proc.stderr[-3000:]}"
-    return proc.stdout
+from conftest import run_mdev as _run
 
 
 @pytest.mark.slow
