@@ -1,44 +1,149 @@
-"""Compression-kernel microbench: us/call (CPU interpret mode — correctness
-path; TPU lowering is the target) + the structural byte accounting that drives
-the roofline memory term for the compression stage."""
+"""Compression-kernel benchmark: jnp reference vs Pallas for the three engine
+kernels (sparsign, vote_update, ef_server) plus the pack2bit wire packer, at
+model-realistic leaf shapes.
+
+On CPU the Pallas side runs in interpret mode — a correctness-path timing, not
+the TPU roofline; the structural hbm_bytes_per_coord column carries the TPU
+memory-traffic model either way. Full runs write ``BENCH_kernels.json`` at the
+repo root (the tracked bench-trajectory baseline); ``--quick`` writes
+``BENCH_kernels.quick.json`` (the CI smoke artifact) so it can't clobber the
+baseline.
+
+  python -m benchmarks.bench_kernels            # full shapes
+  python -m benchmarks.bench_kernels --quick    # CI smoke
+"""
 
 from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_header, csv_row, timed
-from repro.core.compressors import sparsign
 from repro.kernels.ef_server.ops import ef_server_op
+from repro.kernels.ef_server.ref import ef_scale, ef_server_ref
 from repro.kernels.pack2bit.ops import pack2bit_op
 from repro.kernels.sparsign.ops import sparsign_op
+from repro.kernels.sparsign.ref import sparsign_ref
 from repro.kernels.vote_update.ops import vote_update_op
+from repro.kernels.vote_update.ref import vote_update_ref
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_kernels.json"            # tracked full-shape baseline
+QUICK_OUT_PATH = ROOT / "BENCH_kernels.quick.json"  # CI smoke; never tracked
+
+# model-realistic leaf shapes (qwen1.5-4b-class: hidden 2560, ffn 6912;
+# embed shard = vocab slice of an FSDP-sharded embedding table)
+SHAPES_FULL = {
+    "attn_proj_2560x2560": (2560, 2560),
+    "mlp_up_2560x6912": (2560, 6912),
+    "embed_shard_8192x2560": (8192, 2560),
+}
+SHAPES_QUICK = {
+    "leaf_64k": (512, 128),
+    "leaf_256k": (512, 512),
+}
+
+# TPU HBM traffic per coordinate (structural, independent of where we time)
+BYTES_PER_COORD = {
+    ("sparsign", "pallas"): 4 + 1,        # read f32, write i8; RNG in-register
+    ("sparsign", "jnp"): 4 + 4 + 4 + 1,   # + u32 idx and f32 uniform traffic
+    ("vote_update", "pallas"): 4 + 4 + 4, # w + votes -> w' in one pass
+    ("vote_update", "jnp"): 4 * 4,        # sign/cast/scale/sub ~4 passes
+    ("ef_server", "pallas"): 8 + 8,       # (d,e) in, (out,e') out fused
+    ("ef_server", "jnp"): 8 * 3,          # ~4-pass unfused chain over (d,e)
+    ("pack2bit", "pallas"): 1 + 0.25,
+}
 
 
-def main(fast: bool = False):
-    n = 1 << 18 if fast else 1 << 20
+def _bench_shape(name: str, shape, records: list, pallas_label: str):
+    n = int(np.prod(shape))
     rng = np.random.RandomState(0)
-    g = jnp.asarray(rng.randn(n), jnp.float32)
-    w = jnp.asarray(rng.randn(n), jnp.float32)
-    t = jnp.asarray(rng.randint(-1, 2, n), jnp.int8)
-    v = jnp.asarray(rng.randint(-16, 17, n), jnp.int32)
-    e = jnp.asarray(rng.randn(n), jnp.float32)
+    g = jnp.asarray(rng.randn(*shape), jnp.float32)
+    w = jnp.asarray(rng.randn(*shape), jnp.float32)
+    v = jnp.asarray(rng.randint(-16, 17, shape), jnp.int32)
+    e = jnp.asarray(rng.randn(*shape), jnp.float32)
+    t = jnp.asarray(rng.randint(-1, 2, shape), jnp.int8)
 
-    print(f"# kernel microbench, n={n} coords (CPU interpret mode)")
-    csv_header(["name", "us_per_call", "hbm_bytes_per_coord_tpu", "note"])
+    # jit the jnp reference sides too — the engine's jnp backend runs inside
+    # the jitted train step, so eager dispatch overhead is not part of what a
+    # backend switch trades off
+    sparsign_jnp = jax.jit(lambda x: sparsign_ref(x, 1.0, 7))
+    vote_update_jnp = jax.jit(lambda a, b: vote_update_ref(a, b, 0.01))
+    ef_server_jnp = jax.jit(lambda d, r: ef_server_ref(d, r, ef_scale(d, r))[0])
 
-    _, dt = timed(lambda: jax.block_until_ready(sparsign_op(g, 1.0, 7)))
-    csv_row(["sparsign_kernel", f"{dt*1e6:.0f}", 4 + 1, "read f32 + write i8; RNG in-register"])
-    _, dt = timed(lambda: jax.block_until_ready(sparsign(g, budget=1.0, seed=7).values))
-    csv_row(["sparsign_jnp_ref", f"{dt*1e6:.0f}", 4 + 4 + 4 + 1, "extra u32 idx + f32 uniform traffic"])
-    _, dt = timed(lambda: jax.block_until_ready(pack2bit_op(t)))
-    csv_row(["pack2bit", f"{dt*1e6:.0f}", 1 + 0.25, "i8 -> 2-bit wire"])
-    _, dt = timed(lambda: jax.block_until_ready(ef_server_op(g, e)[0]))
-    csv_row(["ef_server_fused", f"{dt*1e6:.0f}", 8 + 8, "2 reads + 2 writes f32 (vs 4-pass unfused)"])
-    _, dt = timed(lambda: jax.block_until_ready(vote_update_op(w, v, 0.01)))
-    csv_row(["vote_update_fused", f"{dt*1e6:.0f}", 4 + 4 + 4, "w + votes -> w' one pass"])
+    cases = [
+        ("sparsign", "pallas",
+         lambda: jax.block_until_ready(sparsign_op(g, 1.0, 7))),
+        ("sparsign", "jnp",
+         lambda: jax.block_until_ready(sparsign_jnp(g))),
+        ("vote_update", "pallas",
+         lambda: jax.block_until_ready(vote_update_op(w, v, 0.01))),
+        ("vote_update", "jnp",
+         lambda: jax.block_until_ready(vote_update_jnp(w, v))),
+        ("ef_server", "pallas",
+         lambda: jax.block_until_ready(ef_server_op(g, e)[0])),
+        ("ef_server", "jnp",
+         lambda: jax.block_until_ready(ef_server_jnp(g, e))),
+        ("pack2bit", "pallas",
+         lambda: jax.block_until_ready(pack2bit_op(t))),
+    ]
+    for kernel, backend, fn in cases:
+        _, dt = timed(fn)
+        label = pallas_label if backend == "pallas" else "jnp"
+        rec = {
+            "kernel": kernel,
+            "shape": name,
+            "dims": list(shape),
+            "n_coords": n,
+            "backend": label,
+            "us_per_call": round(dt * 1e6, 1),
+            "hbm_bytes_per_coord_tpu": BYTES_PER_COORD.get((kernel, backend)),
+        }
+        records.append(rec)
+        csv_row([kernel, name, label, rec["us_per_call"],
+                 rec["hbm_bytes_per_coord_tpu"]])
+
+
+def main(fast: bool = False, out: Path | None = None):
+    shapes = SHAPES_QUICK if fast else SHAPES_FULL
+    on_tpu = jax.default_backend() == "tpu"
+    pallas_label = "pallas" if on_tpu else "pallas-interpret"
+    print(f"# kernel bench: jnp vs {pallas_label} "
+          f"(jax backend={jax.default_backend()})")
+    csv_header(["kernel", "shape", "backend", "us_per_call", "hbm_bytes_per_coord_tpu"])
+    records: list[dict] = []
+    for name, shape in shapes.items():
+        _bench_shape(name, shape, records, pallas_label)
+
+    doc = {
+        "schema": 1,
+        "bench": "kernels",
+        "jax_backend": jax.default_backend(),
+        "pallas_mode": "compiled" if on_tpu else "interpret",
+        "jax_version": jax.__version__,
+        "quick": fast,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "note": ("us_per_call on CPU times the interpret/reference paths; "
+                 "hbm_bytes_per_coord_tpu is the structural TPU traffic model "
+                 "behind the roofline term."),
+        "results": records,
+    }
+    # quick runs get their own default path so a CI-smoke invocation can't
+    # silently clobber the committed full-shape baseline
+    out = out or (QUICK_OUT_PATH if fast else OUT_PATH)
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke shapes")
+    ap.add_argument("--out", type=Path, default=None)
+    args = ap.parse_args()
+    main(fast=args.quick, out=args.out)

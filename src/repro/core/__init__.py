@@ -17,11 +17,15 @@ from repro.core.compressors import (
     get_compressor,
     sparsign,
 )
+from repro.core.engine import compress_leaf, resolve_backend, server_apply
 from repro.core.error_feedback import EFState, ef_server_step, init_ef
 from repro.core.aggregation import majority_vote, scaled_sign_server
 
 __all__ = [
     "CompressionConfig",
+    "compress_leaf",
+    "resolve_backend",
+    "server_apply",
     "BudgetConfig",
     "CompressedGrad",
     "COMPRESSORS",

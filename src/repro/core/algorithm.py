@@ -19,11 +19,22 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import prng
+from repro.core import engine, prng
 from repro.core.aggregation import majority_vote, mean_server, scaled_sign_server
-from repro.core.budgets import BudgetConfig, resolve_budget
-from repro.core.compressors import CompressedGrad, get_compressor
+from repro.core.budgets import BudgetConfig
+from repro.core.compressors import CompressedGrad
 from repro.core.error_feedback import EFState, ef_server_step
+
+# Inner (Alg. 2) local steps accumulate ternary votes in int32 — exact for any
+# tau in this range (each step contributes {-1, 0, +1} per coordinate).
+MAX_LOCAL_STEPS = 2**31 - 1
+
+# Canonical seed salts for the Alg. 2 worker loop. Historically fl.simulation
+# salted the inner stream with 1000 while this module used 1001 — the drift is
+# fixed by making everything route through local_update_message.
+LOCAL_STEP_SALT = 1001   # inner sparsign stream (shared across the tau steps;
+                         # the counter offset c * g.size separates them)
+UPLINK_SALT = 2          # the final Q(sum, B_g) uplink stream
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +49,14 @@ class CompressionConfig:
     worker_sample_fraction: float = 1.0  # p_s
     vote_dtype: str = "int8"             # wire dtype for the ternary psum
     pack_wire: bool = False              # model the 2-bit packed wire format
+
+    def __post_init__(self):
+        tau = int(self.local_steps)
+        if not 1 <= tau <= MAX_LOCAL_STEPS:
+            raise ValueError(
+                f"local_steps (tau) must be in [1, {MAX_LOCAL_STEPS}] — the "
+                f"int32 local-vote accumulator is exact only in that range; "
+                f"got {self.local_steps}")
 
     @property
     def is_ternary(self) -> bool:
@@ -58,11 +77,11 @@ def worker_message(
     seed,
     counter_base=0,
     shared_linf=None,
+    backend=None,
 ) -> CompressedGrad:
     """Q(g_m, B_m): one worker's uplink message for a single tensor."""
-    budget = resolve_budget(cfg.budget, g_local, shared_linf=shared_linf)
-    fn = get_compressor(cfg.compressor)
-    return fn(g_local, budget=budget, seed=seed, counter_base=counter_base)
+    return engine.compress_leaf(g_local, cfg, seed, counter_base,
+                                shared_linf=shared_linf, backend=backend)
 
 
 def local_update_message(
@@ -73,27 +92,33 @@ def local_update_message(
     eta_l: float,
     seed,
     counter_base=0,
+    backend=None,
 ) -> CompressedGrad:
     """Alg. 2 worker loop: tau compressed local steps, then compress the *sum*
     of the local compressed gradients with the uplink budget B_g.
 
     Every inner step uses sparsign with budget B_l; the inner sum lives in
-    [-tau, tau] (int8 is ample for tau <= 127).
+    [-tau, tau], accumulated in int32 (exact — tau is guarded against overflow
+    by CompressionConfig).
     """
-    tau = cfg.local_steps
-    b_l = jnp.float32(cfg.local_budget if cfg.local_budget is not None else cfg.budget.value)
-    sp = get_compressor("sparsign")
+    tau = int(cfg.local_steps)
+    local_cfg = engine.local_step_config(cfg)
+    inner_seed = prng.fold_seed(seed, LOCAL_STEP_SALT)
 
     def body(carry, c):
         w, acc = carry
         g = grad_fn(w, c)
-        q = sp(g, budget=b_l, seed=prng.fold_seed(seed, 1000 + 1), counter_base=counter_base + c * g.size)
+        q = engine.compress_leaf(g, local_cfg, inner_seed,
+                                 counter_base=counter_base + c * g.size,
+                                 backend=backend)
         w = w - eta_l * q.values.astype(w.dtype)
-        return (w, acc + q.values.astype(jnp.int8)), None
+        return (w, acc + q.values.astype(jnp.int32)), None
 
-    (w_final, acc), _ = jax.lax.scan(body, (w0, jnp.zeros(w0.shape, jnp.int8)), jnp.arange(tau))
+    (w_final, acc), _ = jax.lax.scan(body, (w0, jnp.zeros(w0.shape, jnp.int32)), jnp.arange(tau))
     del w_final
-    return worker_message(acc.astype(jnp.float32), cfg, seed=prng.fold_seed(seed, 2), counter_base=counter_base)
+    return worker_message(acc.astype(jnp.float32), cfg,
+                          seed=prng.fold_seed(seed, UPLINK_SALT),
+                          counter_base=counter_base, backend=backend)
 
 
 # ---------------------------------------------------------------------------

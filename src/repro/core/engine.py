@@ -1,0 +1,215 @@
+"""Backend-dispatching compression/server engine — the one hot path every
+consumer (train.step_simple, train.step_streamed, fl.simulation) goes through.
+
+Three backends, bitwise-identical by construction (they share the counter-based
+PRNG of ``repro.core.prng``, which the Pallas kernels regenerate in-register):
+
+  pallas    — the fused TPU kernels: ``sparsign_op`` (compress), ``vote_update``
+              (majority-vote sign + SGD in one pass), ``ef_server`` (fused
+              Eq. 8 scaled-sign error feedback).
+  interpret — the same kernels in Pallas interpret mode; runs on CPU and is
+              what CI pins against the jnp reference.
+  jnp       — the pure-jnp reference compressors/server math. Large scale-free
+              leaves are compressed in chunks to bound transient RNG buffers
+              (the kernels need no chunking — RNG never touches HBM).
+
+Selection: the ``backend=`` argument wins, else the ``REPRO_KERNEL_BACKEND``
+env var (``auto|pallas|interpret|jnp``), else ``auto`` = pallas on TPU and jnp
+everywhere else. Resolution happens at trace/build time, so a jitted train
+step bakes its backend in.
+
+Two primitives:
+
+  compress_leaf(g, cfg, seed, counter_base)        — worker uplink Q(g, B)
+  server_apply(p, vote_sum, cfg, ...)              — C(.) [+ EF] + SGD update
+
+plus the small shared helpers (vote-server predicates, local-step config) that
+keep server-rule names out of the train/fl layers entirely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Optional, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.budgets import BudgetConfig, resolve_budget
+from repro.core.compressors import (SCALE_FREE, CompressedGrad,
+                                    compress_leaf_chunked, get_compressor)
+from repro.kernels.ef_server.ops import ef_server_op
+from repro.kernels.ef_server.ref import ef_server_ref
+from repro.kernels.sparsign.ops import sparsign_op
+from repro.kernels.vote_update.ops import vote_update_op
+from repro.kernels.vote_update.ref import vote_update_ref
+
+if TYPE_CHECKING:  # avoid a runtime cycle: algorithm imports this module
+    from repro.core.algorithm import CompressionConfig
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+BACKENDS = ("pallas", "interpret", "jnp")
+
+# server rules with a ternary integer vote wire (1-2 B/coord psum); everything
+# else ships decoded floats and aggregates by mean
+VOTE_SERVERS = ("majority_vote", "scaled_sign_ef")
+SERVER_RULES = ("majority_vote", "scaled_sign_ef", "mean")
+
+# compressors with a fused Pallas kernel; the rest always take the jnp path
+KERNEL_COMPRESSORS = ("sparsign",)
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Explicit argument > $REPRO_KERNEL_BACKEND > auto (pallas on TPU else jnp)."""
+    b = backend if backend is not None else os.environ.get(ENV_VAR, "auto")
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if b not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {b!r}; known: {('auto',) + BACKENDS}")
+    return b
+
+
+def is_vote_server(cfg: "CompressionConfig") -> bool:
+    return cfg.server in VOTE_SERVERS
+
+
+def needs_server_ef(server: str) -> bool:
+    """Does this server rule carry a (server-side) error-feedback residual?"""
+    return server == "scaled_sign_ef"
+
+
+def local_budget_value(cfg: "CompressionConfig") -> float:
+    """B_l for the tau inner steps of Alg. 2.
+
+    Precedence: cfg.local_budget > cfg.budget.local_value > the uplink B
+    itself when the budget is a fixed magnitude (the paper's B_l=10/B_g=1
+    regime) > 1.0. Non-fixed budget kinds (target_sparsity etc.) never leak
+    their ``value`` into B_l — it is not a magnitude there.
+    """
+    if cfg.local_budget is not None:
+        return float(cfg.local_budget)
+    if cfg.budget.local_value is not None:
+        return float(cfg.budget.local_value)
+    return float(cfg.budget.value) if cfg.budget.kind == "fixed" else 1.0
+
+
+def local_step_config(cfg: "CompressionConfig") -> "CompressionConfig":
+    """Config for the inner (Alg. 2) local steps: sparsign at fixed B_l."""
+    return dataclasses.replace(
+        cfg, compressor="sparsign",
+        budget=BudgetConfig(kind="fixed", value=local_budget_value(cfg)),
+        local_steps=1)
+
+
+# ---------------------------------------------------------------------------
+# Worker-side primitive
+# ---------------------------------------------------------------------------
+
+def compress_leaf(
+    g: jnp.ndarray,
+    cfg: "CompressionConfig",
+    seed,
+    counter_base=0,
+    *,
+    shared_linf=None,
+    backend: Optional[str] = None,
+) -> CompressedGrad:
+    """Q(g, B): one worker's uplink message for a single tensor leaf.
+
+    sparsign dispatches to the fused Pallas kernel on the pallas/interpret
+    backends (RNG regenerated in-register — no chunking needed at any size);
+    every other compressor, and the jnp backend, runs the reference path with
+    chunking for the scale-free family.
+    """
+    backend = resolve_backend(backend)
+    budget = resolve_budget(cfg.budget, g, shared_linf=shared_linf)
+    if backend != "jnp" and cfg.compressor in KERNEL_COMPRESSORS:
+        vals = sparsign_op(g, budget, seed, counter_base,
+                           interpret=(backend == "interpret"))
+        return CompressedGrad(values=vals, scale=jnp.float32(1.0))
+    fn = get_compressor(cfg.compressor)
+    if cfg.compressor in SCALE_FREE:
+        return compress_leaf_chunked(fn, g, budget=budget, seed=seed,
+                                     counter_base=counter_base)
+    return fn(g, budget=budget, seed=seed, counter_base=counter_base)
+
+
+# ---------------------------------------------------------------------------
+# Server-side primitive
+# ---------------------------------------------------------------------------
+
+def server_apply(
+    p: jnp.ndarray,
+    vote_sum: jnp.ndarray,
+    cfg: "CompressionConfig",
+    *,
+    lr,
+    ef=None,
+    n_sel=None,
+    server: Optional[str] = None,
+    leaf_size: Optional[int] = None,
+    l1_reduce: Optional[Callable] = None,
+    quorum: int = 1,
+    backend: Optional[str] = None,
+):
+    """C(sum of worker messages) [+ EF] + SGD for one leaf (or leaf shard).
+
+    Returns ``(new_p, new_ef)`` with ``new_p`` in ``p.dtype``.
+
+    - ``majority_vote``:  p - lr * sign(vote_sum); integer votes take the fused
+      ``vote_update`` kernel on the pallas/interpret backends. ``ef`` passes
+      through untouched.
+    - ``scaled_sign_ef``: acc = vote_sum/n_sel + ef; scale = ||acc||_1/leaf_size
+      (``l1_reduce`` hook lets streamed mode psum the partial L1 across FSDP
+      shards); update = scale*sign(acc) via the fused ``ef_server`` kernel;
+      new_ef = acc - update.
+    - ``mean``:           p - lr * vote_sum/n_sel (``vote_sum`` here is the sum
+      of *decoded float* messages — the TernGrad/QSGD/identity wire).
+
+    ``server`` overrides ``cfg.server`` (the non-ternary baselines always
+    aggregate by mean regardless of the configured rule).
+    """
+    backend = resolve_backend(backend)
+    rule = server if server is not None else cfg.server
+    lr = jnp.asarray(lr, jnp.float32)
+
+    if rule == "majority_vote":
+        if jnp.issubdtype(vote_sum.dtype, jnp.integer):
+            if backend != "jnp":
+                new_p = vote_update_op(p, vote_sum, lr, quorum=quorum,
+                                       interpret=(backend == "interpret"))
+            else:
+                new_p = vote_update_ref(p, vote_sum, lr, quorum=quorum)
+        else:
+            # float votes (decoded-sum wire, e.g. the FL sim): sign directly —
+            # the int-vote kernel/oracle would truncate fractional sums
+            v = vote_sum
+            step = (jnp.where(jnp.abs(v) >= quorum, jnp.sign(v), 0) if quorum > 1
+                    else jnp.sign(v)).astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, ef
+
+    if rule == "mean":
+        assert n_sel is not None, "mean server needs n_sel (|S|)"
+        upd = vote_sum.astype(jnp.float32) / jnp.maximum(jnp.asarray(n_sel, jnp.float32), 1.0)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), ef
+
+    if rule == "scaled_sign_ef":
+        assert ef is not None and n_sel is not None, "scaled_sign_ef needs ef + n_sel"
+        mean_delta = vote_sum.astype(jnp.float32) / jnp.maximum(
+            jnp.asarray(n_sel, jnp.float32), 1.0)
+        eff = ef.astype(jnp.float32)
+        part = jnp.sum(jnp.abs(mean_delta + eff))
+        if l1_reduce is not None:
+            part = l1_reduce(part)
+        size = leaf_size if leaf_size is not None else mean_delta.size
+        scale = part / jnp.float32(size)
+        if backend != "jnp":
+            upd, new_ef = ef_server_op(mean_delta, eff, scale,
+                                       interpret=(backend == "interpret"))
+        else:
+            upd, new_ef = ef_server_ref(mean_delta, eff, scale)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_ef
+
+    raise ValueError(f"unknown server rule {rule!r}; known: {SERVER_RULES}")

@@ -21,10 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import prng
-from repro.core.algorithm import CompressionConfig
-from repro.core.budgets import resolve_budget
-from repro.core.compressors import get_compressor
+from repro.core import engine, prng
+from repro.core.algorithm import CompressionConfig, local_update_message
 from repro.core.encoding import baseline_bits_per_round, ternary_stream_bits
 from repro.fl.models import accuracy, xent_loss
 
@@ -35,8 +33,8 @@ class FLConfig:
     participation: float = 1.0      # fraction sampled per round
     rounds: int = 200
     batch_size: int = 128
-    lr: float = 0.01                # eta (server)
-    local_lr: float = 0.01          # eta_L (Alg. 2)
+    lr: float = 0.01                # eta: THE server step size (Alg. 1/2 line 12)
+    local_lr: float = 0.01          # eta_L: the inner local step size (Alg. 2 only)
     comp: CompressionConfig = dataclasses.field(default_factory=CompressionConfig)
     seed: int = 0
     eval_every: int = 10
@@ -48,9 +46,17 @@ def _worker_batch_idx(key, shard_sizes, batch):
 
 
 def build_round_fn(loss_fn: Callable, cfg: FLConfig, x_parts, y_parts):
-    """x_parts: [M, shard, ...] stacked per-worker data (padded to equal shard)."""
+    """x_parts: [M, shard, ...] stacked per-worker data (padded to equal shard).
+
+    Worker compression and server math both route through the shared engine
+    (core.engine / core.algorithm) — this module owns only the experiment
+    harness: worker sampling, per-worker data draws, and eval bookkeeping.
+    The server step uses exactly eta = cfg.lr; cfg.local_lr is eta_L, consumed
+    only by the Alg. 2 inner loop inside local_update_message.
+    """
     comp = cfg.comp
-    fn = get_compressor(comp.compressor)
+    backend = engine.resolve_backend()
+    server_rule = comp.server if engine.is_vote_server(comp) else "mean"
     m = cfg.n_workers
     n_sel = max(1, int(round(cfg.participation * m)))
     shard_len = x_parts.shape[1]
@@ -68,26 +74,11 @@ def build_round_fn(loss_fn: Callable, cfg: FLConfig, x_parts, y_parts):
             return jax.grad(loss_fn)(w, xb, yb)
 
         if comp.local_steps == 1:
-            g = grad_at(v, 0)
-            budget = resolve_budget(comp.budget, g)
-            msg = fn(g, budget=budget, seed=wseed, counter_base=0)
+            msg = engine.compress_leaf(grad_at(v, 0), comp, wseed, backend=backend)
         else:
-            b_l = jnp.float32(comp.local_budget if comp.local_budget is not None else 1.0)
-            sp = get_compressor("sparsign")
-
-            def body(carry, c):
-                w, acc = carry
-                g = grad_at(w, c + 1)
-                q = sp(g, budget=b_l, seed=prng.fold_seed(wseed, 1000),
-                       counter_base=c * g.size).values
-                w = w - cfg.local_lr * q.astype(w.dtype)
-                return (w, acc + q.astype(jnp.int32)), None
-
-            acc0 = jnp.zeros(v.shape, jnp.int32)
-            (_, acc), _ = jax.lax.scan(body, (v, acc0), jnp.arange(comp.local_steps))
-            src = acc.astype(jnp.float32)
-            budget = resolve_budget(comp.budget, src)
-            msg = fn(src, budget=budget, seed=prng.fold_seed(wseed, 2), counter_base=0)
+            msg = local_update_message(
+                v, lambda w, c: grad_at(w, c + 1), comp,
+                eta_l=cfg.local_lr, seed=wseed, backend=backend)
         dec = msg.values.astype(jnp.float32) * msg.scale
         nnz = jnp.sum(jnp.abs(jnp.sign(msg.values)).astype(jnp.float32))
         return dec, nnz
@@ -98,18 +89,10 @@ def build_round_fn(loss_fn: Callable, cfg: FLConfig, x_parts, y_parts):
         sel = jax.random.permutation(ksel, m)[:n_sel]
         keys = jax.random.split(kw, n_sel)
         dec, nnz = jax.vmap(lambda w, k: worker_msg(v, w, k, round_idx))(sel, keys)
-        mean_delta = jnp.mean(dec, axis=0)
-        if comp.server == "majority_vote":
-            g_tilde = jnp.sign(mean_delta)
-        elif comp.server == "scaled_sign_ef":
-            acc = mean_delta + ef
-            scale = jnp.sum(jnp.abs(acc)) / acc.size
-            g_tilde = scale * jnp.sign(acc)
-            ef = acc - g_tilde
-        else:
-            g_tilde = mean_delta
-        eta = cfg.lr * (cfg.local_lr / cfg.lr if False else 1.0)
-        v = v - cfg.lr * g_tilde
+        vote_sum = jnp.sum(dec, axis=0)
+        v, ef = engine.server_apply(
+            v, vote_sum, comp, lr=cfg.lr, ef=ef, n_sel=jnp.float32(n_sel),
+            server=server_rule, backend=backend)
         return v, ef, jnp.mean(nnz)
 
     return round_fn

@@ -13,11 +13,17 @@ from repro.kernels.ef_server.ref import ef_scale
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def ef_server_op(delta_mean: jnp.ndarray, residual: jnp.ndarray, *, interpret: bool | None = None):
-    """Fused Eq. 8: returns (g_tilde, new_residual), both float32, shape of input."""
+def ef_server_op(delta_mean: jnp.ndarray, residual: jnp.ndarray, scale=None,
+                 *, interpret: bool | None = None):
+    """Fused Eq. 8: returns (g_tilde, new_residual), both float32, shape of input.
+
+    ``scale`` defaults to ||delta+residual||_1 / n computed here; callers whose
+    leaves are sharded (streamed mode) pass the cross-shard-reduced scale in.
+    """
     if interpret is None:
         interpret = common.default_interpret()
-    scale = ef_scale(delta_mean, residual)
+    if scale is None:
+        scale = ef_scale(delta_mean, residual)
     d2, n = common.to_2d(delta_mean.astype(jnp.float32).reshape(-1))
     e2, _ = common.to_2d(residual.astype(jnp.float32).reshape(-1))
     br = common.block_rows_for(d2.shape[0])

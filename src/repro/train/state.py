@@ -8,6 +8,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import needs_server_ef
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -20,7 +22,7 @@ class TrainState:
 
 def init_state(params, *, server: str, seed: int) -> TrainState:
     ef = None
-    if server == "scaled_sign_ef":
+    if needs_server_ef(server):
         ef = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     return TrainState(
         params=params,

@@ -29,10 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import prng
+from repro.core import engine, prng
 from repro.core.algorithm import CompressionConfig
-from repro.core.budgets import resolve_budget
-from repro.core.compressors import get_compressor
 from repro.dist import collectives, compat
 from repro.dist.sharding import ACT_RULES_TRAIN
 from repro.models.common import axis_rules
@@ -48,22 +46,13 @@ class TrainStepConfig:
     worker_axes: Sequence[str] = ("data",)
     vote_impl: str = "psum"        # psum | hier | allgather_packed
     donate: bool = True
+    backend: Optional[str] = None  # kernel backend; None -> $REPRO_KERNEL_BACKEND
 
 
 def _leaf_seeds(worker_seed, tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     seeds = [prng.fold_seed(worker_seed, i) for i in range(len(leaves))]
     return jax.tree_util.tree_unflatten(treedef, seeds)
-
-
-def _compress_leaf(g, cfg: CompressionConfig, seed, counter_base=0):
-    from repro.core.compressors import SCALE_FREE, compress_leaf_chunked
-    budget = resolve_budget(cfg.budget, g)
-    fn = get_compressor(cfg.compressor)
-    if cfg.compressor in SCALE_FREE:
-        return compress_leaf_chunked(fn, g, budget=budget, seed=seed,
-                                     counter_base=counter_base)
-    return fn(g, budget=budget, seed=seed, counter_base=counter_base)
 
 
 def _vote(values: jnp.ndarray, step_cfg: TrainStepConfig, n_workers: int) -> jnp.ndarray:
@@ -77,7 +66,8 @@ def _vote(values: jnp.ndarray, step_cfg: TrainStepConfig, n_workers: int) -> jnp
     return collectives.vote_psum(values, axes, n_workers)
 
 
-def _local_grads(model, params, batch, comp_cfg: CompressionConfig, wseed, local_lr):
+def _local_grads(model, params, batch, comp_cfg: CompressionConfig, wseed, local_lr,
+                 backend=None):
     """Returns (loss, message_source_tree).
 
     tau == 1: message source = the raw local gradient (Alg. 1).
@@ -90,8 +80,7 @@ def _local_grads(model, params, batch, comp_cfg: CompressionConfig, wseed, local
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         return loss, grads
 
-    b_l = jnp.float32(comp_cfg.local_budget if comp_cfg.local_budget is not None else 1.0)
-    sp = get_compressor("sparsign")
+    local_cfg = engine.local_step_config(comp_cfg)
 
     def body(carry, c):
         w, acc = carry
@@ -101,7 +90,8 @@ def _local_grads(model, params, batch, comp_cfg: CompressionConfig, wseed, local
         qs = []
         for i, g in enumerate(leaves):
             seed = prng.fold_seed(wseed, 7000 + i)
-            q = sp(g, budget=b_l, seed=seed, counter_base=c * g.size).values
+            q = engine.compress_leaf(g, local_cfg, seed, counter_base=c * g.size,
+                                     backend=backend).values
             qs.append(q)
         q_tree = jax.tree_util.tree_unflatten(treedef, qs)
         w = jax.tree_util.tree_map(lambda p, q: p - local_lr * q.astype(p.dtype), w, q_tree)
@@ -118,6 +108,7 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
     """Returns jit'd train_step(state, batch) -> (state, metrics)."""
     comp = step_cfg.compression
     axes = tuple(step_cfg.worker_axes)
+    backend = engine.resolve_backend(step_cfg.backend)
 
     # activation hints may only target auto (non-worker) mesh axes; in pure-DP
     # mode every axis is a worker and no constraints are needed (all compute local)
@@ -136,7 +127,8 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         wseed = prng.fold_seed(rseed, 0x5EED) + widx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
         mask = sampling.participation_mask(rseed, state.step, widx, comp.worker_sample_fraction)
 
-        loss, msg_src = _local_grads(model, params, batch, comp, wseed, step_cfg.local_lr)
+        loss, msg_src = _local_grads(model, params, batch, comp, wseed,
+                                     step_cfg.local_lr, backend=backend)
 
         leaves, treedef = jax.tree_util.tree_flatten(msg_src)
         new_leaves, ef_leaves = [], []
@@ -146,43 +138,38 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         lr = step_cfg.lr(state.step)
         nnz_acc = jnp.float32(0.0)
         total = 0
+        vote_wire = comp.is_ternary and engine.is_vote_server(comp)
 
         for i, (g, p, ef) in enumerate(zip(leaves, p_leaves, ef_flat)):
             seed_i = prng.fold_seed(wseed, i)
-            if comp.is_ternary:
-                msg = _compress_leaf(g, comp, seed_i)
+            msg = engine.compress_leaf(g, comp, seed_i, backend=backend)
+            if vote_wire:
+                # ternary int votes: one integer psum = upload + server sum,
+                # then C(.) + SGD fused in the engine
                 votes = jnp.where(mask, msg.values, jnp.int8(0))
                 vote_sum = _vote(votes, step_cfg, n_workers)
                 nnz_acc += jnp.sum(jnp.abs(votes).astype(jnp.float32))
-                if comp.server == "majority_vote":
-                    upd = jnp.sign(vote_sum).astype(jnp.float32)
-                    new_ef = ef
-                elif comp.server == "scaled_sign_ef":
-                    n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
-                    mean_delta = vote_sum.astype(jnp.float32) / jnp.maximum(n_sel, 1.0)
-                    acc = mean_delta + ef
-                    scale = jnp.sum(jnp.abs(acc)) / jnp.float32(acc.size)
-                    upd = scale * jnp.sign(acc)
-                    new_ef = acc - upd
-                else:  # mean of ternary (w/ scale) — TernGrad/QSGD-style baseline
-                    n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
-                    dec = msg.values.astype(jnp.float32) * msg.scale
-                    dec = jnp.where(mask, dec, 0.0)
-                    upd = jax.lax.psum(dec, axes) / jnp.maximum(n_sel, 1.0)
-                    new_ef = ef
-            else:  # non-ternary baselines (identity D-SGD, qsgd8/FedCom):
-                # workers ship decode(compress(g)) — fp32 on the wire, which is
-                # honestly the byte cost this family pays (identity's message
-                # IS g, so the DP baseline is bit-identical to raw psum)
-                msg = _compress_leaf(g, comp, seed_i)
                 n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+                new_p, new_ef = engine.server_apply(
+                    p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel, backend=backend)
+            else:
+                # decoded-float wire: ternary mean servers (TernGrad/QSGD-style)
+                # and every non-ternary baseline ship decode(compress(g)) — fp32
+                # collective bytes, honestly the cost this family pays
+                # (identity's message IS g, so D-SGD is bit-identical to raw psum)
                 dec = msg.values.astype(jnp.float32) * msg.scale
                 dec = jnp.where(mask, dec, 0.0)
-                upd = jax.lax.psum(dec, axes) / jnp.maximum(n_sel, 1.0)
-                new_ef = ef
-                nnz_acc += jnp.sum((dec != 0.0).astype(jnp.float32))
+                if comp.is_ternary:
+                    nnz_acc += jnp.sum(jnp.abs(jnp.where(mask, msg.values, jnp.int8(0))).astype(jnp.float32))
+                else:
+                    nnz_acc += jnp.sum((dec != 0.0).astype(jnp.float32))
+                vote_sum = jax.lax.psum(dec, axes)
+                n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+                new_p, new_ef = engine.server_apply(
+                    p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel, server="mean",
+                    backend=backend)
             total += g.size
-            new_leaves.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+            new_leaves.append(new_p)
             ef_leaves.append(new_ef)
 
         new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)

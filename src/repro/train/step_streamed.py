@@ -29,10 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import prng
+from repro.core import engine, prng
 from repro.core.algorithm import CompressionConfig
-from repro.core.budgets import resolve_budget
-from repro.core.compressors import SCALE_FREE, compress_leaf_chunked, get_compressor
 from repro.dist import collectives, compat
 from repro.dist.sharding import ACT_RULES_TRAIN
 from repro.models.common import axis_rules, rms_norm
@@ -49,6 +47,7 @@ class StreamedStepConfig:
     worker_axes: Sequence[str] = ("data",)
     fsdp_axis: str = "data"
     donate: bool = True
+    backend: Optional[str] = None  # kernel backend; None -> $REPRO_KERNEL_BACKEND
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +146,10 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     assert not cfg.tie_embeddings, "streamed mode expects untied embeddings"
     comp = step_cfg.compression
     assert comp.local_steps == 1, "streamed mode implements Alg. 1 exchange (tau=1)"
+    if not engine.is_vote_server(comp):
+        raise ValueError(f"streamed mode supports vote servers {engine.VOTE_SERVERS}, "
+                         f"got {comp.server!r}")
+    backend = engine.resolve_backend(step_cfg.backend)
     axes = tuple(step_cfg.worker_axes)
     fsdp_ax = step_cfg.fsdp_axis
     n_shards = mesh.shape[fsdp_ax]
@@ -180,33 +183,19 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         The fp32 update/EF tensors only ever exist at shard size; the full-size
         artifacts are the bf16/f32 gradient (transient, from vjp) and the int8
         votes (1 B/coord)."""
-        budget = resolve_budget(comp.budget, g_full)
-        fn = get_compressor(comp.compressor)
-        if comp.compressor in SCALE_FREE:
-            msg = compress_leaf_chunked(fn, g_full, budget=budget, seed=seed,
-                                        counter_base=counter_base)
-        else:
-            msg = fn(g_full, budget=budget, seed=seed, counter_base=counter_base)
+        msg = engine.compress_leaf(g_full, comp, seed, counter_base, backend=backend)
         votes = jnp.where(mask, msg.values, jnp.int8(0))
         vote_sum = collectives.vote_psum(votes, axes, collectives.worker_count(axes))
         nnz = jnp.sum(jnp.abs(votes).astype(jnp.float32))
         shard_size = p_shard.shape[shard_ax] if shard_ax != REPLICATED else None
         vs = _slice(vote_sum, shard_ax, shard_size)
-        if comp.server == "majority_vote":
-            upd = jnp.sign(vs).astype(jnp.float32)
-            new_ef = ef_shard
-        elif comp.server == "scaled_sign_ef":
-            n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
-            acc = vs.astype(jnp.float32) / jnp.maximum(n_sel, 1.0) + ef_shard
-            part = jnp.sum(jnp.abs(acc))
-            if shard_ax != REPLICATED:
-                part = jax.lax.psum(part, fsdp_ax)  # shards partition the leaf
-            scale = part / jnp.float32(leaf_size)
-            upd = scale * jnp.sign(acc)
-            new_ef = acc - upd
-        else:
-            raise ValueError(f"streamed mode supports vote servers, got {comp.server}")
-        new_shard = (p_shard.astype(jnp.float32) - lr * upd).astype(p_shard.dtype)
+        n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+        # shards partition the leaf, so the scaled-sign L1 reduces across them
+        l1_reduce = ((lambda part: jax.lax.psum(part, fsdp_ax))
+                     if shard_ax != REPLICATED else None)
+        new_shard, new_ef = engine.server_apply(
+            p_shard, vs, comp, lr=lr, ef=ef_shard, n_sel=n_sel,
+            leaf_size=leaf_size, l1_reduce=l1_reduce, backend=backend)
         return new_shard, new_ef, nnz
 
     def body(state: TrainState, batch):
@@ -334,7 +323,7 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         p_specs[k] = outer_specs[k]
     state_specs = TrainState(
         params=p_specs,
-        ef_residual=(p_specs if comp.server == "scaled_sign_ef" else None),
+        ef_residual=(p_specs if engine.needs_server_ef(comp.server) else None),
         step=P(), seed=P())
     batch_spec = P(axes if len(axes) > 1 else axes[0])
 

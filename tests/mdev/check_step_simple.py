@@ -87,6 +87,21 @@ def main():
     print("OK simple-step == 4-worker oracle (majority vote, sparsign)")
     print("metrics:", {k: float(v) for k, v in metrics.items()})
 
+    # engine backend check: the same step built on the Pallas kernels
+    # (interpret mode on CPU) must match the jnp-backend oracle bitwise —
+    # the oracle above is the pre-refactor reference stream (raw compressors,
+    # no engine), so this pins kernels == engine == pre-refactor in one shot.
+    scfg_i = TrainStepConfig(compression=comp, lr=lr_sched, worker_axes=("data",),
+                             donate=False, backend="interpret")
+    step_i = build_train_step(model, scfg_i, mesh)
+    with compat.set_mesh(mesh):
+        st_i, _ = step_i(state, batch)
+    flat_i = jax.tree_util.tree_flatten(
+        jax.tree_util.tree_map(np.asarray, st_i.params))[0]
+    ndiff_i = sum(int((a != b).sum()) for a, b in zip(flat_i, flat_w))
+    assert ndiff_i == 0, f"interpret backend: {ndiff_i} mismatched coordinates"
+    print("OK engine interpret backend == pre-refactor oracle (bitwise)")
+
     # EF server variant runs + residual finite
     comp2 = CompressionConfig(compressor="sparsign", budget=BudgetConfig(kind="fixed", value=2.0),
                               server="scaled_sign_ef")

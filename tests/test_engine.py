@@ -1,0 +1,167 @@
+"""Backend equivalence for the compression engine.
+
+The contract the engine sells: ``jnp``, ``interpret`` and ``pallas`` are the
+same algorithm bit-for-bit (shared counter-based PRNG; the kernels regenerate
+it in-register). CI pins ``jnp == interpret`` on CPU; on a real TPU the same
+tests pin ``jnp == pallas``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.algorithm import (MAX_LOCAL_STEPS, CompressionConfig,
+                                  local_update_message)
+from repro.core.budgets import BudgetConfig
+
+# odd sizes exercise the canonical-view padding; bf16 the kernel upcast path
+SHAPES = [(63,), (1000,), (7, 333)]
+DTYPES = ["float32", "bfloat16"]
+OTHER = "interpret" if jax.default_backend() != "tpu" else "pallas"
+
+
+def _cfg(compressor="sparsign", server="majority_vote", value=1.0):
+    return CompressionConfig(compressor=compressor,
+                             budget=BudgetConfig(kind="fixed", value=value),
+                             server=server)
+
+
+# only sparsign has a kernel (KERNEL_COMPRESSORS); the other compressors fall
+# back to the identical jnp path on every backend, so testing them here would
+# compare a function's output to itself
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("compressor", ["sparsign"])
+def test_compress_leaf_backend_equivalence(shape, dtype, compressor):
+    g = jnp.asarray(np.random.RandomState(0).randn(*shape), dtype)
+    for counter_base in (0, 12345):
+        a = engine.compress_leaf(g, _cfg(compressor), 9, counter_base, backend="jnp")
+        b = engine.compress_leaf(g, _cfg(compressor), 9, counter_base, backend=OTHER)
+        assert a.values.dtype == jnp.int8 and b.values.dtype == jnp.int8
+        assert a.values.shape == g.shape
+        assert np.array_equal(np.asarray(a.values), np.asarray(b.values))
+        assert np.array_equal(np.asarray(a.scale), np.asarray(b.scale))
+
+
+@pytest.mark.parametrize("server", ["majority_vote", "scaled_sign_ef", "mean"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_server_apply_backend_equivalence(server, dtype):
+    rng = np.random.RandomState(1)
+    p = jnp.asarray(rng.randn(777), dtype)
+    vote_sum = jnp.asarray(rng.randint(-5, 6, 777), jnp.int32)
+    ef = jnp.asarray(rng.randn(777), jnp.float32)
+    kw = dict(lr=0.05, ef=ef, n_sel=jnp.float32(4.0))
+    a_p, a_ef = engine.server_apply(p, vote_sum, _cfg(server=server), backend="jnp", **kw)
+    b_p, b_ef = engine.server_apply(p, vote_sum, _cfg(server=server), backend=OTHER, **kw)
+    assert a_p.dtype == p.dtype and b_p.dtype == p.dtype
+    assert np.array_equal(np.asarray(a_p), np.asarray(b_p))
+    assert np.array_equal(np.asarray(a_ef), np.asarray(b_ef))
+
+
+@pytest.mark.parametrize("backend", ["jnp", OTHER])
+def test_server_apply_sharded_scale_matches_unsharded(backend):
+    """streamed-mode contract: per-shard server_apply with an l1_reduce over the
+    shards == one whole-leaf server_apply, for the EF server. The non-jnp case
+    exercises ef_server_op's external-scale parameter on partial shards."""
+    rng = np.random.RandomState(2)
+    n, k = 1024, 4
+    p = jnp.asarray(rng.randn(n), jnp.float32)
+    votes = jnp.asarray(rng.randint(-3, 4, n), jnp.int32)
+    ef = jnp.asarray(rng.randn(n), jnp.float32)
+    cfg = _cfg(server="scaled_sign_ef")
+    whole_p, whole_ef = engine.server_apply(p, votes, cfg, lr=0.1, ef=ef,
+                                            n_sel=2.0, backend="jnp")
+    # the cross-shard-reduced L1 the streamed trainer would psum (computed here
+    # with the same whole-leaf reduction so the comparison is bitwise)
+    total_l1 = jnp.sum(jnp.abs(votes.astype(jnp.float32) / 2.0 + ef))
+    got_p, got_ef = [], []
+    for j in range(k):
+        sl = slice(j * (n // k), (j + 1) * (n // k))
+        sp, se = engine.server_apply(
+            p[sl], votes[sl], cfg, lr=0.1, ef=ef[sl], n_sel=2.0,
+            leaf_size=n, l1_reduce=lambda part: total_l1, backend=backend)
+        got_p.append(sp)
+        got_ef.append(se)
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(got_p)), np.asarray(whole_p))
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(got_ef)), np.asarray(whole_ef))
+
+
+def test_backend_resolution(monkeypatch):
+    monkeypatch.delenv(engine.ENV_VAR, raising=False)
+    auto = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert engine.resolve_backend() == auto
+    assert engine.resolve_backend("auto") == auto
+    monkeypatch.setenv(engine.ENV_VAR, "interpret")
+    assert engine.resolve_backend() == "interpret"
+    assert engine.resolve_backend("jnp") == "jnp"  # explicit beats env
+    monkeypatch.setenv(engine.ENV_VAR, "nope")
+    with pytest.raises(ValueError):
+        engine.resolve_backend()
+
+
+def test_env_var_drives_dispatch(monkeypatch):
+    """The env-var path end-to-end: backend=None + $REPRO_KERNEL_BACKEND must
+    actually steer dispatch (kernel vs reference) and stay bitwise-equal."""
+    g = jnp.asarray(np.random.RandomState(5).randn(513), jnp.float32)
+    monkeypatch.setenv(engine.ENV_VAR, "jnp")
+    a = engine.compress_leaf(g, _cfg(), 3, 7)
+    monkeypatch.setenv(engine.ENV_VAR, OTHER)
+    b = engine.compress_leaf(g, _cfg(), 3, 7)
+    assert np.array_equal(np.asarray(a.values), np.asarray(b.values))
+    p = jnp.asarray(np.random.RandomState(6).randn(513), jnp.float32)
+    v = jnp.asarray(np.random.RandomState(7).randint(-3, 4, 513), jnp.int8)
+    pb, _ = engine.server_apply(p, v, _cfg(), lr=0.1)
+    monkeypatch.setenv(engine.ENV_VAR, "jnp")
+    pa, _ = engine.server_apply(p, v, _cfg(), lr=0.1)
+    assert np.array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def test_vote_server_predicates():
+    assert engine.is_vote_server(_cfg(server="majority_vote"))
+    assert engine.is_vote_server(_cfg(server="scaled_sign_ef"))
+    assert not engine.is_vote_server(_cfg(server="mean"))
+    assert engine.needs_server_ef("scaled_sign_ef")
+    assert not engine.needs_server_ef("majority_vote")
+
+
+def test_unknown_server_raises():
+    with pytest.raises(ValueError, match="server rule"):
+        engine.server_apply(jnp.zeros(8), jnp.zeros(8, jnp.int32),
+                            _cfg(server="bogus"), lr=0.1)
+
+
+def test_local_step_config_budget_fallback():
+    cfg = _cfg(value=3.0)
+    assert engine.local_budget_value(cfg) == 3.0            # fixed B_g doubles as B_l
+    cfg2 = CompressionConfig(budget=BudgetConfig(value=3.0), local_budget=10.0)
+    assert engine.local_budget_value(cfg2) == 10.0
+    lc = engine.local_step_config(cfg2)
+    assert lc.compressor == "sparsign" and lc.budget.kind == "fixed"
+    assert lc.budget.value == 10.0 and lc.local_steps == 1
+    # BudgetConfig.local_value sits between the two
+    cfg3 = CompressionConfig(budget=BudgetConfig(value=3.0, local_value=7.0))
+    assert engine.local_budget_value(cfg3) == 7.0
+    # non-fixed budget kinds don't leak their value (an nnz fraction) into B_l
+    cfg4 = CompressionConfig(budget=BudgetConfig(kind="target_sparsity", value=0.01))
+    assert engine.local_budget_value(cfg4) == 1.0
+
+
+def test_tau_overflow_guard():
+    with pytest.raises(ValueError, match="local_steps"):
+        CompressionConfig(local_steps=0)
+    with pytest.raises(ValueError, match="local_steps"):
+        CompressionConfig(local_steps=MAX_LOCAL_STEPS + 1)
+
+
+def test_local_update_accumulator_is_int32():
+    """Regression for the int8 accumulator: with tau=200 and a saturating local
+    budget every inner step votes +1, so the accumulated message must be
+    exactly +tau per coordinate (int8 would have wrapped at 128)."""
+    tau = 200
+    cfg = CompressionConfig(compressor="identity", local_budget=1e9, local_steps=tau)
+    w0 = jnp.ones((64,), jnp.float32)
+    grad_fn = lambda w, c: jnp.ones_like(w)   # constant positive gradient
+    msg = local_update_message(w0, grad_fn, cfg, eta_l=0.0, seed=3)
+    assert np.all(np.asarray(msg.values) == float(tau)), np.asarray(msg.values)[:4]

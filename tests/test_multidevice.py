@@ -16,6 +16,7 @@ from conftest import run_mdev as _run
 def test_simple_step_equivalence_and_variants():
     out = _run("check_step_simple.py")
     assert "OK simple-step == 4-worker oracle" in out
+    assert "OK engine interpret backend == pre-refactor oracle" in out
     assert "OK EF server" in out
     assert "OK local-update (tau=2)" in out
 
