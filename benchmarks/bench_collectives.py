@@ -1,12 +1,34 @@
 """Wire-byte accounting for one training round: the paper's communication claim
 on TPU terms. First-principles per-device bytes for every exchange variant, per
 architecture — the numbers the collective roofline term is built from, and the
-before/after ledger for §Perf."""
+before/after ledger for §Perf.
+
+Two packed-wire columns: ``sparsign_packed_allgather`` is the closed-form
+d/4-per-worker model; ``packed_real`` is the *actual* ledger from the VoteWire
+implementation (``collectives.PackedVoteWire.wire_bytes`` summed over the real
+per-leaf shapes), which ships padded canonical views — the delta is the
+padding tax the idealized model hides."""
 
 from __future__ import annotations
 
 from benchmarks.common import csv_header, csv_row
 from repro.configs.registry import ARCH_IDS, get_config, trainer_mode
+
+
+def packed_real_bytes(cfg, n_data: int = 16, n_pod: int = 1) -> float:
+    """Per-device bytes of the real allgather_packed wire for one round:
+    (M-1) x sum over gradient leaves of the padded 2-bit payload."""
+    import math
+
+    import jax
+
+    from repro.dist.collectives import PackedVoteWire
+    from repro.models.model import Model
+
+    wire = PackedVoteWire(axes=("data",), n_workers=n_data * n_pod)
+    shapes = Model(cfg).param_shapes()
+    return sum(wire.wire_bytes(math.prod(s.shape))
+               for s in jax.tree_util.tree_leaves(shapes))
 
 
 def wire_model(n_params: int, mode: str, n_data: int = 16, n_pod: int = 1,
@@ -35,7 +57,8 @@ def wire_model(n_params: int, mode: str, n_data: int = 16, n_pod: int = 1,
 def main(fast: bool = False):
     print("# per-device wire bytes per round, by exchange variant (single pod, 16 data)")
     csv_header(["arch", "mode", "params_B", "fp32_dp", "sparsign_int8",
-                "vs_fp32", "fsdp_gather", "hier_2pod"])
+                "vs_fp32", "fsdp_gather", "hier_2pod", "packed_model",
+                "packed_real", "pad_tax"])
     for arch in ARCH_IDS:
         cfg = get_config(arch)
         n = cfg.param_count()
@@ -43,10 +66,14 @@ def main(fast: bool = False):
         base = wire_model(n, mode, variant="fp32_dp")
         ours = wire_model(n, mode, variant="sparsign_int8")
         hier = wire_model(n, mode, n_pod=2, variant="sparsign_int8_hier")
+        packed = wire_model(n, mode, variant="sparsign_packed_allgather")
+        real = packed_real_bytes(cfg)
         csv_row([arch, mode, f"{n/1e9:.2f}e9",
                  f"{base['grad_exchange']:.3e}", f"{ours['grad_exchange']:.3e}",
                  f"{base['grad_exchange']/ours['grad_exchange']:.1f}x",
-                 f"{ours['fsdp_gather']:.3e}", f"{hier['grad_exchange']:.3e}"])
+                 f"{ours['fsdp_gather']:.3e}", f"{hier['grad_exchange']:.3e}",
+                 f"{packed['grad_exchange']:.3e}", f"{real:.3e}",
+                 f"{real / packed['grad_exchange'] - 1:+.1%}"])
 
 
 if __name__ == "__main__":

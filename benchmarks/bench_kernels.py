@@ -25,11 +25,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_header, csv_row, timed
+from repro.kernels import common as kcommon
 from repro.kernels.ef_server.ops import ef_server_op
 from repro.kernels.ef_server.ref import ef_scale, ef_server_ref
 from repro.kernels.pack2bit.ops import pack2bit_op
+from repro.kernels.pack2bit.ref import pack2bit_ref
 from repro.kernels.sparsign.ops import sparsign_op
 from repro.kernels.sparsign.ref import sparsign_ref
+from repro.kernels.sparsign_pack2bit.ops import sparsign_pack2bit_op
 from repro.kernels.vote_update.ops import vote_update_op
 from repro.kernels.vote_update.ref import vote_update_ref
 
@@ -58,6 +61,12 @@ BYTES_PER_COORD = {
     ("ef_server", "pallas"): 8 + 8,       # (d,e) in, (out,e') out fused
     ("ef_server", "jnp"): 8 * 3,          # ~4-pass unfused chain over (d,e)
     ("pack2bit", "pallas"): 1 + 0.25,
+    # the allgather_packed uplink, fused vs two-pass: fused reads the f32
+    # gradient and writes wire bytes in ONE kernel (the int8 ternary tensor
+    # never exists in HBM); two-pass pays the compress write + pack read
+    ("uplink_fused", "pallas"): 4 + 0.25,
+    ("uplink_two_pass", "pallas"): (4 + 1) + (1 + 0.25),
+    ("uplink_two_pass", "jnp"): (4 + 4 + 4 + 1) + (1 + 0.25),
 }
 
 
@@ -76,6 +85,10 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
     sparsign_jnp = jax.jit(lambda x: sparsign_ref(x, 1.0, 7))
     vote_update_jnp = jax.jit(lambda a, b: vote_update_ref(a, b, 0.01))
     ef_server_jnp = jax.jit(lambda d, r: ef_server_ref(d, r, ef_scale(d, r))[0])
+    # all-jnp two-pass uplink (what the engine's jnp backend runs for the
+    # packed wire): reference compress + reference pack over the canonical view
+    uplink_jnp = jax.jit(lambda x: pack2bit_ref(
+        kcommon.to_2d(sparsign_ref(x, 1.0, 7).reshape(-1))[0]))
 
     cases = [
         ("sparsign", "pallas",
@@ -92,7 +105,26 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
          lambda: jax.block_until_ready(ef_server_jnp(g, e))),
         ("pack2bit", "pallas",
          lambda: jax.block_until_ready(pack2bit_op(t))),
+        ("uplink_fused", "pallas",
+         lambda: jax.block_until_ready(sparsign_pack2bit_op(g, 1.0, 7))),
+        ("uplink_two_pass", "pallas",
+         lambda: jax.block_until_ready(pack2bit_op(sparsign_op(g, 1.0, 7)))),
+        ("uplink_two_pass", "jnp",
+         lambda: jax.block_until_ready(uplink_jnp(g))),
     ]
+    # structural guarantee behind the fused uplink's byte count: no int8
+    # ternary tensor at the HBM level (the two-pass chains have one of >= n),
+    # measured per backend on the exact chains timed above
+    fused_i8 = kcommon.int8_hbm_elems(lambda x: sparsign_pack2bit_op(x, 1.0, 7), g)
+    two_pass_i8 = kcommon.int8_hbm_elems(
+        lambda x: pack2bit_op(sparsign_op(x, 1.0, 7)), g)
+    two_pass_jnp_i8 = kcommon.int8_hbm_elems(uplink_jnp, g)
+    assert fused_i8 == 0, f"fused uplink materializes {fused_i8} int8 elems in HBM"
+    assert two_pass_i8 >= n and two_pass_jnp_i8 >= n
+    int8_hbm = {("uplink_fused", "pallas"): 0,
+                ("uplink_two_pass", "pallas"): two_pass_i8,
+                ("uplink_two_pass", "jnp"): two_pass_jnp_i8}
+
     for kernel, backend, fn in cases:
         _, dt = timed(fn)
         label = pallas_label if backend == "pallas" else "jnp"
@@ -105,6 +137,8 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
             "us_per_call": round(dt * 1e6, 1),
             "hbm_bytes_per_coord_tpu": BYTES_PER_COORD.get((kernel, backend)),
         }
+        if (kernel, backend) in int8_hbm:
+            rec["int8_hbm_intermediate_elems"] = int8_hbm[(kernel, backend)]
         records.append(rec)
         csv_row([kernel, name, label, rec["us_per_call"],
                  rec["hbm_bytes_per_coord_tpu"]])

@@ -39,9 +39,13 @@ import jax.numpy as jnp
 from repro.core.budgets import BudgetConfig, resolve_budget
 from repro.core.compressors import (SCALE_FREE, CompressedGrad,
                                     compress_leaf_chunked, get_compressor)
+from repro.kernels import common as kcommon
 from repro.kernels.ef_server.ops import ef_server_op
 from repro.kernels.ef_server.ref import ef_server_ref
+from repro.kernels.pack2bit.ops import pack2bit_op
+from repro.kernels.pack2bit.ref import pack2bit_ref
 from repro.kernels.sparsign.ops import sparsign_op
+from repro.kernels.sparsign_pack2bit.ops import sparsign_pack2bit_op
 from repro.kernels.vote_update.ops import vote_update_op
 from repro.kernels.vote_update.ref import vote_update_ref
 
@@ -114,6 +118,7 @@ def compress_leaf(
     *,
     shared_linf=None,
     backend: Optional[str] = None,
+    wire=None,
 ) -> CompressedGrad:
     """Q(g, B): one worker's uplink message for a single tensor leaf.
 
@@ -121,18 +126,45 @@ def compress_leaf(
     backends (RNG regenerated in-register — no chunking needed at any size);
     every other compressor, and the jnp backend, runs the reference path with
     chunking for the scale-free family.
+
+    ``wire`` (a ``repro.dist.collectives.VoteWire``, or None) selects the
+    message's *wire-native* format. When the wire wants the 2-bit packed
+    format, ``values`` is the packed uint8 canonical view — produced in one
+    fused pass (gradient -> wire bytes, no int8 ternary tensor in HBM) when
+    the compressor has a fused kernel, else compressed then packed. The bytes
+    are identical either way; only the number of HBM round-trips differs.
     """
     backend = resolve_backend(backend)
     budget = resolve_budget(cfg.budget, g, shared_linf=shared_linf)
+    want_packed = wire is not None and wire.wants_packed
+    if want_packed and not cfg.is_ternary:
+        raise ValueError(
+            f"the 2-bit packed vote wire carries ternary messages only; "
+            f"compressor {cfg.compressor!r} is not ternary")
     if backend != "jnp" and cfg.compressor in KERNEL_COMPRESSORS:
+        if want_packed:
+            packed = sparsign_pack2bit_op(g, budget, seed, counter_base,
+                                          interpret=(backend == "interpret"))
+            return CompressedGrad(values=packed, scale=jnp.float32(1.0))
         vals = sparsign_op(g, budget, seed, counter_base,
                            interpret=(backend == "interpret"))
         return CompressedGrad(values=vals, scale=jnp.float32(1.0))
     fn = get_compressor(cfg.compressor)
     if cfg.compressor in SCALE_FREE:
-        return compress_leaf_chunked(fn, g, budget=budget, seed=seed,
-                                     counter_base=counter_base)
-    return fn(g, budget=budget, seed=seed, counter_base=counter_base)
+        msg = compress_leaf_chunked(fn, g, budget=budget, seed=seed,
+                                    counter_base=counter_base)
+    else:
+        msg = fn(g, budget=budget, seed=seed, counter_base=counter_base)
+    if want_packed:
+        # two-pass fallback (ternary compressors without a fused kernel, and
+        # the jnp reference backend): same wire bytes, one extra round-trip
+        if backend == "jnp":
+            view, _ = kcommon.to_2d(msg.values.reshape(-1))
+            packed = pack2bit_ref(view)
+        else:
+            packed = pack2bit_op(msg.values, interpret=(backend == "interpret"))
+        return CompressedGrad(values=packed, scale=msg.scale)
+    return msg
 
 
 # ---------------------------------------------------------------------------

@@ -1,31 +1,44 @@
-"""Worker-axis collectives for the vote exchange (Algorithm 1 step 3).
+"""Worker-axis collectives for the vote exchange (Algorithm 1 step 3), and the
+``VoteWire`` abstraction every hot-path consumer speaks.
 
 The paper's M workers are the devices along the mesh worker axes ('pod',
-'data'). Each worker holds an int8 ternary message per gradient leaf; the
-server sum is a collective over those axes, computed redundantly on every
-worker so the downlink is free. Three wire-equivalent variants:
+'data'). Each worker holds a ternary message per gradient leaf; the server sum
+is a collective over those axes, computed redundantly on every worker so the
+downlink is free. Three wire-equivalent variants:
 
 - ``vote_psum``:             one integer psum — the production default.
 - ``vote_psum_hier``:        two-level psum (int8 within a pod, widened
                              across pods) matching the hierarchical wire
                              model in benchmarks/bench_collectives.py.
 - ``vote_allgather_packed``: all-gather of 2-bit-packed votes (the
-                             kernels/pack2bit wire format) + local decode-sum;
-                             costs M*d/4 bytes on the wire, honest about the
-                             "no integer reduction on the fabric" regime.
+                             kernels/pack2bit wire format) + fused local
+                             decode-sum; costs M*d/4 bytes on the wire, honest
+                             about the "no integer reduction on the fabric"
+                             regime.
 
 All three return the same per-coordinate vote total; the equivalence is
-pinned by tests/mdev/check_collectives.py on a forced 8-device host mesh.
+pinned by tests/mdev/check_collectives.py on a forced 8-device host mesh and
+by tests/mdev/check_wires.py at the train-step level.
+
+``make_vote_wire(impl, axes, mesh)`` builds the wire object at step-build
+time. A wire knows its *native message format* (``wants_packed``: int8 ternary
+tensor vs 2-bit packed canonical view — what ``engine.compress_leaf(wire=...)``
+emits), how to mask/count/exchange messages in that format, and its
+per-round per-device wire-byte ledger (``wire_bytes``), computed from the real
+buffer sizes (including canonical-view padding), not an idealized model.
 """
 
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.dist import compat
+
+VOTE_IMPLS = ("psum", "hier", "allgather_packed")
 
 
 def axis_size(name) -> int:
@@ -60,6 +73,16 @@ def _sum_dtype(n_workers: int):
     return jnp.int32
 
 
+def packed_nbytes(n_coords: int) -> int:
+    """Actual bytes of the 2-bit packed wire for an n-coordinate leaf: the
+    canonical (rows, LANES) view is padded to the sublane tile, and the padded
+    rows ship. This is the *real* per-worker payload (vs the idealized d/4)."""
+    from repro.kernels import common as kcommon
+    rows = -(-n_coords // kcommon.LANES)
+    rows = -(-rows // kcommon.SUBLANE_PAD) * kcommon.SUBLANE_PAD
+    return rows * (kcommon.LANES // 4)
+
+
 def vote_psum(votes: jnp.ndarray, axes: Sequence[str], n_workers: int) -> jnp.ndarray:
     """Integer psum of ternary votes over the worker axes."""
     return jax.lax.psum(votes.astype(_sum_dtype(int(n_workers))), tuple(axes))
@@ -77,22 +100,159 @@ def vote_psum_hier(votes: jnp.ndarray, inner_axis: str, outer_axis: str,
 
 
 def vote_allgather_packed(votes: jnp.ndarray, axes: Sequence[str],
-                          n_workers: int) -> jnp.ndarray:
-    """All-gather of 2-bit-packed votes + local decode-sum.
+                          n_workers: int, *, backend: Optional[str] = None) -> jnp.ndarray:
+    """All-gather of 2-bit-packed votes + fused local decode-sum.
 
     Wire bytes = M * ceil(d/4) per device (vs the psum's reduced payload) —
     the trade the paper's Table reports for fabrics without int reductions.
-    Packing uses the pack2bit kernel's canonical block-interleaved format;
-    decode is the pure-jnp oracle vmapped over workers (gathered bytes are
-    small by construction, and the unpack is bandwidth-trivial).
+    Packing uses the pack2bit kernel's canonical block-interleaved format; the
+    decode side is the fused unpack+accumulate kernel (``unpack2bit_sum_op``),
+    so the (M, rows, LANES) int8 ternary tensor never materializes —
+    ``backend="jnp"`` selects the vmapped oracle instead.
     """
-    from repro.kernels import common as kcommon
     from repro.kernels.pack2bit.ops import pack2bit_op
-    from repro.kernels.pack2bit.ref import unpack2bit_ref
 
-    packed = pack2bit_op(votes.astype(jnp.int8))          # (rows, LANES//4) u8
-    gathered = jax.lax.all_gather(packed, tuple(axes), axis=0, tiled=False)
-    ternary = jax.vmap(unpack2bit_ref)(gathered)          # (M, rows, LANES) i8
-    total = jnp.sum(ternary.astype(jnp.int32), axis=0)
-    total = kcommon.from_2d(total, votes.size, votes.shape)
+    interpret = (backend == "interpret") if backend is not None else None
+    packed = pack2bit_op(votes.astype(jnp.int8), interpret=interpret)
+    total = _packed_decode_sum(
+        jax.lax.all_gather(packed, tuple(axes), axis=0, tiled=False),
+        votes.size, votes.shape, backend=backend)
     return total.astype(_sum_dtype(int(n_workers)))
+
+
+def _packed_decode_sum(gathered: jnp.ndarray, size: int, shape,
+                       *, backend: Optional[str]) -> jnp.ndarray:
+    """(M, rows, q) gathered packed votes -> int32 vote sum in ``shape``,
+    dispatched like the engine: jnp -> vmapped oracle, else fused kernel."""
+    from repro.kernels import common as kcommon
+    from repro.kernels.pack2bit.ops import unpack2bit_sum_op
+    from repro.kernels.pack2bit.ref import unpack2bit_sum_ref
+
+    if backend == "jnp":
+        return kcommon.from_2d(unpack2bit_sum_ref(gathered), size, shape)
+    interpret = (backend == "interpret") if backend is not None else None
+    return unpack2bit_sum_op(gathered, size, shape, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# The wire abstraction
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VoteWire:
+    """One vote-exchange wire: message format + collective + byte ledger.
+
+    Static (python-level) object closed over by the jitted train step; built
+    once per step via ``make_vote_wire``. ``exchange`` must run inside the
+    worker-axes shard_map. All wires return the same vote totals bitwise —
+    only the message format and the bytes on the fabric differ.
+    """
+
+    axes: Tuple[str, ...]
+    n_workers: int
+
+    name = "psum"
+    #: native uplink message format: False -> int8 ternary tensor (leaf shape),
+    #: True -> 2-bit packed uint8 canonical view (rows, LANES//4)
+    wants_packed = False
+
+    def mask_message(self, values: jnp.ndarray, mask) -> jnp.ndarray:
+        """Zero a non-participating worker's message, in wire-native format
+        (an all-zero packed byte decodes to four zero votes)."""
+        return jnp.where(mask, values, jnp.zeros((), values.dtype))
+
+    def message_nnz(self, values: jnp.ndarray) -> jnp.ndarray:
+        """Number of nonzero votes in one wire-native message (f32 scalar)."""
+        return jnp.sum(jnp.abs(values).astype(jnp.float32))
+
+    def exchange(self, values: jnp.ndarray, size: int, shape) -> jnp.ndarray:
+        """Wire-native message -> integer vote sum of shape ``shape``."""
+        return vote_psum(values, self.axes, self.n_workers)
+
+    def wire_bytes(self, n_coords: int) -> float:
+        """Per-device wire bytes to exchange one n-coordinate leaf's votes
+        (ring-collective first principles, real payload sizes)."""
+        m = self.n_workers
+        payload = n_coords * jnp.dtype(_sum_dtype(m)).itemsize
+        return 2.0 * (m - 1) / m * payload
+
+
+@dataclasses.dataclass(frozen=True)
+class HierVoteWire(VoteWire):
+    """Two-level psum: narrow within axes[1] (intra-pod), widened across
+    axes[0] (DCN hop). Requires exactly two worker axes."""
+
+    inner_size: int = 1
+    outer_size: int = 1
+
+    name = "hier"
+
+    def exchange(self, values, size, shape):
+        return vote_psum_hier(values, self.axes[1], self.axes[0],
+                              self.inner_size, self.outer_size)
+
+    def wire_bytes(self, n_coords):
+        ni, no = self.inner_size, self.outer_size
+        inner = 2.0 * (ni - 1) / ni * n_coords * jnp.dtype(_sum_dtype(ni)).itemsize
+        outer = 2.0 * (no - 1) / max(no, 1) * n_coords * jnp.dtype(_sum_dtype(ni * no)).itemsize
+        return inner + outer
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedVoteWire(VoteWire):
+    """All-gather of the 2-bit packed wire + fused decode-sum. The message IS
+    the packed canonical view — produced in one pass by the fused
+    sparsign_pack2bit kernel on the kernel backends."""
+
+    backend: Optional[str] = None
+
+    name = "allgather_packed"
+    wants_packed = True
+
+    def message_nnz(self, values):
+        # count nonzero 2-bit codes straight off the bytes: codes are {0,1,2},
+        # so (b | b>>1) has bit 0 of each code set iff the code is nonzero
+        nz = (values | (values >> 1)) & jnp.uint8(0x55)
+        cnt = ((nz & 1) + ((nz >> 2) & 1) + ((nz >> 4) & 1) + ((nz >> 6) & 1))
+        return jnp.sum(cnt.astype(jnp.float32))
+
+    def exchange(self, values, size, shape):
+        gathered = jax.lax.all_gather(values, self.axes, axis=0, tiled=False)
+        total = _packed_decode_sum(gathered, size, shape, backend=self.backend)
+        return total.astype(_sum_dtype(self.n_workers))
+
+    def wire_bytes(self, n_coords):
+        # ring all-gather: each device transmits its (padded) packed payload
+        # to M-1 peers — no reduction on the fabric
+        return float((self.n_workers - 1) * packed_nbytes(n_coords))
+
+
+def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
+                   backend: Optional[str] = None) -> VoteWire:
+    """Build the wire for ``impl`` over the worker ``axes`` at step-build time.
+
+    Axis sizes come from ``mesh.shape`` when a mesh is given (the builders'
+    path — errors surface before tracing), else from the ambient axis env
+    (valid inside shard_map). ``backend`` steers the packed wire's decode-sum
+    dispatch exactly like the engine's kernel backends.
+    """
+    axes = tuple(axes)
+    if impl not in VOTE_IMPLS:
+        raise ValueError(f"unknown vote_impl {impl!r}; known: {VOTE_IMPLS}")
+    if impl == "hier" and len(axes) != 2:
+        raise ValueError(
+            f"vote_impl='hier' needs exactly two worker axes (outer, inner) "
+            f"— e.g. ('pod', 'data') — got {axes!r}. Use vote_impl='psum' "
+            f"for a flat worker domain; silently substituting the flat wire "
+            f"here would misreport the hierarchical byte ledger.")
+    sizes = tuple(int(mesh.shape[a]) for a in axes) if mesh is not None \
+        else tuple(compat.axis_size(a) for a in axes)
+    n = 1
+    for s in sizes:
+        n *= s
+    if impl == "hier":
+        return HierVoteWire(axes=axes, n_workers=n,
+                            inner_size=sizes[1], outer_size=sizes[0])
+    if impl == "allgather_packed":
+        return PackedVoteWire(axes=axes, n_workers=n, backend=backend)
+    return VoteWire(axes=axes, n_workers=n)

@@ -14,13 +14,40 @@ to this packing.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 LANES = 512            # lane-dim width of the canonical view (4 * 128)
 SUBLANE_PAD = 32       # row padding multiple (int8 sublane tile)
 DEFAULT_BLOCK_ROWS = 256
+
+# murmur3 finalizer constants as numpy scalars (NOT jnp arrays) so they inline
+# as literals inside Pallas kernel bodies. One copy shared by every kernel
+# that regenerates the counter stream; must mirror repro.core.prng exactly —
+# tests pin kernel == prng-based oracle bitwise.
+RNG_C1 = np.uint32(0x85EBCA6B)
+RNG_C2 = np.uint32(0xC2B2AE35)
+RNG_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def mix32(x):
+    """murmur3 fmix32 over uint32 values, kernel-inlinable (literal constants).
+    The in-kernel twin of ``repro.core.prng.mix32``."""
+    x = x ^ (x >> 16)
+    x = x * RNG_C1
+    x = x ^ (x >> 13)
+    x = x * RNG_C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def encode2bit(x):
+    """ternary int8 {-1,0,1} -> 2-bit code uint8 {2,0,1} (the pack2bit wire
+    codebook); shared by the pack and fused compress+pack kernels."""
+    return jnp.where(x < 0, jnp.uint8(2), x.astype(jnp.uint8))
 
 
 def default_interpret() -> bool:
@@ -59,6 +86,46 @@ def block_rows_for(rows: int, want: int = DEFAULT_BLOCK_ROWS) -> int:
 def smem_scalar(x, dtype) -> jnp.ndarray:
     """Scalars ride in SMEM as (1, 1) arrays."""
     return jnp.asarray(x, dtype=dtype).reshape(1, 1)
+
+
+def int8_hbm_elems(fn, *args) -> int:
+    """Element count of int8 arrays materialized *between* ops when tracing
+    ``fn(*args)`` — i.e. HBM-level int8 traffic. Walks the jaxpr recursively
+    but never descends into a pallas_call's kernel body (whose int8 values
+    live in VMEM registers). Used by the wire tests/bench to pin that the
+    fused sparsign->pack2bit uplink has no int8 ternary intermediate while
+    the two-pass chain necessarily does."""
+    try:
+        from jax.extend import core as jcore
+    except ImportError:  # pragma: no cover — very old jax
+        from jax import core as jcore
+
+    closed = jax.make_jaxpr(fn)(*args)
+    total = 0
+
+    def sub_jaxprs(params):
+        for v in params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for x in vs:
+                if isinstance(x, jcore.ClosedJaxpr):
+                    yield x.jaxpr
+                elif isinstance(x, jcore.Jaxpr):
+                    yield x
+
+    def visit(jaxpr):
+        nonlocal total
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and getattr(aval, "dtype", None) == jnp.int8:
+                    total += math.prod(aval.shape)
+            if eqn.primitive.name == "pallas_call":
+                continue  # kernel-internal values are VMEM, not HBM
+            for sub in sub_jaxprs(eqn.params):
+                visit(sub)
+
+    visit(closed.jaxpr)
+    return total
 
 
 @functools.lru_cache(maxsize=None)

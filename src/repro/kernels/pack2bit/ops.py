@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import common
-from repro.kernels.pack2bit.kernel import pack2bit_2d, unpack2bit_2d
+from repro.kernels.pack2bit.kernel import (pack2bit_2d, unpack2bit_2d,
+                                           unpack2bit_sum_2d)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -33,3 +34,21 @@ def unpack2bit_op(packed: jnp.ndarray, n: int, shape, *, interpret: bool | None 
     br = common.block_rows_for(packed.shape[0])
     t2d = unpack2bit_2d(packed, block_rows=br, interpret=interpret)
     return common.from_2d(t2d, n, shape)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "shape", "interpret"))
+def unpack2bit_sum_op(gathered: jnp.ndarray, n: int, shape, *,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """(M, rows, LANES//4) gathered packed votes -> int32 vote sum in ``shape``.
+
+    Fused decode+accumulate (see unpack2bit_sum_2d); the decode side of the
+    ``allgather_packed`` wire. Block rows shrink with M so the (M, block, q)
+    input block stays within a ~2 MiB VMEM budget at any worker count.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    m, rows, q = gathered.shape
+    want = max(common.SUBLANE_PAD, min(common.DEFAULT_BLOCK_ROWS, (1 << 21) // max(1, m * q)))
+    br = common.block_rows_for(rows, want=want)
+    total2d = unpack2bit_sum_2d(gathered, block_rows=br, interpret=interpret)
+    return common.from_2d(total2d, n, shape)

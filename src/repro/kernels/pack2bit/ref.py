@@ -11,6 +11,7 @@ the property tests enforce.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -39,3 +40,12 @@ def unpack2bit_ref(p2d: jnp.ndarray) -> jnp.ndarray:
     """(rows, L//4) uint8 -> (rows, L) int8 ternary."""
     parts = [_decode((p2d >> (2 * k)) & jnp.uint8(3)) for k in range(4)]
     return jnp.concatenate(parts, axis=1)
+
+
+def unpack2bit_sum_ref(gathered: jnp.ndarray) -> jnp.ndarray:
+    """(M, rows, L//4) packed worker votes -> (rows, L) int32 vote sum.
+
+    Oracle for the fused decode+accumulate kernel: vmapped decode then sum
+    (deliberately materializes the int8 tensor the kernel avoids)."""
+    ternary = jax.vmap(unpack2bit_ref)(gathered)
+    return jnp.sum(ternary.astype(jnp.int32), axis=0)

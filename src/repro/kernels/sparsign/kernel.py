@@ -17,25 +17,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import common
-
-# numpy scalars (not jnp arrays) so they inline as literals inside the kernel
-_C1 = np.uint32(0x85EBCA6B)
-_C2 = np.uint32(0xC2B2AE35)
-_GOLDEN = np.uint32(0x9E3779B9)
-
-
-def _mix32(x):
-    x = x ^ (x >> 16)
-    x = x * _C1
-    x = x ^ (x >> 13)
-    x = x * _C2
-    x = x ^ (x >> 16)
-    return x
+from repro.kernels.common import RNG_GOLDEN, mix32
 
 
 def _kernel(scalars_ref, g_ref, out_ref, *, block_rows: int, lanes: int):
@@ -49,9 +34,9 @@ def _kernel(scalars_ref, g_ref, out_ref, *, block_rows: int, lanes: int):
     cols = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, lanes), 1)
     idx = (jnp.uint32(r0) + rows) * jnp.uint32(lanes) + cols + counter_base
 
-    # counter-hash RNG (must mirror repro.core.prng exactly)
-    c = idx * _GOLDEN
-    bits = _mix32(c ^ _mix32(seed + _GOLDEN))
+    # counter-hash RNG (kernels/common.mix32 — mirrors repro.core.prng exactly)
+    c = idx * RNG_GOLDEN
+    bits = mix32(c ^ mix32(seed + RNG_GOLDEN))
     u = (bits >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
     g = g_ref[...].astype(jnp.float32)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused sparsign->pack2bit kernel: the two-pass
+composition over the shared canonical view. Bitwise-identical to the kernel by
+construction of its constituents."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.pack2bit.ref import pack2bit_ref
+from repro.kernels.sparsign.ref import sparsign_ref
+
+
+def sparsign_pack2bit_ref(g: jnp.ndarray, budget, seed, counter_base=0) -> jnp.ndarray:
+    """(any shape) -> (rows, LANES//4) uint8 packed canonical wire."""
+    t = sparsign_ref(g, budget, seed, counter_base)
+    view, _ = common.to_2d(t.reshape(-1))
+    return pack2bit_ref(view)

@@ -18,7 +18,8 @@ import numpy as np
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import Model
-from repro.serve.decode import build_decode_step, build_prefill
+from repro.serve.decode import (build_decode_step, build_prefill,
+                                build_update_ingest, encode_weight_update)
 
 
 def main(argv=None):
@@ -28,6 +29,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--online-updates", type=int, default=0, metavar="K",
+                    help="apply a (synthetic) training-round weight update over "
+                         "the 2-bit packed downlink wire every K generated "
+                         "tokens — the live-update serving demo")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
@@ -52,6 +57,21 @@ def main(argv=None):
     prefill = build_prefill(model, mesh, worker_axes=("data",))
     decode = build_decode_step(model, mesh, worker_axes=("data",))
 
+    n_updates = 0
+    if args.online_updates:
+        # live-update ingestion: each round ships the quorum-gated ternary
+        # server decision on the 0.25 B/coord packed wire and applies it via
+        # the fused vote_update path (see serve.decode.build_update_ingest)
+        ingest = build_update_ingest(model, mesh, lr=1e-4)
+
+        def synth_round(r):
+            leaves, treedef = jax.tree_util.tree_flatten(params)
+            rr = np.random.RandomState(1000 + r)
+            msgs = [encode_weight_update(
+                jnp.asarray(rr.randint(-2, 3, l.shape), jnp.int32))
+                for l in leaves]
+            return jax.tree_util.tree_unflatten(treedef, msgs)
+
     # NOTE: prefill emits ring/SSD caches sized to the prompt; decode continues
     # into a max_len cache. For the smoke loop we re-init a full-depth cache and
     # replay the prompt through decode (exact, and exercises the decode path).
@@ -67,6 +87,9 @@ def main(argv=None):
         dec_batch = {"inputs": inp, "positions": jnp.full((b, 1), pos, jnp.int32)}
         if cfg.mrope:
             dec_batch["positions3"] = jnp.full((b, 1, 3), pos, jnp.int32)
+        if args.online_updates and pos >= s and (pos - s) % args.online_updates == 0:
+            params = ingest(params, synth_round(n_updates))
+            n_updates += 1
         logits, caches = decode(params, caches, dec_batch)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         if cfg.input_kind == "tokens":
@@ -79,6 +102,9 @@ def main(argv=None):
     n_generated = args.tokens * b
     print(f"generated {n_generated} tokens in {dt:.2f}s "
           f"({n_generated / dt:.1f} tok/s on CPU smoke config)")
+    if n_updates:
+        print(f"applied {n_updates} online weight-update rounds mid-serving "
+              f"(2-bit packed downlink wire, fused vote_update apply)")
     if cfg.input_kind == "tokens":
         print("sample token ids:", np.asarray(nxt[:, 0])[:8].tolist())
 

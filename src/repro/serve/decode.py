@@ -1,10 +1,19 @@
-"""Serving step builders (prefill / decode) — plain jit + GSPMD.
+"""Serving step builders (prefill / decode) — plain jit + GSPMD — plus online
+weight-update ingestion over the training wire.
 
 The paper's technique lives in the training exchange; serving is included to
 prove the parallelism layer covers the assigned inference shapes. Decode cells
 lower ``serve_step`` = one new token against a seq_len-deep cache; long_500k
 (batch 1) shards the cache *sequence* axis across the worker axes and lets
 GSPMD insert the distributed-softmax reductions.
+
+``build_update_ingest`` keeps a serving fleet in lockstep with a live training
+job: the trainer broadcasts each round's server *decision* — the quorum-gated
+sign of the vote sum, a ternary tensor shipped on the same 2-bit packed wire
+format the uplink uses (0.25 B/coord downlink) — and every replica applies it
+through ``engine.server_apply``, i.e. the identical fused vote_update kernel
+the trainers run. Replica params therefore stay bitwise equal to the training
+params without ever shipping weights.
 """
 
 from __future__ import annotations
@@ -14,6 +23,8 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
+from repro.core.algorithm import CompressionConfig
 from repro.dist.sharding import ACT_RULES_SERVE, cache_shardings_tree, tp_param_shardings
 from repro.models.common import axis_rules
 from repro.models.model import Model
@@ -51,6 +62,76 @@ def build_prefill(model: Model, mesh, *, worker_axes: Sequence[str] = ("data",),
                 return model.head_loss(params, h, batch["labels"])
 
     return jax.jit(step)
+
+
+def encode_weight_update(vote_sum: jnp.ndarray, *, quorum: int = 1,
+                         backend: Optional[str] = None) -> jnp.ndarray:
+    """Trainer-side downlink encoder: integer vote sum -> 2-bit packed ternary
+    decision, ``where(|v| >= quorum, sign(v), 0)`` in the pack2bit canonical
+    wire format. ``build_update_ingest`` is the inverse+apply."""
+    from repro.kernels import common as kcommon
+    from repro.kernels.pack2bit.ops import pack2bit_op
+    from repro.kernels.pack2bit.ref import pack2bit_ref
+
+    backend = engine.resolve_backend(backend)
+    v = vote_sum.astype(jnp.int32)
+    step = jnp.where(jnp.abs(v) >= quorum, jnp.sign(v), 0).astype(jnp.int8)
+    if backend == "jnp":
+        view, _ = kcommon.to_2d(step.reshape(-1))
+        return pack2bit_ref(view)
+    return pack2bit_op(step, interpret=(backend == "interpret"))
+
+
+def build_update_ingest(model: Model, mesh, *, lr, quorum: int = 1,
+                        wire: str = "packed2bit", backend: Optional[str] = None,
+                        donate: bool = True):
+    """jit'd ``(params, updates) -> params``: online weight-update ingestion
+    routed through ``engine.server_apply`` (the fused vote_update path).
+
+    ``wire`` selects the downlink message format per leaf:
+      - ``"packed2bit"``: uint8 (rows, LANES//4) canonical views from
+        ``encode_weight_update`` — 0.25 B/coord on the wire; decoded by the
+        fused unpack kernel (backend-dispatched) straight into the update.
+      - ``"int8"``: raw ternary (or small-int vote-sum) tensors in leaf shape.
+
+    The quorum deadband is applied by whichever side signs: packed updates
+    arrive already ternary (the encoder gated them), so they are applied with
+    quorum 1; int wires carry the raw sums and are gated here. Both routes are
+    bitwise-identical to the trainer's own ``server_apply``.
+    """
+    from repro.kernels import common as kcommon
+    from repro.kernels.pack2bit.ops import unpack2bit_op
+    from repro.kernels.pack2bit.ref import unpack2bit_ref
+
+    if wire not in ("packed2bit", "int8"):
+        raise ValueError(f"unknown update wire {wire!r}; known: packed2bit | int8")
+    if wire == "packed2bit" and quorum != 1:
+        raise ValueError(
+            "the packed2bit wire carries already-gated ternary decisions — "
+            "apply the quorum deadband trainer-side in encode_weight_update"
+            "(vote_sum, quorum=...); a replica-side quorum here would be "
+            "silently ignored. Use wire='int8' to gate on the replica.")
+    backend = engine.resolve_backend(backend)
+    cfg = CompressionConfig(compressor="sparsign", server="majority_vote")
+    packed = wire == "packed2bit"
+
+    def ingest(params, updates):
+        def leaf(p, u):
+            if packed:
+                if backend == "jnp":
+                    votes = kcommon.from_2d(unpack2bit_ref(u), p.size, p.shape)
+                else:
+                    votes = unpack2bit_op(u, p.size, p.shape,
+                                          interpret=(backend == "interpret"))
+                q = 1   # the encoder already applied the deadband
+            else:
+                votes, q = u, quorum
+            new_p, _ = engine.server_apply(p, votes, cfg, lr=lr, quorum=q,
+                                           backend=backend)
+            return new_p
+        return jax.tree_util.tree_map(leaf, params, updates)
+
+    return jax.jit(ingest, donate_argnums=(0,) if donate else ())
 
 
 def serve_input_specs(cfg, shape, *, mesh, worker_axes=("data",), shard_seq=False):

@@ -9,7 +9,10 @@ Per round (Algorithm 1 / Algorithm 2 with tau=1..):
   1. every worker computes the local gradient of its microbatch
      (optionally tau compressed local steps, Alg. 2),
   2. compresses each gradient leaf with its worker-specific counter stream,
-  3. one integer psum over the worker axes = upload + server sum,
+     in the vote wire's native format (int8 ternary for the psum wires, fused
+     2-bit packed for `allgather_packed`),
+  3. one wire exchange over the worker axes = upload + server sum
+     (`repro.dist.collectives.VoteWire`: psum | hier | allgather_packed),
   4. C(.) (majority vote sign, or scaled-sign with server-side EF) computed
      redundantly everywhere = free downlink,
   5. SGD update; params stay bitwise identical across workers.
@@ -45,6 +48,7 @@ class TrainStepConfig:
     local_lr: float = 1.0          # eta_L (Alg. 2)
     worker_axes: Sequence[str] = ("data",)
     vote_impl: str = "psum"        # psum | hier | allgather_packed
+    quorum: int = 1                # server deadband: |votes| < quorum -> no step
     donate: bool = True
     backend: Optional[str] = None  # kernel backend; None -> $REPRO_KERNEL_BACKEND
 
@@ -53,17 +57,6 @@ def _leaf_seeds(worker_seed, tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     seeds = [prng.fold_seed(worker_seed, i) for i in range(len(leaves))]
     return jax.tree_util.tree_unflatten(treedef, seeds)
-
-
-def _vote(values: jnp.ndarray, step_cfg: TrainStepConfig, n_workers: int) -> jnp.ndarray:
-    axes = tuple(step_cfg.worker_axes)
-    if step_cfg.vote_impl == "hier" and len(axes) == 2:
-        return collectives.vote_psum_hier(
-            values, axes[1], axes[0],
-            collectives.axis_size(axes[1]), collectives.axis_size(axes[0]))
-    if step_cfg.vote_impl == "allgather_packed":
-        return collectives.vote_allgather_packed(values, axes, n_workers)
-    return collectives.vote_psum(values, axes, n_workers)
 
 
 def _local_grads(model, params, batch, comp_cfg: CompressionConfig, wseed, local_lr,
@@ -109,6 +102,9 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
     comp = step_cfg.compression
     axes = tuple(step_cfg.worker_axes)
     backend = engine.resolve_backend(step_cfg.backend)
+    # built (and validated — hier demands two worker axes) at step-build time
+    wire = collectives.make_vote_wire(step_cfg.vote_impl, axes, mesh,
+                                      backend=backend)
 
     # activation hints may only target auto (non-worker) mesh axes; in pure-DP
     # mode every axis is a worker and no constraints are needed (all compute local)
@@ -138,21 +134,27 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         lr = step_cfg.lr(state.step)
         nnz_acc = jnp.float32(0.0)
         total = 0
+        wire_bytes = 0.0   # per-device uplink ledger (static sizes under jit)
         vote_wire = comp.is_ternary and engine.is_vote_server(comp)
 
         for i, (g, p, ef) in enumerate(zip(leaves, p_leaves, ef_flat)):
             seed_i = prng.fold_seed(wseed, i)
-            msg = engine.compress_leaf(g, comp, seed_i, backend=backend)
             if vote_wire:
-                # ternary int votes: one integer psum = upload + server sum,
-                # then C(.) + SGD fused in the engine
-                votes = jnp.where(mask, msg.values, jnp.int8(0))
-                vote_sum = _vote(votes, step_cfg, n_workers)
-                nnz_acc += jnp.sum(jnp.abs(votes).astype(jnp.float32))
+                # wire-native ternary votes (packed uint8 or int8, per the
+                # wire): one exchange = upload + server sum, then C(.) + SGD
+                # fused in the engine
+                msg = engine.compress_leaf(g, comp, seed_i, backend=backend,
+                                           wire=wire)
+                votes = wire.mask_message(msg.values, mask)
+                vote_sum = wire.exchange(votes, g.size, g.shape)
+                nnz_acc += wire.message_nnz(votes)
+                wire_bytes += wire.wire_bytes(g.size)
                 n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
                 new_p, new_ef = engine.server_apply(
-                    p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel, backend=backend)
+                    p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel,
+                    quorum=step_cfg.quorum, backend=backend)
             else:
+                msg = engine.compress_leaf(g, comp, seed_i, backend=backend)
                 # decoded-float wire: ternary mean servers (TernGrad/QSGD-style)
                 # and every non-ternary baseline ship decode(compress(g)) — fp32
                 # collective bytes, honestly the cost this family pays
@@ -164,6 +166,7 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
                 else:
                     nnz_acc += jnp.sum((dec != 0.0).astype(jnp.float32))
                 vote_sum = jax.lax.psum(dec, axes)
+                wire_bytes += 2.0 * (n_workers - 1) / n_workers * 4 * g.size
                 n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
                 new_p, new_ef = engine.server_apply(
                     p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel, server="mean",
@@ -178,7 +181,8 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         loss_mean = jax.lax.psum(loss, axes) / n_workers
         nnz_mean = jax.lax.psum(nnz_acc, axes) / n_workers / jnp.float32(total)
         metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
-                   "participated": jax.lax.psum(mask.astype(jnp.float32), axes)}
+                   "participated": jax.lax.psum(mask.astype(jnp.float32), axes),
+                   "wire_bytes_per_device": jnp.float32(wire_bytes)}
         new_state = TrainState(params=new_params, ef_residual=new_ef_tree,
                                step=state.step + 1, seed=state.seed)
         return new_state, metrics

@@ -11,7 +11,8 @@ ALL parameters (block stacks AND embed/head) are FSDP-sharded along 'data'
   head:     gather embed/head, loss + vjp for the outer params.
   backward: reverse lax.scan; per superblock: re-gather params, recompute under
             jax.vjp (remat), compress the *local, unreduced* block gradient,
-            psum the int votes over the worker axes, then do ALL server math
+            exchange the wire-native votes over the worker axes (any
+            `vote_impl`: psum | hier | allgather_packed), then do ALL server math
             (sign / scaled-sign EF, SGD) on this rank's shard only — the full
             fp32 update tensor never exists. Gradients die block-by-block.
 
@@ -23,6 +24,7 @@ equivalence test relies on this.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -46,6 +48,8 @@ class StreamedStepConfig:
     lr: LrSchedule
     worker_axes: Sequence[str] = ("data",)
     fsdp_axis: str = "data"
+    vote_impl: str = "psum"        # psum | hier | allgather_packed
+    quorum: int = 1                # server deadband: |votes| < quorum -> no step
     donate: bool = True
     backend: Optional[str] = None  # kernel backend; None -> $REPRO_KERNEL_BACKEND
 
@@ -151,6 +155,9 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                          f"got {comp.server!r}")
     backend = engine.resolve_backend(step_cfg.backend)
     axes = tuple(step_cfg.worker_axes)
+    # built (and validated — hier demands two worker axes) at step-build time
+    wire = collectives.make_vote_wire(step_cfg.vote_impl, axes, mesh,
+                                      backend=backend)
     fsdp_ax = step_cfg.fsdp_axis
     n_shards = mesh.shape[fsdp_ax]
 
@@ -166,6 +173,15 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     idx_tree = jax.tree_util.tree_unflatten(shapes_treedef, list(range(len(flat_shapes))))
     blocks_idx_flat = jax.tree_util.tree_leaves(idx_tree["blocks"])
     total_coords = sum(int(jnp.prod(jnp.array(s.shape))) for s in flat_shapes)
+    # per-round per-device uplink ledger: block leaves exchange once per layer
+    # at their per-layer size (padding is per-exchange, so it multiplies out),
+    # outer leaves once at full size
+    wire_ledger = sum(
+        cfg.n_repeats * wire.wire_bytes(math.prod(s.shape[1:]))
+        for s in jax.tree_util.tree_leaves(shapes["blocks"]))
+    wire_ledger += sum(wire.wire_bytes(math.prod(s.shape))
+                       for k in outer_keys
+                       for s in jax.tree_util.tree_leaves(shapes[k]))
 
     def _gather(leaf, ax):
         return leaf if ax == REPLICATED else jax.lax.all_gather(leaf, fsdp_ax, axis=ax, tiled=True)
@@ -178,15 +194,17 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
 
     def leaf_update(p_shard, g_full, *, seed, counter_base, ef_shard, mask, lr,
                     shard_ax: int, leaf_size: int):
-        """compress(full) -> vote(full, int8) -> server math + SGD on the SHARD.
+        """compress(full) -> wire exchange(full) -> server math + SGD on the SHARD.
 
         The fp32 update/EF tensors only ever exist at shard size; the full-size
-        artifacts are the bf16/f32 gradient (transient, from vjp) and the int8
-        votes (1 B/coord)."""
-        msg = engine.compress_leaf(g_full, comp, seed, counter_base, backend=backend)
-        votes = jnp.where(mask, msg.values, jnp.int8(0))
-        vote_sum = collectives.vote_psum(votes, axes, collectives.worker_count(axes))
-        nnz = jnp.sum(jnp.abs(votes).astype(jnp.float32))
+        artifacts are the bf16/f32 gradient (transient, from vjp) and the
+        wire-native votes (1 B/coord int8 for the psum wires, 0.25 B/coord
+        packed for allgather_packed)."""
+        msg = engine.compress_leaf(g_full, comp, seed, counter_base,
+                                   backend=backend, wire=wire)
+        votes = wire.mask_message(msg.values, mask)
+        vote_sum = wire.exchange(votes, g_full.size, g_full.shape)
+        nnz = wire.message_nnz(votes)
         shard_size = p_shard.shape[shard_ax] if shard_ax != REPLICATED else None
         vs = _slice(vote_sum, shard_ax, shard_size)
         n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
@@ -195,7 +213,8 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                      if shard_ax != REPLICATED else None)
         new_shard, new_ef = engine.server_apply(
             p_shard, vs, comp, lr=lr, ef=ef_shard, n_sel=n_sel,
-            leaf_size=leaf_size, l1_reduce=l1_reduce, backend=backend)
+            leaf_size=leaf_size, l1_reduce=l1_reduce, quorum=step_cfg.quorum,
+            backend=backend)
         return new_shard, new_ef, nnz
 
     def body(state: TrainState, batch):
@@ -310,7 +329,8 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         loss_mean = jax.lax.psum(loss, axes) / n_workers
         nnz_mean = jax.lax.psum(nnz_acc, axes) / n_workers / jnp.float32(total_coords)
         metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
-                   "participated": jax.lax.psum(mask.astype(jnp.float32), axes)}
+                   "participated": jax.lax.psum(mask.astype(jnp.float32), axes),
+                   "wire_bytes_per_device": jnp.float32(wire_ledger)}
         new_state = TrainState(params=new_params, ef_residual=new_ef,
                                step=state.step + 1, seed=state.seed)
         return new_state, metrics

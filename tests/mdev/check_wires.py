@@ -1,0 +1,108 @@
+"""Wire-equivalence at the train-step level, on 8 forced host devices.
+
+Mesh (2 pod, 2 data, 2 model), worker_axes=('pod','data') -> M=4 workers, so
+all three wires are exercisable in one program. Property: the per-round param
+update must not depend on HOW the vote sum is carried — for each mode
+(simple, streamed) and each backend (jnp, interpret), the hier and
+allgather_packed wires are bitwise-equal to the vote_psum stream of the SAME
+mode+backend; and the interpret stream equals the jnp stream (engine
+contract), so all 12 combinations collapse onto one oracle.
+
+The packed wire runs the fused sparsign->pack2bit uplink kernel and the fused
+unpack+accumulate decode on the interpret backend — this is the acceptance
+check that the fused wire is bitwise-honest end-to-end.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import compat
+from repro.configs.registry import get_config
+from repro.core.algorithm import CompressionConfig
+from repro.core.budgets import BudgetConfig
+from repro.models.model import Model
+from repro.train.state import LrSchedule, init_state
+from repro.train.step_simple import TrainStepConfig, build_train_step
+from repro.train.step_streamed import (StreamedStepConfig,
+                                       build_streamed_train_step,
+                                       fsdp_param_shardings)
+
+AXES = ("pod", "data")
+WIRES = ("psum", "hier", "allgather_packed")
+BACKENDS = ("jnp", "interpret")
+
+
+def make_batch(cfg, b, s, key=0):
+    rng = np.random.RandomState(key)
+    return {
+        "inputs": jnp.array(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.array(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "positions": jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32),
+    }
+
+
+def flat_np(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(np.asarray, tree))]
+
+
+def check_mode(mode, mesh, model, params, batch, comp, lr):
+    ref, ref_label = None, None
+    for backend in BACKENDS:
+        for wire in WIRES:
+            if mode == "simple":
+                scfg = TrainStepConfig(compression=comp, lr=lr, worker_axes=AXES,
+                                       vote_impl=wire, donate=False, backend=backend)
+                step = build_train_step(model, scfg, mesh)
+                state = init_state(params, server=comp.server, seed=42)
+            else:
+                scfg = StreamedStepConfig(compression=comp, lr=lr, worker_axes=AXES,
+                                          fsdp_axis="data", vote_impl=wire,
+                                          donate=False, backend=backend)
+                step = build_streamed_train_step(model, scfg, mesh)
+                state = init_state(params, server=comp.server, seed=42)
+            with compat.set_mesh(mesh):
+                out, metrics = step(state, batch)
+            got = flat_np(out.params)
+            label = f"{mode}/{wire}/{backend}"
+            if ref is None:
+                ref, ref_label = got, label
+                print(f"  oracle stream: {label} "
+                      f"(wire_bytes/device={float(metrics['wire_bytes_per_device']):.0f})")
+                continue
+            ndiff = sum(int((a != b).sum()) for a, b in zip(got, ref))
+            assert ndiff == 0, f"{label} != {ref_label}: {ndiff} coords differ"
+            print(f"  OK {label} == {ref_label} bitwise "
+                  f"(wire_bytes/device={float(metrics['wire_bytes_per_device']):.0f})")
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    comp = CompressionConfig(compressor="sparsign",
+                             budget=BudgetConfig(kind="fixed", value=2.0),
+                             server="majority_vote")
+    lr = LrSchedule(base=0.01)
+
+    cfg_s = get_config("qwen1.5-4b", smoke=True)
+    model_s = Model(cfg_s)
+    params_s = model_s.init(jax.random.PRNGKey(0))
+    print("simple mode (qwen1.5-4b smoke):")
+    check_mode("simple", mesh, model_s, params_s, make_batch(cfg_s, 8, 16), comp, lr)
+    print("OK simple-mode wires bitwise-equal (3 wires x 2 backends)")
+
+    cfg_t = get_config("qwen2-moe-a2.7b", smoke=True)
+    model_t = Model(cfg_t)
+    params_t = model_t.init(jax.random.PRNGKey(0))
+    shardings = fsdp_param_shardings(model_t, mesh, "data")
+    params_t = jax.tree_util.tree_map(jax.device_put, params_t, shardings)
+    print("streamed mode (qwen2-moe-a2.7b smoke, FSDP over data):")
+    check_mode("streamed", mesh, model_t, params_t, make_batch(cfg_t, 8, 16), comp, lr)
+    print("OK streamed-mode wires bitwise-equal (3 wires x 2 backends)")
+
+
+if __name__ == "__main__":
+    main()

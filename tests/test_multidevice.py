@@ -4,6 +4,8 @@ devices (the main pytest process must keep jax at 1 device for the smoke tests).
   check_step_simple      — mesh train step == explicit M-worker oracle (bitwise);
                            EF server; tau=2 local updates.
   check_step_streamed    — streamed(FSDP) == simple (bitwise); EF; shard check.
+  check_wires            — all three vote wires bitwise-equal to the vote_psum
+                           stream, simple AND streamed, jnp AND interpret.
   check_fault_tolerance  — crash/restart bitwise replay; elastic mesh restore.
 """
 
@@ -27,6 +29,13 @@ def test_streamed_step_equivalence():
     assert "0/" in out and "coords differ" in out
     assert "OK FSDP sharding" in out
     assert "OK streamed EF" in out
+
+
+@pytest.mark.slow
+def test_wire_equivalence_all_modes():
+    out = _run("check_wires.py", timeout=2400)
+    assert "OK simple-mode wires bitwise-equal (3 wires x 2 backends)" in out
+    assert "OK streamed-mode wires bitwise-equal (3 wires x 2 backends)" in out
 
 
 @pytest.mark.slow

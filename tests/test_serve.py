@@ -1,5 +1,6 @@
 """Serving-path tests: prefill->decode continuation equals full forward, ring
-caches bound window memory, serve builders produce working jits."""
+caches bound window memory, serve builders produce working jits, and online
+weight-update ingestion shares the training engine's fused vote_update path."""
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +10,8 @@ import pytest
 from repro.configs.registry import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import Model
-from repro.serve.decode import build_decode_step, build_prefill
+from repro.serve.decode import (build_decode_step, build_prefill,
+                                build_update_ingest, encode_weight_update)
 
 
 def _batch(cfg, b, s, seed=0):
@@ -112,6 +114,52 @@ def test_serve_builders_run_on_host_mesh():
            "positions": jnp.full((2, 1), 8, jnp.int32)}
     logits2, _ = decode(params, caches, dec)
     assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_online_update_ingest_matches_trainer_server():
+    """A serving replica ingesting the packed downlink wire lands on exactly
+    the params the trainer's own server_apply produces — bitwise, both wires,
+    both backends, including the quorum deadband."""
+    from repro.core import engine
+    from repro.core.algorithm import CompressionConfig
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    m = Model(cfg)
+    mesh = make_host_mesh(1, 1)
+    params = m.init(jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    rng = np.random.RandomState(11)
+    vote_sums = [jnp.asarray(rng.randint(-4, 5, l.shape), jnp.int32) for l in leaves]
+    lr, quorum = 0.05, 2
+    comp = CompressionConfig(compressor="sparsign", server="majority_vote")
+
+    # trainer-side oracle: fused vote_update with the deadband
+    want = [np.asarray(engine.server_apply(p, v, comp, lr=lr, quorum=quorum)[0])
+            for p, v in zip(leaves, vote_sums)]
+
+    other = "interpret" if jax.default_backend() != "tpu" else "pallas"
+    for backend in ("jnp", other):
+        # packed 2-bit downlink: encoder applies the deadband, replica applies
+        packed = jax.tree_util.tree_unflatten(
+            treedef, [encode_weight_update(v, quorum=quorum, backend=backend)
+                      for v in vote_sums])
+        ingest_p = build_update_ingest(m, mesh, lr=lr, wire="packed2bit",
+                                       backend=backend, donate=False)
+        got_p = jax.tree_util.tree_leaves(
+            jax.tree_util.tree_map(np.asarray, ingest_p(params, packed)))
+        for a, b in zip(got_p, want):
+            assert np.array_equal(a, b), backend
+
+        # int wire: raw vote sums, replica applies the deadband
+        ingest_i = build_update_ingest(m, mesh, lr=lr, quorum=quorum,
+                                       wire="int8", backend=backend, donate=False)
+        got_i = jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+            np.asarray, ingest_i(params, jax.tree_util.tree_unflatten(treedef, vote_sums))))
+        for a, b in zip(got_i, want):
+            assert np.array_equal(a, b), backend
+
+    with pytest.raises(ValueError, match="update wire"):
+        build_update_ingest(m, mesh, lr=lr, wire="fp32")
 
 
 def test_encoder_prefill_builder():

@@ -1,0 +1,265 @@
+"""The uplink wire layer: fused sparsign->2-bit kernel, VoteWire abstraction,
+wire-native engine messages, and the quorum deadband.
+
+Blocking tier-1 coverage (single device); the multi-worker bitwise wire
+equivalence (all three wires x both train modes) runs in tests/mdev/check_wires.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.algorithm import CompressionConfig
+from repro.core.budgets import BudgetConfig
+from repro.dist import collectives
+from repro.kernels import common
+from repro.kernels.pack2bit.ops import pack2bit_op, unpack2bit_sum_op
+from repro.kernels.pack2bit.ref import pack2bit_ref, unpack2bit_sum_ref
+from repro.kernels.sparsign.ops import sparsign_op
+from repro.kernels.sparsign_pack2bit.ops import sparsign_pack2bit_op
+from repro.kernels.sparsign_pack2bit.ref import sparsign_pack2bit_ref
+
+SHAPES = [(63,), (1000,), (7, 333), (513, 511)]
+DTYPES = ["float32", "bfloat16"]
+
+
+# ---------------------------------------------------------------------------
+# fused kernel == two-pass chain
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_uplink_matches_two_pass(shape, dtype):
+    g = jnp.asarray(np.random.RandomState(0).randn(*shape), dtype)
+    for budget, seed, base in [(0.3, 1, 0), (1.5, 99, 12345), (50.0, 7, 2**20)]:
+        fused = sparsign_pack2bit_op(g, budget, seed, base)
+        two_pass = pack2bit_op(sparsign_op(g, budget, seed, base))
+        ref = sparsign_pack2bit_ref(g, budget, seed, base)
+        assert fused.dtype == jnp.uint8
+        assert np.array_equal(np.asarray(fused), np.asarray(two_pass)), (shape, dtype, budget)
+        assert np.array_equal(np.asarray(fused), np.asarray(ref)), (shape, dtype, budget)
+
+
+def test_fused_uplink_no_int8_hbm_intermediate():
+    """The whole point of the fusion: gradient -> wire bytes with no int8
+    ternary tensor at the HBM level; the two-pass chain necessarily has one."""
+    g = jnp.asarray(np.random.RandomState(1).randn(4096), jnp.float32)
+    fused = common.int8_hbm_elems(lambda x: sparsign_pack2bit_op(x, 1.0, 7), g)
+    two_pass = common.int8_hbm_elems(lambda x: pack2bit_op(sparsign_op(x, 1.0, 7)), g)
+    assert fused == 0, f"fused uplink materializes {fused} int8 elements"
+    assert two_pass >= g.size
+
+
+# ---------------------------------------------------------------------------
+# fused decode-sum (the allgather_packed downlink side)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 3, 8])
+@pytest.mark.parametrize("n", [63, 1000])
+def test_unpack_sum_fused_matches_ref(m, n):
+    rng = np.random.RandomState(2)
+    votes = [jnp.asarray(rng.randint(-1, 2, n), jnp.int8) for _ in range(m)]
+    gathered = jnp.stack([pack2bit_op(v) for v in votes])
+    got = unpack2bit_sum_op(gathered, n, (n,))
+    want = common.from_2d(unpack2bit_sum_ref(gathered), n, (n,))
+    oracle = sum(np.asarray(v, np.int32) for v in votes)
+    assert got.dtype == jnp.int32
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.array_equal(np.asarray(got), oracle)
+
+
+def test_packed_decode_sum_no_int8_hbm_intermediate():
+    gathered = jnp.stack([pack2bit_op(jnp.asarray(
+        np.random.RandomState(s).randint(-1, 2, 4096), jnp.int8)) for s in range(4)])
+    fused = common.int8_hbm_elems(
+        lambda p: unpack2bit_sum_op(p, 4096, (4096,)), gathered)
+    unfused = common.int8_hbm_elems(
+        lambda p: common.from_2d(unpack2bit_sum_ref(p), 4096, (4096,)), gathered)
+    assert fused == 0
+    assert unfused >= 4 * 4096
+
+
+# ---------------------------------------------------------------------------
+# VoteWire construction + ledger
+# ---------------------------------------------------------------------------
+
+def test_make_vote_wire_validation():
+    mesh = None  # sizes unused on the error paths
+    with pytest.raises(ValueError, match="unknown vote_impl"):
+        collectives.make_vote_wire("bogus", ("data",), mesh)
+    # hier with a flat worker domain must fail LOUDLY at build time, not
+    # silently substitute the flat psum wire
+    with pytest.raises(ValueError, match="exactly two worker axes"):
+        collectives.make_vote_wire("hier", ("data",), mesh)
+    with pytest.raises(ValueError, match="exactly two worker axes"):
+        collectives.make_vote_wire("hier", ("pod", "data", "extra"), mesh)
+
+
+def test_vote_wire_formats_and_ledger():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    psum = collectives.make_vote_wire("psum", ("data",), mesh)
+    packed = collectives.make_vote_wire("allgather_packed", ("data",), mesh)
+    assert not psum.wants_packed and packed.wants_packed
+    assert psum.n_workers == 1 and packed.n_workers == 1
+
+    # ledger first principles at M=16 (psum wire: int8 sums fit M<=127)
+    p16 = collectives.VoteWire(axes=("data",), n_workers=16)
+    g16 = collectives.PackedVoteWire(axes=("data",), n_workers=16)
+    n = 1 << 20
+    assert p16.wire_bytes(n) == pytest.approx(2 * 15 / 16 * n)
+    # all-gather wire: (M-1) x real padded payload — the padding is part of
+    # the wire format, so the ledger must count it
+    assert g16.wire_bytes(n) == 15 * collectives.packed_nbytes(n)
+    assert collectives.packed_nbytes(1) == common.SUBLANE_PAD * (common.LANES // 4)
+    assert collectives.packed_nbytes(n) == n // 4   # aligned case: exactly 2 bit/coord
+
+    # hier ledger = narrow inner ring + widened outer ring
+    h = collectives.HierVoteWire(axes=("pod", "data"), n_workers=32,
+                                 inner_size=16, outer_size=2)
+    assert h.wire_bytes(n) == pytest.approx(2 * 15 / 16 * n + 2 * 1 / 2 * n)
+
+
+def test_packed_wire_nnz_and_mask():
+    wire = collectives.PackedVoteWire(axes=("data",), n_workers=4)
+    t = jnp.asarray(np.random.RandomState(3).randint(-1, 2, 1000), jnp.int8)
+    packed = pack2bit_op(t)
+    # nnz off the packed bytes == nnz of the ternary tensor
+    assert float(wire.message_nnz(packed)) == float(jnp.sum(jnp.abs(t)))
+    # masking a packed message zeroes every vote (packed 0 decodes to 0)
+    masked = wire.mask_message(packed, jnp.bool_(False))
+    assert float(wire.message_nnz(masked)) == 0.0
+    assert np.array_equal(np.asarray(wire.mask_message(packed, jnp.bool_(True))),
+                          np.asarray(packed))
+
+
+# ---------------------------------------------------------------------------
+# engine wire-native messages
+# ---------------------------------------------------------------------------
+
+def _cfg(compressor="sparsign", value=2.0):
+    return CompressionConfig(compressor=compressor,
+                             budget=BudgetConfig(kind="fixed", value=value),
+                             server="majority_vote")
+
+
+OTHER = "interpret" if jax.default_backend() != "tpu" else "pallas"
+
+
+@pytest.mark.parametrize("backend", ["jnp", OTHER])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_compress_leaf_wire_native(backend, dtype):
+    """compress_leaf(wire=packed) returns the same wire bytes as packing the
+    int8 message, on every backend (fused kernel vs two-pass reference)."""
+    wire = collectives.PackedVoteWire(axes=("data",), n_workers=4)
+    g = jnp.asarray(np.random.RandomState(4).randn(7, 333), dtype)
+    msg_int8 = engine.compress_leaf(g, _cfg(), 9, 123, backend=backend)
+    msg_packed = engine.compress_leaf(g, _cfg(), 9, 123, backend=backend, wire=wire)
+    assert msg_int8.values.dtype == jnp.int8
+    assert msg_packed.values.dtype == jnp.uint8
+    view, _ = common.to_2d(msg_int8.values.reshape(-1))
+    assert np.array_equal(np.asarray(msg_packed.values), np.asarray(pack2bit_ref(view)))
+
+
+@pytest.mark.parametrize("backend", ["jnp", OTHER])
+def test_compress_leaf_wire_two_pass_fallback(backend):
+    """Ternary compressors without a fused kernel still speak the packed wire."""
+    wire = collectives.PackedVoteWire(axes=("data",), n_workers=4)
+    g = jnp.asarray(np.random.RandomState(5).randn(513), jnp.float32)
+    cfg = _cfg(compressor="sign")
+    msg = engine.compress_leaf(g, cfg, 1, backend=backend, wire=wire)
+    view, _ = common.to_2d(jnp.sign(g).astype(jnp.int8))
+    assert np.array_equal(np.asarray(msg.values), np.asarray(pack2bit_ref(view)))
+
+
+def test_compress_leaf_wire_rejects_non_ternary():
+    wire = collectives.PackedVoteWire(axes=("data",), n_workers=4)
+    g = jnp.zeros((8,), jnp.float32)
+    with pytest.raises(ValueError, match="ternary"):
+        engine.compress_leaf(g, _cfg(compressor="identity"), 0, wire=wire)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on a 1-device mesh: wires agree bitwise; quorum deadband
+# ---------------------------------------------------------------------------
+
+def _tiny_model():
+    from repro.configs.base import LayerSpec, ModelConfig
+    from repro.models.model import Model
+    cfg = ModelConfig(name="wire-tiny", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      pattern=(LayerSpec(mixer="attn"),), dtype="float32",
+                      attn_chunk=8, q_chunk=8, loss_chunk=8, remat=False)
+    return Model(cfg)
+
+
+def _tiny_batch(vocab, b=2, s=8, seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "inputs": jnp.asarray(rng.randint(0, vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.randint(0, vocab, (b, s)), jnp.int32),
+        "positions": jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32),
+    }
+
+
+def _one_step(model, params, batch, mesh, **cfg_kw):
+    from repro.dist import compat
+    from repro.train.state import LrSchedule, init_state
+    from repro.train.step_simple import TrainStepConfig, build_train_step
+    comp = CompressionConfig(compressor="sparsign",
+                             budget=BudgetConfig(kind="fixed", value=2.0),
+                             server="majority_vote")
+    scfg = TrainStepConfig(compression=comp, lr=LrSchedule(base=0.05),
+                           worker_axes=("data",), donate=False, **cfg_kw)
+    step = build_train_step(model, scfg, mesh)
+    state = init_state(params, server=comp.server, seed=7)
+    with compat.set_mesh(mesh):
+        out, metrics = step(state, batch)
+    return jax.tree_util.tree_map(np.asarray, out.params), metrics
+
+
+def test_simple_step_wires_bitwise_equal_single_device():
+    from repro.launch.mesh import make_host_mesh
+    model = _tiny_model()
+    mesh = make_host_mesh(1, 1)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _tiny_batch(model.cfg.vocab_size)
+
+    ref, m_ref = _one_step(model, params, batch, mesh, vote_impl="psum")
+    for vote_impl in ("allgather_packed",):
+        for backend in ("jnp", OTHER):
+            got, m = _one_step(model, params, batch, mesh,
+                               vote_impl=vote_impl, backend=backend)
+            for (ka, a), (kb, b) in zip(
+                    jax.tree_util.tree_flatten_with_path(ref)[0],
+                    jax.tree_util.tree_flatten_with_path(got)[0]):
+                assert np.array_equal(a, b), (vote_impl, backend, jax.tree_util.keystr(ka))
+    # the ledger metric is emitted and matches the wire's own accounting
+    # (M=1: both ring collectives move zero bytes)
+    assert float(m["wire_bytes_per_device"]) == 0.0
+    assert float(m_ref["wire_bytes_per_device"]) == 0.0
+
+
+def test_quorum_deadband_blocks_minority_updates():
+    """M=1 worker can never reach a quorum of 2: params must not move."""
+    from repro.launch.mesh import make_host_mesh
+    model = _tiny_model()
+    mesh = make_host_mesh(1, 1)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _tiny_batch(model.cfg.vocab_size)
+    got, _ = _one_step(model, params, batch, mesh, quorum=2)
+    for (k, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(jax.tree_util.tree_map(np.asarray, params))[0],
+            jax.tree_util.tree_flatten_with_path(got)[0]):
+        assert np.array_equal(a, b), jax.tree_util.keystr(k)
+
+
+def test_streamed_config_exposes_vote_impl_and_quorum():
+    from repro.train.state import LrSchedule
+    from repro.train.step_streamed import StreamedStepConfig
+    cfg = StreamedStepConfig(compression=CompressionConfig(),
+                             lr=LrSchedule(base=0.1),
+                             vote_impl="allgather_packed", quorum=3)
+    assert cfg.vote_impl == "allgather_packed" and cfg.quorum == 3
