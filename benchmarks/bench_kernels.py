@@ -33,6 +33,7 @@ from repro.kernels.pack2bit.ref import pack2bit_ref
 from repro.kernels.sparsign.ops import sparsign_op
 from repro.kernels.sparsign.ref import sparsign_ref
 from repro.kernels.sparsign_pack2bit.ops import sparsign_pack2bit_op
+from repro.kernels.ternary.ops import ternary_compress_op, ternary_pack2bit_op
 from repro.kernels.vote_update.ops import vote_update_op
 from repro.kernels.vote_update.ref import vote_update_ref
 
@@ -67,6 +68,14 @@ BYTES_PER_COORD = {
     ("uplink_fused", "pallas"): 4 + 0.25,
     ("uplink_two_pass", "pallas"): (4 + 1) + (1 + 0.25),
     ("uplink_two_pass", "jnp"): (4 + 4 + 4 + 1) + (1 + 0.25),
+    # the generic ternary template's fused uplinks (CompressorSpec registry):
+    # same single-pass structure for every ternary compressor — noisy_sign
+    # draws two RNG streams (both in-register, zero extra HBM traffic),
+    # terngrad's s_t arrives as a pre-reduced scalar in SMEM
+    ("uplink_fused_noisy_sign", "pallas"): 4 + 0.25,
+    ("uplink_fused_terngrad", "pallas"): 4 + 0.25,
+    ("uplink_two_pass_noisy_sign", "pallas"): (4 + 1) + (1 + 0.25),
+    ("uplink_two_pass_terngrad", "pallas"): (4 + 1) + (1 + 0.25),
 }
 
 
@@ -112,7 +121,22 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
         ("uplink_two_pass", "jnp",
          lambda: jax.block_until_ready(uplink_jnp(g))),
     ]
-    # structural guarantee behind the fused uplink's byte count: no int8
+    # the generic ternary template's fused uplinks (noisy_sign sigma=0.01 as
+    # Appendix B tunes it; terngrad against its local L-inf normalizer) — one
+    # tuple drives both the timing cases and the int8-HBM assertions below
+    s_t = float(np.max(np.abs(np.asarray(g))))
+    ternary_uplinks = (("noisy_sign", "noisy_sign", 0.01),
+                       ("terngrad", "stochastic_ternary", s_t))
+    for label, rule, param in ternary_uplinks:
+        cases += [
+            (f"uplink_fused_{label}", "pallas",
+             lambda rule=rule, param=param: jax.block_until_ready(
+                 ternary_pack2bit_op(g, param, 7, rule=rule))),
+            (f"uplink_two_pass_{label}", "pallas",
+             lambda rule=rule, param=param: jax.block_until_ready(
+                 pack2bit_op(ternary_compress_op(g, param, 7, rule=rule)))),
+        ]
+    # structural guarantee behind the fused uplinks' byte count: no int8
     # ternary tensor at the HBM level (the two-pass chains have one of >= n),
     # measured per backend on the exact chains timed above
     fused_i8 = kcommon.int8_hbm_elems(lambda x: sparsign_pack2bit_op(x, 1.0, 7), g)
@@ -124,6 +148,16 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
     int8_hbm = {("uplink_fused", "pallas"): 0,
                 ("uplink_two_pass", "pallas"): two_pass_i8,
                 ("uplink_two_pass", "jnp"): two_pass_jnp_i8}
+    for label, rule, param in ternary_uplinks:
+        f_i8 = kcommon.int8_hbm_elems(
+            lambda x: ternary_pack2bit_op(x, param, 7, rule=rule), g)
+        t_i8 = kcommon.int8_hbm_elems(
+            lambda x: pack2bit_op(ternary_compress_op(x, param, 7, rule=rule)), g)
+        assert f_i8 == 0, (
+            f"fused {label} uplink materializes {f_i8} int8 elems in HBM")
+        assert t_i8 >= n
+        int8_hbm[(f"uplink_fused_{label}", "pallas")] = 0
+        int8_hbm[(f"uplink_two_pass_{label}", "pallas")] = t_i8
 
     for kernel, backend, fn in cases:
         _, dt = timed(fn)

@@ -80,6 +80,10 @@ def main(argv=None):
                                ckpt_every=max(10, steps // 5), log_every=max(1, steps // 20))
     with compat.set_mesh(mesh):
         state, history = loop_lib.run(step, state, batch_fn, lcfg)
+    if not history:
+        print(f"\nnothing to do: checkpoint in {args.ckpt_dir} is already at "
+              f"step {int(state.step)} >= {steps} (delete it to re-run)")
+        return
     first, last = history[0]["loss"], history[-1]["loss"]
     print(f"\nloss: {first:.4f} -> {last:.4f} over {steps} steps "
           f"({'improved' if last < first else 'NO IMPROVEMENT'}); "

@@ -4,6 +4,7 @@ composable JAX building blocks."""
 from repro.core.algorithm import (
     CompressionConfig,
     local_update_message,
+    local_update_source,
     reference_round,
     server_update,
     worker_message,
@@ -12,9 +13,12 @@ from repro.core.algorithm import (
 from repro.core.budgets import BudgetConfig, expected_sparsity, resolve_budget
 from repro.core.compressors import (
     COMPRESSORS,
+    SPECS,
     CompressedGrad,
+    CompressorSpec,
     compress_tree,
     get_compressor,
+    get_spec,
     sparsign,
 )
 from repro.core.engine import compress_leaf, resolve_backend, server_apply
@@ -28,14 +32,18 @@ __all__ = [
     "server_apply",
     "BudgetConfig",
     "CompressedGrad",
+    "CompressorSpec",
     "COMPRESSORS",
+    "SPECS",
     "EFState",
     "compress_tree",
     "ef_server_step",
     "expected_sparsity",
     "get_compressor",
+    "get_spec",
     "init_ef",
     "local_update_message",
+    "local_update_source",
     "majority_vote",
     "reference_round",
     "resolve_budget",

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.core import engine, prng
 from repro.core.aggregation import majority_vote, mean_server, scaled_sign_server
 from repro.core.budgets import BudgetConfig
-from repro.core.compressors import CompressedGrad
+from repro.core.compressors import CompressedGrad, get_spec
 from repro.core.error_feedback import EFState, ef_server_step
 
 # Inner (Alg. 2) local steps accumulate ternary votes in int32 — exact for any
@@ -60,10 +60,7 @@ class CompressionConfig:
 
     @property
     def is_ternary(self) -> bool:
-        return self.compressor in (
-            "sparsign", "sign", "scaled_sign", "noisy_sign",
-            "qsgd_1bit_l2", "qsgd_1bit_linf", "terngrad",
-        )
+        return get_spec(self.compressor).is_ternary
 
 
 # ---------------------------------------------------------------------------
@@ -84,7 +81,7 @@ def worker_message(
                                 shared_linf=shared_linf, backend=backend)
 
 
-def local_update_message(
+def local_update_source(
     w0,
     grad_fn: Callable,   # (w, c) -> local stochastic gradient at local step c
     cfg: CompressionConfig,
@@ -93,13 +90,15 @@ def local_update_message(
     seed,
     counter_base=0,
     backend=None,
-) -> CompressedGrad:
-    """Alg. 2 worker loop: tau compressed local steps, then compress the *sum*
-    of the local compressed gradients with the uplink budget B_g.
+) -> jnp.ndarray:
+    """Alg. 2 inner loop: tau compressed local steps; returns the float32 *sum*
+    of the local compressed gradients (the uplink's input, pre-Q(., B_g)).
 
     Every inner step uses sparsign with budget B_l; the inner sum lives in
     [-tau, tau], accumulated in int32 (exact — tau is guarded against overflow
-    by CompressionConfig).
+    by CompressionConfig). Split out from ``local_update_message`` so callers
+    that need cross-worker statistics of the uplink input (TernGrad's shared
+    max) can reduce over sources before compressing.
     """
     tau = int(cfg.local_steps)
     local_cfg = engine.local_step_config(cfg)
@@ -116,9 +115,26 @@ def local_update_message(
 
     (w_final, acc), _ = jax.lax.scan(body, (w0, jnp.zeros(w0.shape, jnp.int32)), jnp.arange(tau))
     del w_final
-    return worker_message(acc.astype(jnp.float32), cfg,
-                          seed=prng.fold_seed(seed, UPLINK_SALT),
-                          counter_base=counter_base, backend=backend)
+    return acc.astype(jnp.float32)
+
+
+def local_update_message(
+    w0,
+    grad_fn: Callable,
+    cfg: CompressionConfig,
+    *,
+    eta_l: float,
+    seed,
+    counter_base=0,
+    shared_linf=None,
+    backend=None,
+) -> CompressedGrad:
+    """Alg. 2 worker loop: ``local_update_source`` then Q(sum, B_g)."""
+    src = local_update_source(w0, grad_fn, cfg, eta_l=eta_l, seed=seed,
+                              counter_base=counter_base, backend=backend)
+    return worker_message(src, cfg, seed=prng.fold_seed(seed, UPLINK_SALT),
+                          counter_base=counter_base, shared_linf=shared_linf,
+                          backend=backend)
 
 
 # ---------------------------------------------------------------------------

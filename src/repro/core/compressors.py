@@ -1,7 +1,8 @@
 """Gradient compressors: the paper's ``sparsign`` (Def. 1) plus every baseline
-from §6 / Appendix B, as pure composable JAX functions.
+from §6 / Appendix B — and the declarative ``CompressorSpec`` registry that
+makes each of them a first-class citizen of the engine's kernel/wire dispatch.
 
-All worker-side compressors share the signature::
+All worker-side compressors share the public signature::
 
     compress(g, *, budget, seed, counter_base=0) -> CompressedGrad
 
@@ -13,6 +14,13 @@ coordinate keeps its layout-invariant Bernoulli draw).
 Ternary compressors return int8 arrays with values in {-1, 0, +1}; the wire
 scaling (if any — TernGrad/QSGD rescale by a norm) is carried separately in
 ``scale`` so that bit accounting stays honest.
+
+The registry (``SPECS``) is the machine-readable half: per compressor it names
+the *normalized* jnp value function, the Pallas kernel op, the fused
+``->pack2bit`` op (or None -> two-pass fallback), ternariness, the scale
+protocol and the server decode rule — so ``engine.compress_leaf``,
+``engine.server_apply`` and the VoteWire format negotiation are pure table
+lookups with no compressor-name branching anywhere.
 """
 
 from __future__ import annotations
@@ -25,6 +33,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import prng
+from repro.kernels.sparsign.ops import sparsign_op
+from repro.kernels.sparsign_pack2bit.ops import sparsign_pack2bit_op
+from repro.kernels.ternary.ops import (noisy_sign_op, noisy_sign_pack2bit_op,
+                                       sign_op, sign_pack2bit_op,
+                                       stochastic_ternary_op,
+                                       stochastic_ternary_pack2bit_op)
+from repro.kernels.ternary.ref import ternary_compress_ref
 
 
 @jax.tree_util.register_dataclass
@@ -51,7 +66,62 @@ def _counters(g: jnp.ndarray, counter_base) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# The paper's compressor (Definition 1)
+# Local-scale resolvers (CompressorSpec.local_scale)
+# ---------------------------------------------------------------------------
+
+def _scale_l1_mean(g: jnp.ndarray) -> jnp.ndarray:
+    """||g||_1 / d — scaled signSGD (Karimireddy et al. 2019)."""
+    return jnp.sum(jnp.abs(g)).astype(jnp.float32) / jnp.float32(g.size)
+
+
+def _scale_l2(g: jnp.ndarray) -> jnp.ndarray:
+    """||g||_2 — 1-bit L2 QSGD."""
+    return jnp.linalg.norm(g.astype(jnp.float32).reshape(-1))
+
+
+def _scale_linf(g: jnp.ndarray) -> jnp.ndarray:
+    """||g||_inf — 1-bit L-inf QSGD / (local) TernGrad."""
+    return jnp.max(jnp.abs(g.astype(jnp.float32)))
+
+
+def _scale_qsgd(g: jnp.ndarray, s: int) -> jnp.ndarray:
+    """max(||g||_2, eps) / s — the per-level decode scale of s-level QSGD."""
+    return jnp.maximum(_scale_l2(g), 1e-12) / jnp.float32(s)
+
+
+# ---------------------------------------------------------------------------
+# Normalized value functions (CompressorSpec.values): (g, param, seed,
+# counter_base) -> values array. ``param`` is the scale for scale-carrying
+# compressors and the budget/sigma for the scale-free ones — the same scalar
+# the Pallas ops take, so jnp and kernel paths are argument-for-argument twins
+# (the ternary ones are the kernel rules' oracles, mirroring kernels/ternary/
+# ops.py's per-rule partials).
+# ---------------------------------------------------------------------------
+
+_sparsign_values = partial(ternary_compress_ref, rule="sparsign")
+_sign_values = partial(ternary_compress_ref, rule="sign")
+_noisy_sign_values = partial(ternary_compress_ref, rule="noisy_sign")
+_stochastic_ternary_values = partial(ternary_compress_ref, rule="stochastic_ternary")
+
+
+def _qsgd_level_values(g, param, seed, counter_base):
+    """Signed stochastic levels of s-level QSGD; param = norm/s (the decode
+    scale), so level = stochastic_round(|g| / param)."""
+    gf = g.astype(jnp.float32)
+    r = jnp.abs(gf) / jnp.maximum(jnp.asarray(param, jnp.float32), 1e-20)
+    l = jnp.floor(r)
+    u = prng.uniform01(seed, _counters(g, counter_base))
+    level = l + (u < (r - l)).astype(jnp.float32)
+    return (jnp.sign(gf) * level).astype(jnp.int32)
+
+
+def _identity_values(g, param, seed, counter_base):
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Public compressors (Def. 1 + Appendix B) — thin scale-wrapping shims over
+# the normalized value functions, kept for direct use and the tests' API.
 # ---------------------------------------------------------------------------
 
 def sparsign(g: jnp.ndarray, *, budget, seed, counter_base=0) -> CompressedGrad:
@@ -62,16 +132,9 @@ def sparsign(g: jnp.ndarray, *, budget, seed, counter_base=0) -> CompressedGrad:
     Probabilities > 1 are clipped (Remark 7 — equivalent to gradient clipping).
     Scale-free: the receiver only ever needs the ternary symbol.
     """
-    p = jnp.clip(jnp.abs(g).astype(jnp.float32) * jnp.asarray(budget, jnp.float32), 0.0, 1.0)
-    u = prng.uniform01(seed, _counters(g, counter_base))
-    keep = u < p
-    vals = jnp.where(keep, jnp.sign(g).astype(jnp.int8), jnp.int8(0))
+    vals = _sparsign_values(g, budget, seed, counter_base)
     return CompressedGrad(values=vals, scale=jnp.float32(1.0))
 
-
-# ---------------------------------------------------------------------------
-# Baselines (Appendix B)
-# ---------------------------------------------------------------------------
 
 def sign_compressor(g, *, budget=None, seed=None, counter_base=0) -> CompressedGrad:
     """signSGD (Bernstein et al. 2018): deterministic sign. sign(0)=0 (jnp.sign)."""
@@ -80,9 +143,7 @@ def sign_compressor(g, *, budget=None, seed=None, counter_base=0) -> CompressedG
 
 def scaled_sign(g, *, budget=None, seed=None, counter_base=0) -> CompressedGrad:
     """Scaled signSGD (Karimireddy et al. 2019): (||g||_1 / d) * sign(g)."""
-    d = g.size
-    scale = jnp.sum(jnp.abs(g)).astype(jnp.float32) / jnp.float32(d)
-    return CompressedGrad(values=jnp.sign(g).astype(jnp.int8), scale=scale)
+    return CompressedGrad(values=jnp.sign(g).astype(jnp.int8), scale=_scale_l1_mean(g))
 
 
 def noisy_sign(g, *, budget=1.0, seed=0, counter_base=0) -> CompressedGrad:
@@ -91,34 +152,21 @@ def noisy_sign(g, *, budget=1.0, seed=0, counter_base=0) -> CompressedGrad:
     ``budget`` is reused as sigma (the tuned noise std in Appendix B).
     Gaussian noise from two counter-stream uniforms via Box-Muller.
     """
-    c = _counters(g, counter_base)
-    u1 = prng.uniform01(prng.fold_seed(seed, 1), c)
-    u2 = prng.uniform01(prng.fold_seed(seed, 2), c)
-    # Guard u1=0 for the log.
-    u1 = jnp.maximum(u1, jnp.float32(1e-12))
-    n = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
-    noisy = g.astype(jnp.float32) + jnp.asarray(budget, jnp.float32) * n
-    return CompressedGrad(values=jnp.sign(noisy).astype(jnp.int8), scale=jnp.float32(1.0))
-
-
-def _stochastic_ternary(g, norm, seed, counter_base) -> jnp.ndarray:
-    """sign(g_i) w.p. |g_i|/norm else 0 — shared by TernGrad/1-bit QSGD."""
-    p = jnp.clip(jnp.abs(g).astype(jnp.float32) / jnp.maximum(norm, 1e-12), 0.0, 1.0)
-    u = prng.uniform01(seed, _counters(g, counter_base))
-    return jnp.where(u < p, jnp.sign(g).astype(jnp.int8), jnp.int8(0))
+    vals = _noisy_sign_values(g, budget, seed, counter_base)
+    return CompressedGrad(values=vals, scale=jnp.float32(1.0))
 
 
 def qsgd_1bit_l2(g, *, budget=None, seed=0, counter_base=0) -> CompressedGrad:
     """1-bit L2-norm QSGD (Alistarh et al. 2017, s=1): ||g||_2 * sign * Bernoulli(|g|/||g||_2)."""
-    norm = jnp.linalg.norm(g.astype(jnp.float32).reshape(-1))
-    vals = _stochastic_ternary(g, norm, seed, counter_base)
+    norm = _scale_l2(g)
+    vals = _stochastic_ternary_values(g, norm, seed, counter_base)
     return CompressedGrad(values=vals, scale=norm.astype(jnp.float32))
 
 
 def qsgd_1bit_linf(g, *, budget=None, seed=0, counter_base=0) -> CompressedGrad:
     """1-bit L-inf-norm QSGD: replaces ||.||_2 with ||.||_inf."""
-    norm = jnp.max(jnp.abs(g.astype(jnp.float32)))
-    vals = _stochastic_ternary(g, norm, seed, counter_base)
+    norm = _scale_linf(g)
+    vals = _stochastic_ternary_values(g, norm, seed, counter_base)
     return CompressedGrad(values=vals, scale=norm.astype(jnp.float32))
 
 
@@ -126,10 +174,12 @@ def terngrad(g, *, budget=None, seed=0, counter_base=0, shared_max: Optional[jnp
     """TernGrad (Wen et al. 2017): s_t * sign(g) * Bernoulli(|g|/s_t).
 
     ``shared_max`` is the magnitude-sharing protocol value max_m ||g_m||_inf; when
-    None it degrades to the local L-inf norm (single-worker TernGrad).
+    None it degrades to the local L-inf norm (single-worker TernGrad). The mesh
+    trainers and the FL sim supply it via the engine's ``shared_linf`` hook
+    (psum-max over the worker axes) — the Appendix B baseline.
     """
-    s_t = shared_max if shared_max is not None else jnp.max(jnp.abs(g.astype(jnp.float32)))
-    vals = _stochastic_ternary(g, s_t, seed, counter_base)
+    s_t = shared_max if shared_max is not None else _scale_linf(g)
+    vals = _stochastic_ternary_values(g, s_t, seed, counter_base)
     return CompressedGrad(values=vals, scale=jnp.asarray(s_t, jnp.float32))
 
 
@@ -139,15 +189,9 @@ def qsgd(g, *, s: int, budget=None, seed=0, counter_base=0) -> CompressedGrad:
     times scale/s; we keep values as int32 level*sign for exact bit accounting.
     ``budget`` is accepted (and ignored) for registry-signature compatibility —
     the level count s, not a magnitude budget, sets this family's rate."""
-    gf = g.astype(jnp.float32)
-    norm = jnp.maximum(jnp.linalg.norm(gf.reshape(-1)), 1e-12)
-    r = jnp.abs(gf) * (s / norm)
-    l = jnp.floor(r)
-    frac = r - l
-    u = prng.uniform01(seed, _counters(g, counter_base))
-    level = l + (u < frac).astype(jnp.float32)
-    vals = (jnp.sign(gf) * level).astype(jnp.int32)
-    return CompressedGrad(values=vals, scale=(norm / s).astype(jnp.float32))
+    scale = _scale_qsgd(g, s)
+    vals = _qsgd_level_values(g, scale, seed, counter_base)
+    return CompressedGrad(values=vals, scale=scale.astype(jnp.float32))
 
 
 def identity(g, *, budget=None, seed=None, counter_base=0) -> CompressedGrad:
@@ -156,41 +200,154 @@ def identity(g, *, budget=None, seed=None, counter_base=0) -> CompressedGrad:
 
 
 # ---------------------------------------------------------------------------
-# Registry / pytree-level application
+# The CompressorSpec registry
 # ---------------------------------------------------------------------------
 
-COMPRESSORS: dict[str, Callable] = {
-    "sparsign": sparsign,
-    "sign": sign_compressor,
-    "scaled_sign": scaled_sign,
-    "noisy_sign": noisy_sign,
-    "qsgd_1bit_l2": qsgd_1bit_l2,
-    "qsgd_1bit_linf": qsgd_1bit_linf,
-    "terngrad": terngrad,
-    "qsgd8": partial(qsgd, s=255),   # FedCom 8-bit baseline: 2**8 - 1 levels
-    "identity": identity,
-}
+#: scale protocols: how the decode-time scale is produced.
+#:   none       — scale-free (scale == 1); param fed to the kernels is the budget
+#:   local_norm — each worker's own norm (local_scale); per-worker, so ternary
+#:                messages can only ride the decoded-float wire under a mean server
+#:   shared_max — TernGrad's magnitude sharing: one psum-max'd ||g||_inf shared
+#:                by all workers, so ternary votes + a single scalar ride the wire
+SCALE_PROTOCOLS = ("none", "local_norm", "shared_max")
+
+#: server decode rules: what the aggregated message means to the server.
+#:   sign        — scale-free ternary votes; any server rule consumes the raw sums
+#:   scaled_sign — ternary votes * scale; vote servers use raw votes (one worker
+#:                 one vote), the mean server multiplies the vote mean by the scale
+#:   dequant     — non-ternary payload; decoded floats, mean server only
+SERVER_DECODES = ("sign", "scaled_sign", "dequant")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorSpec:
+    """One row of the compressor capability table — everything the engine and
+    the wire layer need to know, as data. ``api`` is the public compressor
+    (original keyword signature); ``values`` is the normalized jnp reference
+    ``(g, param, seed, counter_base) -> values`` that mirrors the kernel ops
+    argument-for-argument."""
+
+    name: str
+    api: Callable
+    values: Callable
+    is_ternary: bool
+    scale_protocol: str = "none"
+    local_scale: Optional[Callable] = None      # g -> f32 scalar (protocol != none)
+    pallas_op: Optional[Callable] = None        # (g, param, seed, base, *, interpret=)
+    fused_pack_op: Optional[Callable] = None    # fused ->pack2bit variant, or None
+    server_decode: str = "sign"
+    chunkable: bool = False                     # jnp path may stream in chunks
+
+    def __post_init__(self):
+        assert self.scale_protocol in SCALE_PROTOCOLS, self.scale_protocol
+        assert self.server_decode in SERVER_DECODES, self.server_decode
+        assert (self.scale_protocol == "none") == (self.local_scale is None), self.name
+        if self.fused_pack_op is not None:
+            assert self.is_ternary, f"{self.name}: only ternary wires pack to 2 bits"
+
+    @property
+    def scale_shared(self) -> bool:
+        """Is the decode scale identical on every worker (so ternary votes can
+        ride the integer/packed wire even under a mean server)?"""
+        return self.scale_protocol in ("none", "shared_max")
+
+    def resolve_scale(self, g, shared_linf=None) -> Optional[jnp.ndarray]:
+        """The decode-time scale for one leaf, or None for scale-free specs.
+        ``shared_linf`` (the psum-max'd worker L-inf) feeds the shared_max
+        protocol; absent, it degrades to the local norm (single-worker)."""
+        if self.scale_protocol == "none":
+            return None
+        if self.scale_protocol == "shared_max" and shared_linf is not None:
+            return jnp.asarray(shared_linf, jnp.float32)
+        return self.local_scale(g)
+
+
+SPECS: dict[str, CompressorSpec] = {spec.name: spec for spec in (
+    CompressorSpec(
+        name="sparsign", api=sparsign, values=_sparsign_values,
+        is_ternary=True, scale_protocol="none",
+        pallas_op=sparsign_op, fused_pack_op=sparsign_pack2bit_op,
+        server_decode="sign", chunkable=True),
+    CompressorSpec(
+        name="sign", api=sign_compressor, values=_sign_values,
+        is_ternary=True, scale_protocol="none",
+        pallas_op=sign_op, fused_pack_op=sign_pack2bit_op,
+        server_decode="sign"),
+    CompressorSpec(
+        name="scaled_sign", api=scaled_sign, values=_sign_values,
+        is_ternary=True, scale_protocol="local_norm", local_scale=_scale_l1_mean,
+        pallas_op=sign_op, fused_pack_op=sign_pack2bit_op,
+        server_decode="scaled_sign"),
+    CompressorSpec(
+        name="noisy_sign", api=noisy_sign, values=_noisy_sign_values,
+        is_ternary=True, scale_protocol="none",
+        pallas_op=noisy_sign_op, fused_pack_op=noisy_sign_pack2bit_op,
+        server_decode="sign", chunkable=True),
+    CompressorSpec(
+        name="qsgd_1bit_l2", api=qsgd_1bit_l2, values=_stochastic_ternary_values,
+        is_ternary=True, scale_protocol="local_norm", local_scale=_scale_l2,
+        pallas_op=stochastic_ternary_op,
+        fused_pack_op=stochastic_ternary_pack2bit_op,
+        server_decode="scaled_sign", chunkable=True),
+    CompressorSpec(
+        name="qsgd_1bit_linf", api=qsgd_1bit_linf, values=_stochastic_ternary_values,
+        is_ternary=True, scale_protocol="local_norm", local_scale=_scale_linf,
+        pallas_op=stochastic_ternary_op,
+        fused_pack_op=stochastic_ternary_pack2bit_op,
+        server_decode="scaled_sign", chunkable=True),
+    CompressorSpec(
+        name="terngrad", api=terngrad, values=_stochastic_ternary_values,
+        is_ternary=True, scale_protocol="shared_max", local_scale=_scale_linf,
+        pallas_op=stochastic_ternary_op,
+        fused_pack_op=stochastic_ternary_pack2bit_op,
+        server_decode="scaled_sign", chunkable=True),
+    CompressorSpec(
+        # FedCom 8-bit baseline: 2**8 - 1 levels
+        name="qsgd8", api=partial(qsgd, s=255), values=_qsgd_level_values,
+        is_ternary=False, scale_protocol="local_norm",
+        local_scale=partial(_scale_qsgd, s=255),
+        server_decode="dequant", chunkable=True),
+    CompressorSpec(
+        name="identity", api=identity, values=_identity_values,
+        is_ternary=False, scale_protocol="none",
+        server_decode="dequant"),
+)}
+
+
+def get_spec(name: str) -> CompressorSpec:
+    try:
+        return SPECS[name]
+    except KeyError:
+        raise KeyError(f"unknown compressor {name!r}; known: {sorted(SPECS)}") from None
+
+
+#: legacy view: compressor name -> public callable. Derived from the spec
+#: table — do not add entries here; add a CompressorSpec instead.
+COMPRESSORS: dict[str, Callable] = {name: spec.api for name, spec in SPECS.items()}
 
 
 def get_compressor(name: str) -> Callable:
-    try:
-        return COMPRESSORS[name]
-    except KeyError:
-        raise KeyError(f"unknown compressor {name!r}; known: {sorted(COMPRESSORS)}") from None
+    return get_spec(name).api
 
 
-def compress_leaf_chunked(fn, g, *, budget, seed, counter_base=0, max_chunk: int = 1 << 23):
-    """Apply a ternary compressor to a large leaf in chunks.
+# ---------------------------------------------------------------------------
+# Chunked / pytree-level application
+# ---------------------------------------------------------------------------
+
+def chunked_values(values_fn, g, param, seed, counter_base=0, max_chunk: int = 1 << 23):
+    """Apply a normalized value function to a large leaf in chunks.
 
     Stream-identical to one-shot compression (counter = flat coordinate index),
     but bounds the transient u32/f32 RNG buffers to max_chunk coordinates —
     without this, compressing an embedding table materializes index/uniform
-    arrays as large as the table itself (the Pallas kernel regenerates them
-    in-register on TPU; this is the jnp path's equivalent).
+    arrays as large as the table itself (the Pallas kernels regenerate them
+    in-register on TPU; this is the jnp path's equivalent). Valid for any
+    counter-indexed value function once ``param`` is resolved from the whole
+    tensor — the per-chunk computation never needs global statistics.
     """
     n = g.size
     if n <= max_chunk:
-        return fn(g, budget=budget, seed=seed, counter_base=counter_base)
+        return values_fn(g, param, seed, counter_base)
     k = -(-n // max_chunk)
     while n % k:
         k += 1
@@ -200,17 +357,19 @@ def compress_leaf_chunked(fn, g, *, budget, seed, counter_base=0, max_chunk: int
 
     def body(_, i):
         seg = jax.lax.dynamic_slice(flat, (i * chunk,), (chunk,))
-        msg = fn(seg, budget=budget, seed=seed,
-                 counter_base=base + (i * chunk).astype(jnp.uint32))
-        return None, msg.values
+        return None, values_fn(seg, param, seed, base + (i * chunk).astype(jnp.uint32))
 
     _, vals = jax.lax.scan(body, None, jnp.arange(k))
-    # chunking is only valid for scale-free compressors (sparsign/sign/noisy):
-    # norm-carrying ones (qsgd/terngrad) must see the whole tensor at once
-    return CompressedGrad(values=vals.reshape(g.shape), scale=jnp.float32(1.0))
+    return vals.reshape(g.shape)
 
 
-SCALE_FREE = ("sparsign", "sign", "noisy_sign")
+def compress_leaf_chunked(fn, g, *, budget, seed, counter_base=0, max_chunk: int = 1 << 23):
+    """Legacy chunked entry point over a *public* compressor fn (scale-free
+    family only — the chunks would each see a different norm otherwise)."""
+    vals = chunked_values(
+        lambda seg, p, s, cb: fn(seg, budget=p, seed=s, counter_base=cb).values,
+        g, budget, seed, counter_base, max_chunk=max_chunk)
+    return CompressedGrad(values=vals, scale=jnp.float32(1.0))
 
 
 def leaf_counter_bases(tree) -> list[int]:

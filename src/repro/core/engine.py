@@ -4,27 +4,34 @@ consumer (train.step_simple, train.step_streamed, fl.simulation) goes through.
 Three backends, bitwise-identical by construction (they share the counter-based
 PRNG of ``repro.core.prng``, which the Pallas kernels regenerate in-register):
 
-  pallas    — the fused TPU kernels: ``sparsign_op`` (compress), ``vote_update``
-              (majority-vote sign + SGD in one pass), ``ef_server`` (fused
-              Eq. 8 scaled-sign error feedback).
+  pallas    — the fused TPU kernels: the per-compressor compress (and fused
+              compress->pack2bit) ops named by the ``CompressorSpec`` registry,
+              ``vote_update`` (majority-vote sign + SGD in one pass) and
+              ``ef_server`` (fused Eq. 8 scaled-sign error feedback).
   interpret — the same kernels in Pallas interpret mode; runs on CPU and is
               what CI pins against the jnp reference.
-  jnp       — the pure-jnp reference compressors/server math. Large scale-free
-              leaves are compressed in chunks to bound transient RNG buffers
-              (the kernels need no chunking — RNG never touches HBM).
+  jnp       — the pure-jnp reference compressors/server math. Chunkable leaves
+              are compressed in chunks to bound transient RNG buffers (the
+              kernels need no chunking — RNG never touches HBM).
 
 Selection: the ``backend=`` argument wins, else the ``REPRO_KERNEL_BACKEND``
 env var (``auto|pallas|interpret|jnp``), else ``auto`` = pallas on TPU and jnp
 everywhere else. Resolution happens at trace/build time, so a jitted train
 step bakes its backend in.
 
+All per-compressor capability questions — which kernel, which wire format,
+which scale protocol, which server decode — are answered by the declarative
+``CompressorSpec`` table (``repro.core.compressors.SPECS``); this module has
+no compressor-name special cases.
+
 Two primitives:
 
   compress_leaf(g, cfg, seed, counter_base)        — worker uplink Q(g, B)
   server_apply(p, vote_sum, cfg, ...)              — C(.) [+ EF] + SGD update
 
-plus the small shared helpers (vote-server predicates, local-step config) that
-keep server-rule names out of the train/fl layers entirely.
+plus the small shared helpers (vote-server predicates, wire-mode negotiation,
+per-leaf quorum broadcasting, local-step config) that keep server-rule and
+compressor names out of the train/fl layers entirely.
 """
 
 from __future__ import annotations
@@ -37,15 +44,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.budgets import BudgetConfig, resolve_budget
-from repro.core.compressors import (SCALE_FREE, CompressedGrad,
-                                    compress_leaf_chunked, get_compressor)
+from repro.core.compressors import (CompressedGrad, CompressorSpec,
+                                    chunked_values, get_spec)
 from repro.kernels import common as kcommon
 from repro.kernels.ef_server.ops import ef_server_op
 from repro.kernels.ef_server.ref import ef_server_ref
 from repro.kernels.pack2bit.ops import pack2bit_op
 from repro.kernels.pack2bit.ref import pack2bit_ref
-from repro.kernels.sparsign.ops import sparsign_op
-from repro.kernels.sparsign_pack2bit.ops import sparsign_pack2bit_op
 from repro.kernels.vote_update.ops import vote_update_op
 from repro.kernels.vote_update.ref import vote_update_ref
 
@@ -60,8 +65,8 @@ BACKENDS = ("pallas", "interpret", "jnp")
 VOTE_SERVERS = ("majority_vote", "scaled_sign_ef")
 SERVER_RULES = ("majority_vote", "scaled_sign_ef", "mean")
 
-# compressors with a fused Pallas kernel; the rest always take the jnp path
-KERNEL_COMPRESSORS = ("sparsign",)
+# how a compressor's messages ride the worker-axis wire (see wire_mode)
+WIRE_MODES = ("votes", "scaled_votes", "decoded")
 
 
 def resolve_backend(backend: Optional[str] = None) -> str:
@@ -81,6 +86,35 @@ def is_vote_server(cfg: "CompressionConfig") -> bool:
 def needs_server_ef(server: str) -> bool:
     """Does this server rule carry a (server-side) error-feedback residual?"""
     return server == "scaled_sign_ef"
+
+
+def wire_mode(cfg: "CompressionConfig") -> str:
+    """How this (compressor, server) pair's uplink rides the worker wire —
+    a pure CompressorSpec table lookup:
+
+      votes        — ternary symbols on the integer/packed vote wire, consumed
+                     raw by a vote server (majority_vote / scaled_sign_ef).
+      scaled_votes — ternary symbols on the integer/packed vote wire plus ONE
+                     shared decode scale; the mean server multiplies the vote
+                     mean by it. Requires a worker-invariant scale (protocol
+                     none or shared_max).
+      decoded      — decoded float32 messages, psum + mean server (per-worker
+                     scales and non-ternary payloads).
+    """
+    spec = get_spec(cfg.compressor)
+    if not spec.is_ternary:
+        return "decoded"
+    if is_vote_server(cfg):
+        return "votes"
+    return "scaled_votes" if spec.scale_shared else "decoded"
+
+
+def needs_shared_linf(cfg: "CompressionConfig") -> bool:
+    """Must the trainer all-reduce(max) the worker L-inf norms before
+    compressing? True for the shared_max scale protocol (TernGrad's magnitude
+    sharing) and the linf_share budget policy."""
+    return (get_spec(cfg.compressor).scale_protocol == "shared_max"
+            or cfg.budget.kind == "linf_share")
 
 
 def local_budget_value(cfg: "CompressionConfig") -> float:
@@ -107,6 +141,39 @@ def local_step_config(cfg: "CompressionConfig") -> "CompressionConfig":
 
 
 # ---------------------------------------------------------------------------
+# Per-leaf quorum
+# ---------------------------------------------------------------------------
+
+def broadcast_quorum(quorum, like_tree):
+    """Widen the server quorum deadband to a per-leaf tree.
+
+    ``quorum`` is either a positive int (broadcast to every leaf) or a pytree
+    *prefix* of ``like_tree`` (e.g. ``{"embed": 3, "blocks": 1, ...}`` against a
+    parameter dict) whose leaves are positive ints. Returns a tree matching
+    ``like_tree`` exactly, validated eagerly — step builders call this at build
+    time so a malformed quorum tree fails before tracing, not mid-run.
+    """
+    def check(q):
+        if isinstance(q, bool) or not isinstance(q, int) or q < 1:
+            raise ValueError(
+                f"quorum entries must be ints >= 1, got {q!r} ({type(q).__name__})")
+        return q
+
+    if isinstance(quorum, int) and not isinstance(quorum, bool):
+        check(quorum)
+        return jax.tree_util.tree_map(lambda _: quorum, like_tree)
+    qdef = jax.tree_util.tree_structure(quorum)
+    try:
+        subtrees = qdef.flatten_up_to(like_tree)
+    except ValueError as e:
+        raise ValueError(
+            f"quorum tree is not a prefix of the parameter tree: {e}") from None
+    out = [jax.tree_util.tree_map(lambda _, q=check(q): q, sub)
+           for q, sub in zip(jax.tree_util.tree_leaves(quorum), subtrees)]
+    return jax.tree_util.tree_unflatten(qdef, out)
+
+
+# ---------------------------------------------------------------------------
 # Worker-side primitive
 # ---------------------------------------------------------------------------
 
@@ -122,49 +189,57 @@ def compress_leaf(
 ) -> CompressedGrad:
     """Q(g, B): one worker's uplink message for a single tensor leaf.
 
-    sparsign dispatches to the fused Pallas kernel on the pallas/interpret
-    backends (RNG regenerated in-register — no chunking needed at any size);
-    every other compressor, and the jnp backend, runs the reference path with
-    chunking for the scale-free family.
+    Dispatch is a ``CompressorSpec`` lookup: compressors with a registered
+    Pallas op take the fused kernel on the pallas/interpret backends (RNG
+    regenerated in-register — no chunking needed at any size); everything
+    else, and the jnp backend, runs the normalized reference path (chunked for
+    the counter-indexed families).
+
+    ``shared_linf`` is the psum-max'd worker L-inf (``needs_shared_linf``):
+    it feeds both the ``linf_share`` budget policy and the ``shared_max``
+    scale protocol (TernGrad's magnitude sharing).
 
     ``wire`` (a ``repro.dist.collectives.VoteWire``, or None) selects the
     message's *wire-native* format. When the wire wants the 2-bit packed
     format, ``values`` is the packed uint8 canonical view — produced in one
     fused pass (gradient -> wire bytes, no int8 ternary tensor in HBM) when
-    the compressor has a fused kernel, else compressed then packed. The bytes
-    are identical either way; only the number of HBM round-trips differs.
+    the spec registers a ``fused_pack_op``, else compressed then packed. The
+    bytes are identical either way; only the number of HBM round-trips
+    differs. Scale-carrying compressors return their decode scale in
+    ``msg.scale`` alongside the (packed) payload.
     """
     backend = resolve_backend(backend)
+    spec: CompressorSpec = get_spec(cfg.compressor)
     budget = resolve_budget(cfg.budget, g, shared_linf=shared_linf)
+    scale = spec.resolve_scale(g, shared_linf=shared_linf)
+    param = budget if scale is None else scale
+    msg_scale = jnp.float32(1.0) if scale is None else scale.astype(jnp.float32)
     want_packed = wire is not None and wire.wants_packed
-    if want_packed and not cfg.is_ternary:
+    if want_packed and not spec.is_ternary:
         raise ValueError(
             f"the 2-bit packed vote wire carries ternary messages only; "
             f"compressor {cfg.compressor!r} is not ternary")
-    if backend != "jnp" and cfg.compressor in KERNEL_COMPRESSORS:
-        if want_packed:
-            packed = sparsign_pack2bit_op(g, budget, seed, counter_base,
-                                          interpret=(backend == "interpret"))
-            return CompressedGrad(values=packed, scale=jnp.float32(1.0))
-        vals = sparsign_op(g, budget, seed, counter_base,
-                           interpret=(backend == "interpret"))
-        return CompressedGrad(values=vals, scale=jnp.float32(1.0))
-    fn = get_compressor(cfg.compressor)
-    if cfg.compressor in SCALE_FREE:
-        msg = compress_leaf_chunked(fn, g, budget=budget, seed=seed,
-                                    counter_base=counter_base)
+    interpret = backend == "interpret"
+    if backend != "jnp" and spec.pallas_op is not None:
+        if want_packed and spec.fused_pack_op is not None:
+            packed = spec.fused_pack_op(g, param, seed, counter_base,
+                                        interpret=interpret)
+            return CompressedGrad(values=packed, scale=msg_scale)
+        vals = spec.pallas_op(g, param, seed, counter_base, interpret=interpret)
+    elif spec.chunkable:
+        vals = chunked_values(spec.values, g, param, seed, counter_base)
     else:
-        msg = fn(g, budget=budget, seed=seed, counter_base=counter_base)
+        vals = spec.values(g, param, seed, counter_base)
     if want_packed:
-        # two-pass fallback (ternary compressors without a fused kernel, and
-        # the jnp reference backend): same wire bytes, one extra round-trip
+        # two-pass fallback (specs without a fused kernel, and the jnp
+        # reference backend): same wire bytes, one extra round-trip
         if backend == "jnp":
-            view, _ = kcommon.to_2d(msg.values.reshape(-1))
+            view, _ = kcommon.to_2d(vals.reshape(-1))
             packed = pack2bit_ref(view)
         else:
-            packed = pack2bit_op(msg.values, interpret=(backend == "interpret"))
-        return CompressedGrad(values=packed, scale=msg.scale)
-    return msg
+            packed = pack2bit_op(vals, interpret=interpret)
+        return CompressedGrad(values=packed, scale=msg_scale)
+    return CompressedGrad(values=vals, scale=msg_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +255,7 @@ def server_apply(
     ef=None,
     n_sel=None,
     server: Optional[str] = None,
+    scale=None,
     leaf_size: Optional[int] = None,
     l1_reduce: Optional[Callable] = None,
     quorum: int = 1,
@@ -196,8 +272,10 @@ def server_apply(
       (``l1_reduce`` hook lets streamed mode psum the partial L1 across FSDP
       shards); update = scale*sign(acc) via the fused ``ef_server`` kernel;
       new_ef = acc - update.
-    - ``mean``:           p - lr * vote_sum/n_sel (``vote_sum`` here is the sum
-      of *decoded float* messages — the TernGrad/QSGD/identity wire).
+    - ``mean``:           p - lr * scale * vote_sum/n_sel. ``vote_sum`` is the
+      sum of decoded float messages (the per-worker-scale wire, ``scale``
+      None/1) or the raw ternary vote sum with ``scale`` the shared decode
+      scale (the ``scaled_votes`` wire — TernGrad's magnitude-shared s_t).
 
     ``server`` overrides ``cfg.server`` (the non-ternary baselines always
     aggregate by mean regardless of the configured rule).
@@ -225,6 +303,8 @@ def server_apply(
     if rule == "mean":
         assert n_sel is not None, "mean server needs n_sel (|S|)"
         upd = vote_sum.astype(jnp.float32) / jnp.maximum(jnp.asarray(n_sel, jnp.float32), 1.0)
+        if scale is not None:
+            upd = upd * jnp.asarray(scale, jnp.float32)
         return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), ef
 
     if rule == "scaled_sign_ef":
@@ -236,12 +316,12 @@ def server_apply(
         if l1_reduce is not None:
             part = l1_reduce(part)
         size = leaf_size if leaf_size is not None else mean_delta.size
-        scale = part / jnp.float32(size)
+        srv_scale = part / jnp.float32(size)
         if backend != "jnp":
-            upd, new_ef = ef_server_op(mean_delta, eff, scale,
+            upd, new_ef = ef_server_op(mean_delta, eff, srv_scale,
                                        interpret=(backend == "interpret"))
         else:
-            upd, new_ef = ef_server_ref(mean_delta, eff, scale)
+            upd, new_ef = ef_server_ref(mean_delta, eff, srv_scale)
         return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_ef
 
     raise ValueError(f"unknown server rule {rule!r}; known: {SERVER_RULES}")

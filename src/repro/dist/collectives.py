@@ -26,6 +26,11 @@ tensor vs 2-bit packed canonical view — what ``engine.compress_leaf(wire=...)`
 emits), how to mask/count/exchange messages in that format, and its
 per-round per-device wire-byte ledger (``wire_bytes``), computed from the real
 buffer sizes (including canonical-view padding), not an idealized model.
+
+Scale-carrying ternary compressors (the ``scaled_votes`` wire mode) ship one
+shared f32 decode scale per leaf next to the payload: ``worker_shared_linf``
+is the magnitude-sharing all-reduce(max) that produces it, and
+``VoteWire.scalar_bytes`` its ledger entry.
 """
 
 from __future__ import annotations
@@ -86,6 +91,18 @@ def packed_nbytes(n_coords: int) -> int:
 def vote_psum(votes: jnp.ndarray, axes: Sequence[str], n_workers: int) -> jnp.ndarray:
     """Integer psum of ternary votes over the worker axes."""
     return jax.lax.psum(votes.astype(_sum_dtype(int(n_workers))), tuple(axes))
+
+
+def worker_shared_linf(g: jnp.ndarray, axes: Sequence[str], mask=None) -> jnp.ndarray:
+    """max_m ||g_m||_inf over the worker axes — TernGrad's magnitude-sharing
+    protocol (one f32 scalar all-reduce(max), ~4 B on the fabric) and the
+    ``linf_share`` budget policy's shared statistic. Must run inside the
+    worker-axes shard_map. ``mask`` (scalar bool) excludes non-participating
+    workers from the max, matching the round's sampled set S."""
+    local = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    if mask is not None:
+        local = jnp.where(mask, local, 0.0)
+    return jax.lax.pmax(local, tuple(axes))
 
 
 def vote_psum_hier(votes: jnp.ndarray, inner_axis: str, outer_axis: str,
@@ -175,6 +192,13 @@ class VoteWire:
         m = self.n_workers
         payload = n_coords * jnp.dtype(_sum_dtype(m)).itemsize
         return 2.0 * (m - 1) / m * payload
+
+    def scalar_bytes(self) -> float:
+        """Ledger for one shared f32 scalar riding alongside a leaf's payload —
+        the magnitude-shared scale (``worker_shared_linf``) of scale-carrying
+        ternary compressors. One ring all-reduce of 4 bytes."""
+        m = self.n_workers
+        return 2.0 * (m - 1) / m * 4.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, prng
-from repro.core.algorithm import CompressionConfig, local_update_message
+from repro.core.algorithm import (UPLINK_SALT, CompressionConfig,
+                                  local_update_source)
 from repro.core.encoding import baseline_bits_per_round, ternary_stream_bits
 from repro.fl.models import accuracy, xent_loss
 
@@ -50,19 +51,24 @@ def build_round_fn(loss_fn: Callable, cfg: FLConfig, x_parts, y_parts):
 
     Worker compression and server math both route through the shared engine
     (core.engine / core.algorithm) — this module owns only the experiment
-    harness: worker sampling, per-worker data draws, and eval bookkeeping.
-    The server step uses exactly eta = cfg.lr; cfg.local_lr is eta_L, consumed
-    only by the Alg. 2 inner loop inside local_update_message.
+    harness: worker sampling, per-worker data draws, the magnitude-sharing
+    max over the sampled set, and eval bookkeeping. The server step uses
+    exactly eta = cfg.lr; cfg.local_lr is eta_L, consumed only by the Alg. 2
+    inner loop inside local_update_source.
     """
     comp = cfg.comp
     backend = engine.resolve_backend()
     server_rule = comp.server if engine.is_vote_server(comp) else "mean"
+    share_linf = engine.needs_shared_linf(comp)
     m = cfg.n_workers
     n_sel = max(1, int(round(cfg.participation * m)))
     shard_len = x_parts.shape[1]
 
-    def worker_msg(v, widx, key, round_idx):
-        """One worker's uplink message (decoded float) + stats."""
+    def worker_source(v, widx, key, round_idx):
+        """One worker's uplink *input* (gradient, or Alg. 2 local-step sum)
+        plus its uplink stream seed. Splitting source from Q(.) lets the
+        shared_max protocol (TernGrad, Appendix B) reduce max_m ||src_m||_inf
+        over the sampled workers before anyone quantizes."""
         wseed = prng.fold_seed(jnp.uint32(cfg.seed), 0x5EED) + widx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
         wseed = wseed + round_idx.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
 
@@ -74,11 +80,15 @@ def build_round_fn(loss_fn: Callable, cfg: FLConfig, x_parts, y_parts):
             return jax.grad(loss_fn)(w, xb, yb)
 
         if comp.local_steps == 1:
-            msg = engine.compress_leaf(grad_at(v, 0), comp, wseed, backend=backend)
-        else:
-            msg = local_update_message(
-                v, lambda w, c: grad_at(w, c + 1), comp,
-                eta_l=cfg.local_lr, seed=wseed, backend=backend)
+            return grad_at(v, 0), wseed
+        src = local_update_source(v, lambda w, c: grad_at(w, c + 1), comp,
+                                  eta_l=cfg.local_lr, seed=wseed, backend=backend)
+        return src, prng.fold_seed(wseed, UPLINK_SALT)
+
+    def worker_msg(src, seed, shared):
+        """Q(src, B): one worker's decoded uplink message + stats."""
+        msg = engine.compress_leaf(src, comp, seed, shared_linf=shared,
+                                   backend=backend)
         dec = msg.values.astype(jnp.float32) * msg.scale
         nnz = jnp.sum(jnp.abs(jnp.sign(msg.values)).astype(jnp.float32))
         return dec, nnz
@@ -88,7 +98,11 @@ def build_round_fn(loss_fn: Callable, cfg: FLConfig, x_parts, y_parts):
         ksel, kw = jax.random.split(jax.random.fold_in(key, round_idx))
         sel = jax.random.permutation(ksel, m)[:n_sel]
         keys = jax.random.split(kw, n_sel)
-        dec, nnz = jax.vmap(lambda w, k: worker_msg(v, w, k, round_idx))(sel, keys)
+        srcs, seeds = jax.vmap(lambda w, k: worker_source(v, w, k, round_idx))(sel, keys)
+        # the magnitude-sharing all-reduce(max) over the sampled set S
+        shared = (jnp.max(jnp.abs(srcs.astype(jnp.float32)))
+                  if share_linf else None)
+        dec, nnz = jax.vmap(lambda s, sd: worker_msg(s, sd, shared))(srcs, seeds)
         vote_sum = jnp.sum(dec, axis=0)
         v, ef = engine.server_apply(
             v, vote_sum, comp, lr=cfg.lr, ef=ef, n_sel=jnp.float32(n_sel),

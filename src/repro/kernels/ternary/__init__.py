@@ -1,0 +1,4 @@
+# Generic ternary-compressor kernel template: one kernel body, many
+# compressors. The probability/symbol rule is a specialization argument
+# (see rules.py); ops.py exposes the per-compressor instantiations the
+# CompressorSpec registry points at.

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the generic ternary kernel template.
+
+Must match the Pallas kernels bit-for-bit: same rules (rules.py), same
+counter-hash RNG (repro.core.prng == kernels.common.mix32), same float32
+threshold comparisons. These are also the *normalized* reference compressors
+the CompressorSpec registry points at — the public compressor functions in
+repro.core.compressors are thin scale-wrapping shims over them.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import prng
+from repro.kernels import common
+from repro.kernels.pack2bit.ref import pack2bit_ref
+from repro.kernels.ternary.rules import RULES
+
+
+def ternary_compress_ref(g: jnp.ndarray, param, seed, counter_base=0, *,
+                         rule: str) -> jnp.ndarray:
+    """int8 ternary RULES[rule] symbols over an arbitrary-shape tensor."""
+    fn = RULES[rule]
+    gf = g.astype(jnp.float32)
+    idx = (jnp.arange(g.size, dtype=jnp.uint32).reshape(g.shape)
+           + jnp.asarray(counter_base, jnp.uint32))
+
+    def u(salt: int):
+        s = seed if salt == 0 else prng.fold_seed(seed, salt)
+        return prng.uniform01(s, idx)
+
+    return fn(gf, u, jnp.asarray(param, jnp.float32)).astype(jnp.int8)
+
+
+def ternary_pack2bit_ref(g: jnp.ndarray, param, seed, counter_base=0, *,
+                         rule: str) -> jnp.ndarray:
+    """(any shape) -> (rows, LANES//4) uint8 packed canonical wire: the
+    two-pass composition the fused kernel must reproduce byte-for-byte."""
+    t = ternary_compress_ref(g, param, seed, counter_base, rule=rule)
+    view, _ = common.to_2d(t.reshape(-1))
+    return pack2bit_ref(view)

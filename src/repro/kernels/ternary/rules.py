@@ -1,0 +1,62 @@
+"""Ternarization rules — the single source of truth shared by the jnp
+reference compressors (repro.core.compressors), the pure-jnp kernel oracles
+(ref.py) and the Pallas kernel bodies (kernel.py).
+
+A rule maps one float32 block to ternary {-1, 0, +1} symbols::
+
+    rule(g, u, param) -> float32 in {-1.0, 0.0, +1.0}
+
+where ``g`` is the float32 gradient block, ``param`` a float32 scalar whose
+meaning is rule-specific (sparsign: the budget B; noisy_sign: the noise sigma;
+stochastic_ternary: the normalizing magnitude s_t), and ``u(salt)`` returns the
+coordinate-indexed uniform[0,1) stream for this block with the caller's seed
+folded by ``salt`` (salt 0 = the unfolded seed). Callers supply ``u``: the jnp
+oracle from ``repro.core.prng``, the Pallas kernel from the in-register
+counter hash (``repro.kernels.common.mix32``) — bitwise-identical streams by
+the engine's backend contract.
+
+Rules must stay pure elementwise jnp (plus ``u``) so the same function object
+inlines inside a Pallas kernel body.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparsign_rule(g, u, param):
+    """Def. 1: sign(g_i) w.p. min(|g_i| * B, 1) else 0; param = B."""
+    p = jnp.clip(jnp.abs(g) * param, 0.0, 1.0)
+    return jnp.where(u(0) < p, jnp.sign(g), 0.0)
+
+
+def sign_rule(g, u, param):
+    """signSGD (Bernstein et al. 2018): deterministic sign; sign(0) = 0.
+    param unused; no uniforms drawn."""
+    return jnp.sign(g)
+
+
+def noisy_sign_rule(g, u, param):
+    """Noisy signSGD (Chen et al. 2020a): sign(g + n), n ~ N(0, sigma^2);
+    param = sigma. Gaussian noise from two folded uniform streams (Box-Muller),
+    matching repro.core.compressors.noisy_sign draw-for-draw."""
+    u1 = jnp.maximum(u(1), jnp.float32(1e-12))  # guard u1=0 for the log
+    u2 = u(2)
+    n = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return jnp.sign(g + param * n)
+
+
+def stochastic_ternary_rule(g, u, param):
+    """TernGrad / 1-bit QSGD family: sign(g_i) w.p. |g_i|/s_t else 0;
+    param = s_t (the local or magnitude-shared normalizer)."""
+    p = jnp.clip(jnp.abs(g) / jnp.maximum(param, 1e-12), 0.0, 1.0)
+    return jnp.where(u(0) < p, jnp.sign(g), 0.0)
+
+
+#: rule name -> rule fn; the kernel template and the oracles key on this table
+RULES = {
+    "sparsign": sparsign_rule,
+    "sign": sign_rule,
+    "noisy_sign": noisy_sign_rule,
+    "stochastic_ternary": stochastic_ternary_rule,
+}

@@ -68,7 +68,10 @@ def encode_weight_update(vote_sum: jnp.ndarray, *, quorum: int = 1,
                          backend: Optional[str] = None) -> jnp.ndarray:
     """Trainer-side downlink encoder: integer vote sum -> 2-bit packed ternary
     decision, ``where(|v| >= quorum, sign(v), 0)`` in the pack2bit canonical
-    wire format. ``build_update_ingest`` is the inverse+apply."""
+    wire format. ``build_update_ingest`` is the inverse+apply. For scaled
+    servers the per-round decode scale rides next to the payload (one f32),
+    exactly like the uplink's ``CompressedGrad.scale`` — pass it to the ingest
+    step as ``scales``."""
     from repro.kernels import common as kcommon
     from repro.kernels.pack2bit.ops import pack2bit_op
     from repro.kernels.pack2bit.ref import pack2bit_ref
@@ -85,14 +88,21 @@ def encode_weight_update(vote_sum: jnp.ndarray, *, quorum: int = 1,
 def build_update_ingest(model: Model, mesh, *, lr, quorum: int = 1,
                         wire: str = "packed2bit", backend: Optional[str] = None,
                         donate: bool = True):
-    """jit'd ``(params, updates) -> params``: online weight-update ingestion
-    routed through ``engine.server_apply`` (the fused vote_update path).
+    """jit'd ``(params, updates, scales=None) -> params``: online weight-update
+    ingestion routed through ``engine.server_apply`` (the fused vote_update
+    path).
 
     ``wire`` selects the downlink message format per leaf:
       - ``"packed2bit"``: uint8 (rows, LANES//4) canonical views from
         ``encode_weight_update`` — 0.25 B/coord on the wire; decoded by the
         fused unpack kernel (backend-dispatched) straight into the update.
       - ``"int8"``: raw ternary (or small-int vote-sum) tensors in leaf shape.
+
+    ``scales`` (optional pytree of f32 scalars matching ``params``) carries a
+    shared per-leaf decode scale next to the ternary payload — the downlink
+    twin of a scale-carrying compressor's ``CompressedGrad.scale`` (TernGrad's
+    magnitude-shared s_t); the replica applies ``p - lr * scale * decision``.
+    Without it, decisions apply at unit scale (the sign-family servers).
 
     The quorum deadband is applied by whichever side signs: packed updates
     arrive already ternary (the encoder gated them), so they are applied with
@@ -112,12 +122,13 @@ def build_update_ingest(model: Model, mesh, *, lr, quorum: int = 1,
             "(vote_sum, quorum=...); a replica-side quorum here would be "
             "silently ignored. Use wire='int8' to gate on the replica.")
     backend = engine.resolve_backend(backend)
-    cfg = CompressionConfig(compressor="sparsign", server="majority_vote")
-    packed = wire == "packed2bit"
+    # the ingest config only selects the server rule; the decision tensor is
+    # compressor-agnostic (any ternary uplink produces the same wire format)
+    cfg = CompressionConfig(server="majority_vote")
 
-    def ingest(params, updates):
-        def leaf(p, u):
-            if packed:
+    def ingest(params, updates, scales=None):
+        def leaf(p, u, scale=None):
+            if wire == "packed2bit":
                 if backend == "jnp":
                     votes = kcommon.from_2d(unpack2bit_ref(u), p.size, p.shape)
                 else:
@@ -126,10 +137,25 @@ def build_update_ingest(model: Model, mesh, *, lr, quorum: int = 1,
                 q = 1   # the encoder already applied the deadband
             else:
                 votes, q = u, quorum
+            if scale is not None:
+                # scaled downlink (packed2bit only): the payload is already the
+                # gated aggregate ternary decision, so the mean rule with
+                # n_sel=1 applies p - lr * scale * decision
+                new_p, _ = engine.server_apply(
+                    p, votes, cfg, lr=lr, server="mean", n_sel=1.0,
+                    scale=scale, backend=backend)
+                return new_p
             new_p, _ = engine.server_apply(p, votes, cfg, lr=lr, quorum=q,
                                            backend=backend)
             return new_p
-        return jax.tree_util.tree_map(leaf, params, updates)
+        if scales is None:
+            return jax.tree_util.tree_map(leaf, params, updates)
+        if wire != "packed2bit":
+            raise ValueError(
+                "scaled ingestion needs the packed2bit wire (already-"
+                "aggregated ternary decisions); the int8 wire carries raw "
+                "vote sums whose scale-free gating happens replica-side")
+        return jax.tree_util.tree_map(leaf, params, updates, scales)
 
     return jax.jit(ingest, donate_argnums=(0,) if donate else ())
 

@@ -1,13 +1,19 @@
 """Checkpointing: atomic, mesh-independent, elastic-restore.
 
 Format: one directory per step containing a ``manifest.json`` (tree structure,
-shapes, dtypes, step, seed) and flat ``.npy`` payloads keyed by canonical leaf
-index. Writes go to ``<dir>.tmp`` then ``os.rename`` (atomic on POSIX) so a
-crash mid-save never corrupts the latest checkpoint; ``keep`` rotation prunes
-old steps. Arrays are saved *logically* (fully-gathered numpy) — restore
-re-shards onto ANY mesh via device_put with the target shardings, which is the
-elastic-scaling path: majority-vote state is M-invariant so a checkpoint
-trained on 256 chips resumes on 8 (tests/mdev/check_fault_tolerance.py).
+shapes, dtypes, step, seed, and a structure *fingerprint*) and flat ``.npy``
+payloads keyed by canonical leaf index. Writes go to ``<dir>.tmp`` then
+``os.rename`` (atomic on POSIX) so a crash mid-save never corrupts the latest
+checkpoint; ``keep`` rotation prunes old steps. Arrays are saved *logically*
+(fully-gathered numpy) — restore re-shards onto ANY mesh via device_put with
+the target shardings, which is the elastic-scaling path: majority-vote state
+is M-invariant so a checkpoint trained on 256 chips resumes on 8
+(tests/mdev/check_fault_tolerance.py).
+
+The fingerprint hashes every leaf's (path, shape, dtype): restoring into a
+state whose tree doesn't match raises ``CheckpointMismatchError`` instead of
+silently loading another run's weights — the classic stale-/tmp-dir footgun
+(``train.loop`` catches it and starts fresh with a loud warning).
 
 For multi-TB models a production deployment would write per-shard payloads;
 the manifest format has a ``sharded`` flag reserved for that extension.
@@ -16,6 +22,7 @@ the manifest format has a ``sharded`` flag reserved for that extension.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import shutil
@@ -26,6 +33,29 @@ import jax.numpy as jnp
 import numpy as np
 
 MANIFEST = "manifest.json"
+
+
+class CheckpointMismatchError(ValueError):
+    """The checkpoint's tree/config fingerprint doesn't match the restore
+    target — it belongs to a different model or run configuration."""
+
+
+def _leaf_descs(tree) -> list[list]:
+    """[(keypath, shape, dtype)] per leaf — the structural identity of a state
+    pytree (values excluded). ShapeDtypeStructs and arrays both work."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for p, leaf in flat:
+        shape = list(getattr(leaf, "shape", np.shape(leaf)))
+        dtype = str(getattr(leaf, "dtype", np.asarray(leaf).dtype))
+        out.append([jax.tree_util.keystr(p), shape, dtype])
+    return out
+
+
+def tree_fingerprint(tree) -> str:
+    """Stable hex digest of the tree structure + per-leaf shapes/dtypes."""
+    payload = json.dumps(_leaf_descs(tree), separators=(",", ":"))
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
 def _tree_paths(tree) -> list[str]:
@@ -46,6 +76,8 @@ def save(ckpt_dir: str, step: int, state, *, keep: int = 3, extra: Optional[dict
         "step": int(step),
         "n_leaves": len(flat),
         "paths": [jax.tree_util.keystr(p) for p, _ in flat],
+        "leaves": _leaf_descs(state),
+        "fingerprint": tree_fingerprint(state),
         "extra": extra or {},
         "sharded": False,
     }
@@ -93,10 +125,24 @@ def restore(ckpt_dir: str, like, *, step: Optional[int] = None, shardings=None):
         manifest = json.load(f)
 
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
-    assert len(flat_like) == manifest["n_leaves"], (
-        f"leaf count mismatch: ckpt {manifest['n_leaves']} vs target {len(flat_like)}")
+    want_fp = tree_fingerprint(like)
+    got_fp = manifest.get("fingerprint")
+    if got_fp is not None and got_fp != want_fp:
+        want_desc = {tuple(d[0:1]) + (tuple(d[1]), d[2]) for d in _leaf_descs(like)}
+        got_desc = {tuple(d[0:1]) + (tuple(d[1]), d[2]) for d in manifest.get("leaves", [])}
+        diff = sorted(x[0] for x in want_desc.symmetric_difference(got_desc))[:8]
+        raise CheckpointMismatchError(
+            f"checkpoint {src} was written by a different model/config: "
+            f"fingerprint {got_fp} != expected {want_fp} "
+            f"(first differing leaves: {diff}). Point ckpt_dir at a fresh "
+            f"directory, or delete the stale checkpoint.")
+    # legacy manifests (no fingerprint) still get the structural checks
+    if len(flat_like) != manifest["n_leaves"]:
+        raise CheckpointMismatchError(
+            f"leaf count mismatch: ckpt {manifest['n_leaves']} vs target {len(flat_like)}")
     want_paths = [jax.tree_util.keystr(p) for p, _ in flat_like]
-    assert want_paths == manifest["paths"], "tree structure mismatch on restore"
+    if want_paths != manifest["paths"]:
+        raise CheckpointMismatchError("tree structure mismatch on restore")
 
     sh_flat = (jax.tree_util.tree_flatten(shardings)[0]
                if shardings is not None else [None] * len(flat_like))

@@ -49,11 +49,24 @@ def run(
     """
     start = int(state.step)
     if cfg.ckpt_dir:
+        # resume from the newest COMPATIBLE checkpoint: a stale dir from
+        # another model/config (fingerprint mismatch) must neither crash the
+        # run nor shadow this run's own valid checkpoints at lower steps
         steps = ckpt_lib.latest_steps(cfg.ckpt_dir)
-        if steps:
-            state, manifest = ckpt_lib.restore(cfg.ckpt_dir, state)
-            start = int(manifest["step"])
-            log(f"[loop] resumed from step {start}")
+        for s in reversed(steps):
+            try:
+                state, manifest = ckpt_lib.restore(cfg.ckpt_dir, state, step=s)
+                start = int(manifest["step"])
+                log(f"[loop] resumed from step {start}")
+                break
+            except ckpt_lib.CheckpointMismatchError as e:
+                log(f"[loop] WARNING: skipping checkpoint step_{s:08d} in "
+                    f"{cfg.ckpt_dir} — written by a different model/config. {e}")
+        else:
+            if steps:
+                log(f"[loop] WARNING: no compatible checkpoint in "
+                    f"{cfg.ckpt_dir}; starting fresh (delete the stale "
+                    f"checkpoints to reclaim their rotation slots)")
 
     history = []
     t0 = time.time()

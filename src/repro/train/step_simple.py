@@ -13,20 +13,25 @@ Per round (Algorithm 1 / Algorithm 2 with tau=1..):
      2-bit packed for `allgather_packed`),
   3. one wire exchange over the worker axes = upload + server sum
      (`repro.dist.collectives.VoteWire`: psum | hier | allgather_packed),
-  4. C(.) (majority vote sign, or scaled-sign with server-side EF) computed
-     redundantly everywhere = free downlink,
+  4. C(.) (majority vote sign, scaled-sign with server-side EF, or the scaled
+     mean for shared-scale ternary baselines) computed redundantly everywhere
+     = free downlink,
   5. SGD update; params stay bitwise identical across workers.
 
-Baselines (terngrad/qsgd/identity) need the worker scale on the wire, so they
-psum decoded float32 — honestly costing fp32 collective bytes, which is exactly
-the communication gap the paper's tables report.
+Which wire a compressor rides is negotiated from the CompressorSpec table
+(``engine.wire_mode``): ternary compressors with a worker-invariant scale
+(scale-free, or TernGrad's psum-max'd shared_max) exchange ternary votes on
+the integer/packed wire even under a mean server; per-worker-scale baselines
+(qsgd_1bit/identity/...) psum decoded float32 — honestly costing fp32
+collective bytes, which is exactly the communication gap the paper's tables
+report.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +53,9 @@ class TrainStepConfig:
     local_lr: float = 1.0          # eta_L (Alg. 2)
     worker_axes: Sequence[str] = ("data",)
     vote_impl: str = "psum"        # psum | hier | allgather_packed
-    quorum: int = 1                # server deadband: |votes| < quorum -> no step
+    quorum: Any = 1                # server deadband: |votes| < quorum -> no step;
+                                   # int (broadcast) or a pytree prefix of the
+                                   # param tree with per-leaf ints
     donate: bool = True
     backend: Optional[str] = None  # kernel backend; None -> $REPRO_KERNEL_BACKEND
 
@@ -105,6 +112,18 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
     # built (and validated — hier demands two worker axes) at step-build time
     wire = collectives.make_vote_wire(step_cfg.vote_impl, axes, mesh,
                                       backend=backend)
+    # wire negotiation + per-leaf quorum: CompressorSpec/table lookups resolved
+    # (and validated) before tracing
+    mode = engine.wire_mode(comp)
+    share_linf = engine.needs_shared_linf(comp)
+    quorum_leaves = jax.tree_util.tree_leaves(
+        engine.broadcast_quorum(step_cfg.quorum, model.param_shapes()))
+    if mode != "votes" and any(q != 1 for q in quorum_leaves):
+        raise ValueError(
+            f"quorum={step_cfg.quorum!r} is a vote-server deadband, but "
+            f"compressor {comp.compressor!r} with server {comp.server!r} "
+            f"rides the {mode!r} wire where it would be silently ignored; "
+            f"use a vote server ({engine.VOTE_SERVERS}) or quorum=1")
 
     # activation hints may only target auto (non-worker) mesh axes; in pure-DP
     # mode every axis is a worker and no constraints are needed (all compute local)
@@ -135,28 +154,41 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         nnz_acc = jnp.float32(0.0)
         total = 0
         wire_bytes = 0.0   # per-device uplink ledger (static sizes under jit)
-        vote_wire = comp.is_ternary and engine.is_vote_server(comp)
 
         for i, (g, p, ef) in enumerate(zip(leaves, p_leaves, ef_flat)):
             seed_i = prng.fold_seed(wseed, i)
-            if vote_wire:
+            shared = None
+            if share_linf:
+                # TernGrad's magnitude-sharing protocol / linf_share budgets:
+                # one f32 pmax over the sampled workers before compressing
+                shared = collectives.worker_shared_linf(g, axes, mask=mask)
+                wire_bytes += wire.scalar_bytes()
+            if mode != "decoded":
                 # wire-native ternary votes (packed uint8 or int8, per the
                 # wire): one exchange = upload + server sum, then C(.) + SGD
-                # fused in the engine
+                # fused in the engine. scaled_votes additionally carries ONE
+                # shared decode scale (msg.scale) next to the payload.
                 msg = engine.compress_leaf(g, comp, seed_i, backend=backend,
-                                           wire=wire)
+                                           wire=wire, shared_linf=shared)
                 votes = wire.mask_message(msg.values, mask)
                 vote_sum = wire.exchange(votes, g.size, g.shape)
                 nnz_acc += wire.message_nnz(votes)
                 wire_bytes += wire.wire_bytes(g.size)
                 n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
-                new_p, new_ef = engine.server_apply(
-                    p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel,
-                    quorum=step_cfg.quorum, backend=backend)
+                if mode == "votes":
+                    new_p, new_ef = engine.server_apply(
+                        p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel,
+                        quorum=quorum_leaves[i], backend=backend)
+                else:
+                    new_p, new_ef = engine.server_apply(
+                        p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel,
+                        server="mean", scale=msg.scale, backend=backend)
             else:
-                msg = engine.compress_leaf(g, comp, seed_i, backend=backend)
-                # decoded-float wire: ternary mean servers (TernGrad/QSGD-style)
-                # and every non-ternary baseline ship decode(compress(g)) — fp32
+                msg = engine.compress_leaf(g, comp, seed_i, backend=backend,
+                                           shared_linf=shared)
+                # decoded-float wire: per-worker-scale ternary baselines
+                # (qsgd_1bit/scaled_sign under a mean server) and every
+                # non-ternary baseline ship decode(compress(g)) — fp32
                 # collective bytes, honestly the cost this family pays
                 # (identity's message IS g, so D-SGD is bit-identical to raw psum)
                 dec = msg.values.astype(jnp.float32) * msg.scale

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +49,9 @@ class StreamedStepConfig:
     worker_axes: Sequence[str] = ("data",)
     fsdp_axis: str = "data"
     vote_impl: str = "psum"        # psum | hier | allgather_packed
-    quorum: int = 1                # server deadband: |votes| < quorum -> no step
+    quorum: Any = 1                # server deadband: |votes| < quorum -> no step;
+                                   # int (broadcast) or a pytree prefix of the
+                                   # param tree with per-leaf ints
     donate: bool = True
     backend: Optional[str] = None  # kernel backend; None -> $REPRO_KERNEL_BACKEND
 
@@ -158,10 +160,15 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     # built (and validated — hier demands two worker axes) at step-build time
     wire = collectives.make_vote_wire(step_cfg.vote_impl, axes, mesh,
                                       backend=backend)
+    share_linf = engine.needs_shared_linf(comp)
     fsdp_ax = step_cfg.fsdp_axis
     n_shards = mesh.shape[fsdp_ax]
 
     shapes = model.param_shapes()
+    # per-leaf quorum, validated at build time; indexed by canonical leaf
+    # position (same flat order as idx_tree below)
+    quorum_flat = jax.tree_util.tree_leaves(
+        engine.broadcast_quorum(step_cfg.quorum, shapes))
     _, axes_all, manual_specs = streamed_shardings(model, mesh, fsdp_ax)
     block_specs, block_axes = manual_specs["blocks"], axes_all["blocks"]
     outer_keys = [k for k in shapes if k != "blocks"]
@@ -176,10 +183,11 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     # per-round per-device uplink ledger: block leaves exchange once per layer
     # at their per-layer size (padding is per-exchange, so it multiplies out),
     # outer leaves once at full size
+    scalar_tax = wire.scalar_bytes() if share_linf else 0.0
     wire_ledger = sum(
-        cfg.n_repeats * wire.wire_bytes(math.prod(s.shape[1:]))
+        cfg.n_repeats * (wire.wire_bytes(math.prod(s.shape[1:])) + scalar_tax)
         for s in jax.tree_util.tree_leaves(shapes["blocks"]))
-    wire_ledger += sum(wire.wire_bytes(math.prod(s.shape))
+    wire_ledger += sum(wire.wire_bytes(math.prod(s.shape)) + scalar_tax
                        for k in outer_keys
                        for s in jax.tree_util.tree_leaves(shapes[k]))
 
@@ -193,15 +201,18 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         return jax.lax.dynamic_slice_in_dim(full, start, shard_size, axis=ax)
 
     def leaf_update(p_shard, g_full, *, seed, counter_base, ef_shard, mask, lr,
-                    shard_ax: int, leaf_size: int):
+                    shard_ax: int, leaf_size: int, quorum: int):
         """compress(full) -> wire exchange(full) -> server math + SGD on the SHARD.
 
         The fp32 update/EF tensors only ever exist at shard size; the full-size
         artifacts are the bf16/f32 gradient (transient, from vjp) and the
         wire-native votes (1 B/coord int8 for the psum wires, 0.25 B/coord
         packed for allgather_packed)."""
+        shared = (collectives.worker_shared_linf(g_full, axes, mask=mask)
+                  if share_linf else None)
         msg = engine.compress_leaf(g_full, comp, seed, counter_base,
-                                   backend=backend, wire=wire)
+                                   backend=backend, wire=wire,
+                                   shared_linf=shared)
         votes = wire.mask_message(msg.values, mask)
         vote_sum = wire.exchange(votes, g_full.size, g_full.shape)
         nnz = wire.message_nnz(votes)
@@ -213,7 +224,7 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                      if shard_ax != REPLICATED else None)
         new_shard, new_ef = engine.server_apply(
             p_shard, vs, comp, lr=lr, ef=ef_shard, n_sel=n_sel,
-            leaf_size=leaf_size, l1_reduce=l1_reduce, quorum=step_cfg.quorum,
+            leaf_size=leaf_size, l1_reduce=l1_reduce, quorum=quorum,
             backend=backend)
         return new_shard, new_ef, nnz
 
@@ -285,7 +296,8 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                 sh_ax = ax - 1 if ax != REPLICATED else REPLICATED
                 new_shard, new_ef, nnz = leaf_update(
                     p_shard, g, seed=seed_i, counter_base=base, ef_shard=ef,
-                    mask=mask, lr=lr, shard_ax=sh_ax, leaf_size=g.size)
+                    mask=mask, lr=lr, shard_ax=sh_ax, leaf_size=g.size,
+                    quorum=quorum_flat[leaf_idx])
                 nnz_acc = nnz_acc + nnz
                 new_shards.append(new_shard)
                 new_efs.append(new_ef)
@@ -320,7 +332,8 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
             new_shard, new_ef_k, nnz = leaf_update(
                 params[k], g_k, seed=seed_i, counter_base=jnp.uint32(0),
                 ef_shard=ef_k, mask=mask, lr=lr,
-                shard_ax=outer_axes[k], leaf_size=g_k.size)
+                shard_ax=outer_axes[k], leaf_size=g_k.size,
+                quorum=quorum_flat[idx_tree[k]])
             nnz_acc = nnz_acc + nnz
             new_params[k] = new_shard
             if has_ef:

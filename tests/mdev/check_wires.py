@@ -8,9 +8,15 @@ allgather_packed wires are bitwise-equal to the vote_psum stream of the SAME
 mode+backend; and the interpret stream equals the jnp stream (engine
 contract), so all 12 combinations collapse onto one oracle.
 
-The packed wire runs the fused sparsign->pack2bit uplink kernel and the fused
-unpack+accumulate decode on the interpret backend — this is the acceptance
-check that the fused wire is bitwise-honest end-to-end.
+The packed wire runs the fused compress->pack2bit uplink kernels and the
+fused unpack+accumulate decode on the interpret backend — this is the
+acceptance check that the fused wire is bitwise-honest end-to-end.
+
+Beyond sparsign, the non-sparsign ternary compressors run the same 3-wire x
+2-backend sweep in simple mode: noisy_sign exercises the generic ternary
+kernel template on the votes wire, terngrad exercises the scaled_votes wire
+(magnitude-shared s_t pmax'd over ('pod','data'), ternary votes + one scalar
+on the fabric, mean-server decode).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -93,6 +99,19 @@ def main():
     print("simple mode (qwen1.5-4b smoke):")
     check_mode("simple", mesh, model_s, params_s, make_batch(cfg_s, 8, 16), comp, lr)
     print("OK simple-mode wires bitwise-equal (3 wires x 2 backends)")
+
+    # non-sparsign ternary compressors: same wire-invariance sweep through the
+    # generic ternary kernel template (simple mode; streamed mode is pinned to
+    # vote servers, covered by the sparsign sweep above)
+    for name, server, value in (("noisy_sign", "majority_vote", 0.5),
+                                ("terngrad", "mean", 1.0)):
+        comp_n = CompressionConfig(compressor=name,
+                                   budget=BudgetConfig(kind="fixed", value=value),
+                                   server=server)
+        print(f"simple mode ({name} / {server}):")
+        check_mode("simple", mesh, model_s, params_s,
+                   make_batch(cfg_s, 8, 16), comp_n, lr)
+        print(f"OK {name} wires bitwise-equal (3 wires x 2 backends)")
 
     cfg_t = get_config("qwen2-moe-a2.7b", smoke=True)
     model_t = Model(cfg_t)

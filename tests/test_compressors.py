@@ -7,8 +7,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.budgets import BudgetConfig, expected_sparsity, resolve_budget, solve_budget_for_sparsity
-from repro.core.compressors import (COMPRESSORS, compress_leaf_chunked, get_compressor,
-                                    qsgd_1bit_l2, sparsign, terngrad)
+from repro.core.compressors import (COMPRESSORS, SPECS, compress_leaf_chunked,
+                                    get_compressor, get_spec, qsgd_1bit_l2,
+                                    sparsign, terngrad)
 
 TERNARY = ("sparsign", "sign", "scaled_sign", "noisy_sign",
            "qsgd_1bit_l2", "qsgd_1bit_linf", "terngrad")
@@ -124,6 +125,29 @@ def test_qsgd8_unbiased_decode():
     level = float(np.linalg.norm(np.asarray(g))) / 255.0
     err = np.abs(acc / n - np.asarray(g))
     assert err.max() < level / 3.0, err.max()
+
+
+def test_compressors_table_is_spec_derived():
+    """COMPRESSORS is a view over the CompressorSpec registry — same names,
+    spec.api is the public callable, and ternariness matches the table."""
+    assert set(COMPRESSORS) == set(SPECS)
+    for name in COMPRESSORS:
+        assert get_compressor(name) is get_spec(name).api
+    for name in TERNARY:
+        assert SPECS[name].is_ternary, name
+    assert not SPECS["qsgd8"].is_ternary
+    assert not SPECS["identity"].is_ternary
+
+
+def test_terngrad_shared_max_kwarg():
+    """Magnitude sharing: a larger shared normalizer raises the scale and
+    thins the transmitted set; decode stays unbiased around g by scale*E[t]."""
+    g = jnp.asarray(np.random.RandomState(12).randn(4096), jnp.float32)
+    local = terngrad(g, seed=1)
+    big = jnp.float32(4.0) * jnp.max(jnp.abs(g))
+    shared = terngrad(g, seed=1, shared_max=big)
+    assert float(shared.scale) == float(big)
+    assert float(jnp.sum(jnp.abs(shared.values))) < float(jnp.sum(jnp.abs(local.values)))
 
 
 def test_scaled_sign_scale():

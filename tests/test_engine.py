@@ -15,11 +15,17 @@ from repro.core import engine
 from repro.core.algorithm import (MAX_LOCAL_STEPS, CompressionConfig,
                                   local_update_message)
 from repro.core.budgets import BudgetConfig
+from repro.core.compressors import (SCALE_PROTOCOLS, SERVER_DECODES, SPECS,
+                                    get_spec)
 
 # odd sizes exercise the canonical-view padding; bf16 the kernel upcast path
 SHAPES = [(63,), (1000,), (7, 333)]
 DTYPES = ["float32", "bfloat16"]
 OTHER = "interpret" if jax.default_backend() != "tpu" else "pallas"
+
+# every compressor whose spec registers a Pallas op — the kernel-vs-jnp
+# equivalence matrix IS the registry, no hand-kept list
+KERNEL_BACKED = sorted(n for n, s in SPECS.items() if s.pallas_op is not None)
 
 
 def _cfg(compressor="sparsign", server="majority_vote", value=1.0):
@@ -28,13 +34,12 @@ def _cfg(compressor="sparsign", server="majority_vote", value=1.0):
                              server=server)
 
 
-# only sparsign has a kernel (KERNEL_COMPRESSORS); the other compressors fall
-# back to the identical jnp path on every backend, so testing them here would
-# compare a function's output to itself
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("dtype", DTYPES)
-@pytest.mark.parametrize("compressor", ["sparsign"])
+@pytest.mark.parametrize("compressor", KERNEL_BACKED)
 def test_compress_leaf_backend_equivalence(shape, dtype, compressor):
+    """jnp == kernel for values AND the decode scale (the scale round-trip:
+    scaled_sign's L1/d, qsgd_1bit's norms, terngrad's local max)."""
     g = jnp.asarray(np.random.RandomState(0).randn(*shape), dtype)
     for counter_base in (0, 12345):
         a = engine.compress_leaf(g, _cfg(compressor), 9, counter_base, backend="jnp")
@@ -43,6 +48,85 @@ def test_compress_leaf_backend_equivalence(shape, dtype, compressor):
         assert a.values.shape == g.shape
         assert np.array_equal(np.asarray(a.values), np.asarray(b.values))
         assert np.array_equal(np.asarray(a.scale), np.asarray(b.scale))
+
+
+def test_spec_registry_is_total_and_wellformed():
+    """Every registered compressor has a complete, self-consistent spec row."""
+    for name, spec in SPECS.items():
+        assert spec.name == name
+        assert callable(spec.api) and callable(spec.values)
+        assert spec.scale_protocol in SCALE_PROTOCOLS
+        assert spec.server_decode in SERVER_DECODES
+        assert (spec.local_scale is None) == (spec.scale_protocol == "none")
+        if spec.fused_pack_op is not None:
+            assert spec.is_ternary and spec.pallas_op is not None
+        # ternary <-> CompressionConfig.is_ternary agrees with the table
+        assert _cfg(name).is_ternary == spec.is_ternary
+    with pytest.raises(KeyError, match="unknown compressor"):
+        get_spec("bogus")
+
+
+def test_wire_mode_negotiation():
+    """(compressor, server) -> wire format is a pure spec lookup."""
+    assert engine.wire_mode(_cfg("sparsign")) == "votes"
+    assert engine.wire_mode(_cfg("noisy_sign", server="scaled_sign_ef")) == "votes"
+    # shared-scale ternary + mean server: integer votes + ONE scalar
+    assert engine.wire_mode(_cfg("terngrad", server="mean")) == "scaled_votes"
+    assert engine.wire_mode(_cfg("sign", server="mean")) == "scaled_votes"
+    # per-worker scales and non-ternary payloads stay on the float wire
+    assert engine.wire_mode(_cfg("qsgd_1bit_l2", server="mean")) == "decoded"
+    assert engine.wire_mode(_cfg("scaled_sign", server="mean")) == "decoded"
+    assert engine.wire_mode(_cfg("qsgd8", server="majority_vote")) == "decoded"
+    assert engine.wire_mode(_cfg("identity", server="mean")) == "decoded"
+
+
+def test_needs_shared_linf():
+    assert engine.needs_shared_linf(_cfg("terngrad", server="mean"))
+    assert engine.needs_shared_linf(_cfg("terngrad"))   # any server: Q needs s_t
+    assert not engine.needs_shared_linf(_cfg("sparsign"))
+    linf_budget = CompressionConfig(budget=BudgetConfig(kind="linf_share"))
+    assert engine.needs_shared_linf(linf_budget)
+
+
+def test_terngrad_shared_linf_scale_roundtrip():
+    """shared_linf drives both the Bernoulli probabilities and the decode
+    scale, identically on both backends (the Appendix B protocol)."""
+    g = jnp.asarray(np.random.RandomState(3).randn(513), jnp.float32)
+    shared = jnp.float32(2.5 * float(jnp.max(jnp.abs(g))))
+    msgs = {}
+    for backend in ("jnp", OTHER):
+        local = engine.compress_leaf(g, _cfg("terngrad"), 5, backend=backend)
+        m = engine.compress_leaf(g, _cfg("terngrad"), 5, backend=backend,
+                                 shared_linf=shared)
+        assert float(m.scale) == float(shared)
+        assert float(local.scale) == float(jnp.max(jnp.abs(g)))
+        # a larger normalizer keeps fewer coordinates on average
+        assert float(jnp.sum(jnp.abs(m.values))) <= float(jnp.sum(jnp.abs(local.values)))
+        msgs[backend] = m
+    a, b = msgs.values()
+    assert np.array_equal(np.asarray(a.values), np.asarray(b.values))
+
+
+def test_broadcast_quorum():
+    tree = {"embed": jnp.zeros(4), "blocks": {"w": jnp.zeros(2), "b": jnp.zeros(2)}}
+    # scalar broadcast
+    q = engine.broadcast_quorum(3, tree)
+    assert jax.tree_util.tree_leaves(q) == [3, 3, 3]
+    # prefix tree: one int per top-level key fans out over the subtree
+    q = engine.broadcast_quorum({"embed": 7, "blocks": 1}, tree)
+    assert q["embed"] == 7 and q["blocks"] == {"w": 1, "b": 1}
+    # full tree also accepted
+    q = engine.broadcast_quorum({"embed": 2, "blocks": {"w": 4, "b": 5}}, tree)
+    assert q["blocks"]["w"] == 4 and q["blocks"]["b"] == 5
+    # validation: bad prefix / non-int / < 1 fail loudly at build time
+    with pytest.raises(ValueError, match="prefix"):
+        engine.broadcast_quorum({"embed": 1}, tree)
+    with pytest.raises(ValueError, match="ints >= 1"):
+        engine.broadcast_quorum({"embed": 0, "blocks": 1}, tree)
+    with pytest.raises(ValueError, match="ints >= 1"):
+        engine.broadcast_quorum({"embed": 1.5, "blocks": 1}, tree)
+    with pytest.raises(ValueError, match="ints >= 1"):
+        engine.broadcast_quorum(0, tree)
 
 
 @pytest.mark.parametrize("server", ["majority_vote", "scaled_sign_ef", "mean"])
@@ -86,6 +170,24 @@ def test_server_apply_sharded_scale_matches_unsharded(backend):
         got_ef.append(se)
     np.testing.assert_array_equal(np.asarray(jnp.concatenate(got_p)), np.asarray(whole_p))
     np.testing.assert_array_equal(np.asarray(jnp.concatenate(got_ef)), np.asarray(whole_ef))
+
+
+def test_server_apply_mean_scale():
+    """The scaled_votes decode: mean rule with a shared scale == decoding the
+    votes by hand. scale=None stays bitwise-identical to the legacy path."""
+    rng = np.random.RandomState(8)
+    p = jnp.asarray(rng.randn(257), jnp.float32)
+    votes = jnp.asarray(rng.randint(-3, 4, 257), jnp.int32)
+    scale = jnp.float32(0.37)
+    got, _ = engine.server_apply(p, votes, _cfg("terngrad", server="mean"),
+                                 lr=0.1, n_sel=4.0, scale=scale, backend="jnp")
+    want = p - jnp.float32(0.1) * (votes.astype(jnp.float32) / 4.0 * scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    plain, _ = engine.server_apply(p, votes, _cfg(server="mean"), lr=0.1,
+                                   n_sel=4.0, backend="jnp")
+    one, _ = engine.server_apply(p, votes, _cfg(server="mean"), lr=0.1,
+                                 n_sel=4.0, scale=jnp.float32(1.0), backend="jnp")
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(one))
 
 
 def test_backend_resolution(monkeypatch):

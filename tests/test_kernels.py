@@ -13,6 +13,9 @@ from repro.kernels.pack2bit.ops import pack2bit_op, unpack2bit_op
 from repro.kernels.pack2bit.ref import pack2bit_ref, unpack2bit_ref
 from repro.kernels.sparsign.ops import sparsign_op
 from repro.kernels.sparsign.ref import sparsign_ref
+from repro.kernels.ternary.ops import ternary_compress_op, ternary_pack2bit_op
+from repro.kernels.ternary.ref import ternary_compress_ref, ternary_pack2bit_ref
+from repro.kernels.ternary.rules import RULES
 from repro.kernels.vote_update.ops import vote_update_op
 from repro.kernels.vote_update.ref import vote_update_ref
 
@@ -38,6 +41,55 @@ def test_sparsign_kernel_property(n, seed):
     a = sparsign_op(g, 0.8, seed)
     b = sparsign_ref(g, 0.8, seed)
     assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# one representative param per rule: sparsign/noisy_sign take a budget/sigma,
+# the stochastic family takes a magnitude normalizer s_t
+RULE_PARAMS = [("sparsign", 1.5), ("sign", 0.0), ("noisy_sign", 0.3),
+               ("stochastic_ternary", 1.2)]
+
+
+@pytest.mark.parametrize("shape", [(63,), (1000,), (7, 333), (513, 511)])
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("rule,param", RULE_PARAMS)
+def test_ternary_template_matches_ref(shape, dtype, rule, param):
+    """The generic ternary kernel template == the prng-based oracle, bitwise,
+    over odd shapes / bf16 / nonzero counter_base — same pin the dedicated
+    sparsign kernel carries."""
+    g = jnp.asarray(np.random.RandomState(0).randn(*shape), dtype)
+    for seed, base in [(1, 0), (99, 12345), (7, 2**20)]:
+        a = ternary_compress_op(g, param, seed, base, rule=rule)
+        b = ternary_compress_ref(g, param, seed, base, rule=rule)
+        assert a.dtype == jnp.int8 and a.shape == g.shape
+        assert set(np.unique(np.asarray(a))).issubset({-1, 0, 1})
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (shape, dtype, rule, seed)
+
+
+@pytest.mark.parametrize("shape", [(63,), (7, 333), (513, 511)])
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("rule,param", RULE_PARAMS)
+def test_ternary_fused_pack_matches_two_pass(shape, dtype, rule, param):
+    """fused compress->pack2bit == pack2bit_op(compress_op(g)) byte-for-byte.
+    noisy_sign is the sharp edge: its rule signs pure noise at zero input, so
+    the kernel must zero the canonical-view padding explicitly."""
+    g = jnp.asarray(np.random.RandomState(1).randn(*shape), dtype)
+    for seed, base in [(3, 0), (11, 4096)]:
+        fused = ternary_pack2bit_op(g, param, seed, base, rule=rule)
+        two_pass = pack2bit_op(ternary_compress_op(g, param, seed, base, rule=rule))
+        ref = ternary_pack2bit_ref(g, param, seed, base, rule=rule)
+        assert fused.dtype == jnp.uint8
+        assert np.array_equal(np.asarray(fused), np.asarray(two_pass)), (shape, rule)
+        assert np.array_equal(np.asarray(fused), np.asarray(ref)), (shape, rule)
+
+
+def test_ternary_template_sparsign_rule_matches_dedicated_kernel():
+    """The template instantiated with the sparsign rule reproduces the
+    dedicated sparsign kernel bit-for-bit — one rule table, no drift."""
+    g = jnp.asarray(np.random.RandomState(2).randn(1000), jnp.float32)
+    a = ternary_compress_op(g, 0.8, 7, 3, rule="sparsign")
+    b = sparsign_op(g, 0.8, 7, 3)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert set(RULES) >= {"sparsign", "sign", "noisy_sign", "stochastic_ternary"}
 
 
 @pytest.mark.parametrize("shape", SHAPES)

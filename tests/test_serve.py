@@ -162,6 +162,40 @@ def test_online_update_ingest_matches_trainer_server():
         build_update_ingest(m, mesh, lr=lr, wire="fp32")
 
 
+def test_scaled_update_ingest_applies_shared_scale():
+    """The scaled downlink (TernGrad-style trainers): packed ternary decision
+    + one f32 scale per leaf applies p - lr * scale * decision, bitwise equal
+    to the trainer's own scaled mean apply."""
+    from repro.core import engine
+    from repro.core.algorithm import CompressionConfig
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    m = Model(cfg)
+    mesh = make_host_mesh(1, 1)
+    params = m.init(jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    rng = np.random.RandomState(13)
+    decisions = [jnp.asarray(rng.randint(-1, 2, l.shape), jnp.int32) for l in leaves]
+    scales = [jnp.float32(0.1 + 0.05 * i) for i in range(len(leaves))]
+    lr = 0.05
+    comp = CompressionConfig(server="majority_vote")
+
+    # jitted like the ingest step, so XLA's fusion/rounding choices match
+    trainer_apply = jax.jit(lambda p, d, s: engine.server_apply(
+        p, d, comp, lr=lr, server="mean", n_sel=1.0, scale=s)[0])
+    want = [np.asarray(trainer_apply(p, d, s))
+            for p, d, s in zip(leaves, decisions, scales)]
+
+    packed = jax.tree_util.tree_unflatten(
+        treedef, [encode_weight_update(d) for d in decisions])
+    ingest = build_update_ingest(m, mesh, lr=lr, wire="packed2bit", donate=False)
+    got = jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        np.asarray,
+        ingest(params, packed, jax.tree_util.tree_unflatten(treedef, scales))))
+    for a, b in zip(got, want):
+        assert np.array_equal(a, b)
+
+
 def test_encoder_prefill_builder():
     cfg = get_config("hubert-xlarge", smoke=True)
     m = Model(cfg)

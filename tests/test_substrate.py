@@ -146,8 +146,83 @@ def test_checkpoint_structure_mismatch_rejected(tmp_path):
     ckpt.save(str(tmp_path), 1, state)
     other = TrainState(params={"a": state.params["a"]}, ef_residual=None,
                        step=state.step, seed=state.seed)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ckpt.CheckpointMismatchError, match="different model"):
         ckpt.restore(str(tmp_path), other)
+
+
+def test_checkpoint_fingerprint_catches_shape_and_dtype_drift(tmp_path):
+    """Same tree structure, different leaf shape/dtype -> loud mismatch (the
+    stale-/tmp-checkpoint footgun: blind resume into another model config)."""
+    state = _tiny_state()
+    ckpt.save(str(tmp_path), 1, state)
+    reshaped = TrainState(
+        params={"a": jnp.zeros((8, 4), jnp.float32), "b": state.params["b"]},
+        ef_residual=None, step=state.step, seed=state.seed)
+    with pytest.raises(ckpt.CheckpointMismatchError):
+        ckpt.restore(str(tmp_path), reshaped)
+    retyped = TrainState(
+        params={"a": state.params["a"].astype(jnp.bfloat16), "b": state.params["b"]},
+        ef_residual=None, step=state.step, seed=state.seed)
+    with pytest.raises(ckpt.CheckpointMismatchError):
+        ckpt.restore(str(tmp_path), retyped)
+    # matching state still round-trips, and the manifest carries the print
+    restored, manifest = ckpt.restore(str(tmp_path), state)
+    assert manifest["fingerprint"] == ckpt.tree_fingerprint(state)
+
+
+def test_loop_skips_stale_checkpoint_with_warning(tmp_path):
+    """train.loop must not blindly resume from a checkpoint another model
+    config wrote into the same dir: it warns loudly and starts fresh."""
+    from repro.train import loop as loop_lib
+    stale = _tiny_state()
+    ckpt.save(str(tmp_path), 5, stale)
+
+    fresh = TrainState(params={"w": jnp.zeros((3, 3), jnp.float32)},
+                       ef_residual=None, step=jnp.int32(0), seed=jnp.uint32(0))
+    calls = []
+
+    def fake_step(state, batch):
+        calls.append(int(state.step))
+        return TrainState(params=state.params, ef_residual=None,
+                          step=state.step + 1, seed=state.seed), {"loss": jnp.float32(0.0)}
+
+    logs = []
+    cfg = loop_lib.LoopConfig(total_steps=2, ckpt_dir=str(tmp_path),
+                              ckpt_every=0, log_every=1)
+    out, history = loop_lib.run(fake_step, fresh, lambda i: {}, cfg,
+                                log=logs.append)
+    assert calls == [0, 1], calls                      # started fresh, not at 5
+    assert any("WARNING" in line for line in logs), logs
+    assert int(out.step) == 2
+
+
+def test_loop_resumes_newest_compatible_past_stale_shadow(tmp_path):
+    """A stale high-step checkpoint must not shadow this run's own valid
+    checkpoints at lower steps: resume picks the newest COMPATIBLE one."""
+    from repro.train import loop as loop_lib
+    stale = _tiny_state()
+    ckpt.save(str(tmp_path), 500, stale)      # foreign config, highest step
+
+    own = TrainState(params={"w": jnp.ones((2, 2), jnp.float32)},
+                     ef_residual=None, step=jnp.int32(30), seed=jnp.uint32(0))
+    ckpt.save(str(tmp_path), 30, own)         # this run's real checkpoint
+
+    calls = []
+
+    def fake_step(state, batch):
+        calls.append(int(state.step))
+        return TrainState(params=state.params, ef_residual=None,
+                          step=state.step + 1, seed=state.seed), {"loss": jnp.float32(0.0)}
+
+    logs = []
+    like = TrainState(params={"w": jnp.zeros((2, 2), jnp.float32)},
+                      ef_residual=None, step=jnp.int32(0), seed=jnp.uint32(0))
+    cfg = loop_lib.LoopConfig(total_steps=32, ckpt_dir=str(tmp_path),
+                              ckpt_every=0, log_every=1)
+    out, _ = loop_lib.run(fake_step, like, lambda i: {}, cfg, log=logs.append)
+    assert calls == [30, 31], calls            # resumed at 30, not 0, not 500
+    assert any("skipping checkpoint step_00000500" in l for l in logs), logs
+    assert float(out.params["w"][0, 0]) == 1.0  # really loaded step-30 payload
 
 
 def test_checkpoint_atomic_no_tmp_left(tmp_path):

@@ -150,17 +150,42 @@ OTHER = "interpret" if jax.default_backend() != "tpu" else "pallas"
 
 @pytest.mark.parametrize("backend", ["jnp", OTHER])
 @pytest.mark.parametrize("dtype", DTYPES)
-def test_compress_leaf_wire_native(backend, dtype):
+@pytest.mark.parametrize("compressor", ["sparsign", "noisy_sign", "terngrad"])
+def test_compress_leaf_wire_native(backend, dtype, compressor):
     """compress_leaf(wire=packed) returns the same wire bytes as packing the
-    int8 message, on every backend (fused kernel vs two-pass reference)."""
+    int8 message, on every backend (fused kernel vs two-pass reference), for
+    every fused-kernel compressor — and the decode scale rides alongside."""
     wire = collectives.PackedVoteWire(axes=("data",), n_workers=4)
     g = jnp.asarray(np.random.RandomState(4).randn(7, 333), dtype)
-    msg_int8 = engine.compress_leaf(g, _cfg(), 9, 123, backend=backend)
-    msg_packed = engine.compress_leaf(g, _cfg(), 9, 123, backend=backend, wire=wire)
+    msg_int8 = engine.compress_leaf(g, _cfg(compressor), 9, 123, backend=backend)
+    msg_packed = engine.compress_leaf(g, _cfg(compressor), 9, 123, backend=backend, wire=wire)
     assert msg_int8.values.dtype == jnp.int8
     assert msg_packed.values.dtype == jnp.uint8
     view, _ = common.to_2d(msg_int8.values.reshape(-1))
     assert np.array_equal(np.asarray(msg_packed.values), np.asarray(pack2bit_ref(view)))
+    assert np.array_equal(np.asarray(msg_packed.scale), np.asarray(msg_int8.scale))
+
+
+@pytest.mark.parametrize("compressor,param", [("noisy_sign", 0.3), ("terngrad", None)])
+def test_new_fused_uplinks_no_int8_hbm_intermediate(compressor, param):
+    """Acceptance pin: noisy_sign and terngrad reach the packed wire through a
+    single-pass kernel — no int8 ternary tensor at the HBM level (the two-pass
+    chain necessarily has one)."""
+    from repro.core.compressors import get_spec
+    g = jnp.asarray(np.random.RandomState(6).randn(4096), jnp.float32)
+    spec = get_spec(compressor)
+    p = param if param is not None else float(jnp.max(jnp.abs(g)))
+    fused = common.int8_hbm_elems(
+        lambda x: spec.fused_pack_op(x, p, 7, interpret=True), g)
+    two_pass = common.int8_hbm_elems(
+        lambda x: pack2bit_op(spec.pallas_op(x, p, 7, interpret=True),
+                              interpret=True), g)
+    assert fused == 0, f"{compressor}: fused uplink materializes {fused} int8 elems"
+    assert two_pass >= g.size
+    # and the fused bytes == pack2bit(reference compressor) byte-for-byte
+    want_view, _ = common.to_2d(spec.values(g, p, 7, 0).reshape(-1))
+    got = spec.fused_pack_op(g, p, 7, interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(pack2bit_ref(want_view)))
 
 
 @pytest.mark.parametrize("backend", ["jnp", OTHER])
@@ -204,13 +229,14 @@ def _tiny_batch(vocab, b=2, s=8, seed=0):
     }
 
 
-def _one_step(model, params, batch, mesh, **cfg_kw):
+def _one_step(model, params, batch, mesh, comp=None, **cfg_kw):
     from repro.dist import compat
     from repro.train.state import LrSchedule, init_state
     from repro.train.step_simple import TrainStepConfig, build_train_step
-    comp = CompressionConfig(compressor="sparsign",
-                             budget=BudgetConfig(kind="fixed", value=2.0),
-                             server="majority_vote")
+    if comp is None:
+        comp = CompressionConfig(compressor="sparsign",
+                                 budget=BudgetConfig(kind="fixed", value=2.0),
+                                 server="majority_vote")
     scfg = TrainStepConfig(compression=comp, lr=LrSchedule(base=0.05),
                            worker_axes=("data",), donate=False, **cfg_kw)
     step = build_train_step(model, scfg, mesh)
@@ -240,6 +266,76 @@ def test_simple_step_wires_bitwise_equal_single_device():
     # (M=1: both ring collectives move zero bytes)
     assert float(m["wire_bytes_per_device"]) == 0.0
     assert float(m_ref["wire_bytes_per_device"]) == 0.0
+
+
+@pytest.mark.parametrize("compressor,server", [
+    ("noisy_sign", "majority_vote"),   # votes mode through a new fused kernel
+    ("terngrad", "mean"),              # scaled_votes: ternary votes + shared s_t
+])
+def test_simple_step_nonsparsign_wires_bitwise_equal(compressor, server):
+    """Non-sparsign ternary compressors ride all wires bitwise-identically —
+    the spec-negotiated wire (votes / scaled_votes) must not change the round."""
+    from repro.launch.mesh import make_host_mesh
+    model = _tiny_model()
+    mesh = make_host_mesh(1, 1)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _tiny_batch(model.cfg.vocab_size)
+    comp = CompressionConfig(compressor=compressor,
+                             budget=BudgetConfig(kind="fixed", value=0.5),
+                             server=server)
+    ref, _ = _one_step(model, params, batch, mesh, comp=comp, vote_impl="psum")
+    moved = any(not np.array_equal(a, np.asarray(b)) for a, b in zip(
+        jax.tree_util.tree_leaves(ref), jax.tree_util.tree_leaves(params)))
+    assert moved, "the step must actually update params"
+    for backend in ("jnp", OTHER):
+        got, _ = _one_step(model, params, batch, mesh, comp=comp,
+                           vote_impl="allgather_packed", backend=backend)
+        for (ka, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(ref)[0],
+                jax.tree_util.tree_flatten_with_path(got)[0]):
+            assert np.array_equal(a, b), (compressor, backend, jax.tree_util.keystr(ka))
+
+
+def test_per_leaf_quorum_tree_freezes_selected_leaves():
+    """quorum as a pytree prefix: an unreachable quorum on one subtree freezes
+    exactly that subtree; the rest matches the scalar-quorum run bitwise."""
+    from repro.launch.mesh import make_host_mesh
+    model = _tiny_model()
+    mesh = make_host_mesh(1, 1)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _tiny_batch(model.cfg.vocab_size)
+    shapes = model.param_shapes()
+    frozen_key = "embed"
+    qtree = {k: (10**6 if k == frozen_key else 1) for k in shapes}
+    base, _ = _one_step(model, params, batch, mesh, quorum=1)
+    got, _ = _one_step(model, params, batch, mesh, quorum=qtree)
+    p0 = jax.tree_util.tree_map(np.asarray, params)
+    for k in shapes:
+        for a, b, c in zip(jax.tree_util.tree_leaves(got[k]),
+                           jax.tree_util.tree_leaves(base[k]),
+                           jax.tree_util.tree_leaves(p0[k])):
+            if k == frozen_key:
+                assert np.array_equal(a, c), f"{k} must be frozen by its quorum"
+            else:
+                assert np.array_equal(a, b), f"{k} must match the scalar-quorum run"
+    # malformed quorum trees fail at build time, before tracing
+    from repro.train.state import LrSchedule
+    from repro.train.step_simple import TrainStepConfig, build_train_step
+    comp = CompressionConfig(compressor="sparsign",
+                             budget=BudgetConfig(kind="fixed", value=2.0),
+                             server="majority_vote")
+    with pytest.raises(ValueError, match="prefix"):
+        build_train_step(model, TrainStepConfig(
+            compression=comp, lr=LrSchedule(base=0.05), worker_axes=("data",),
+            quorum={"embed": 2}), mesh)
+    # a quorum the wire would silently ignore is a build-time error too
+    mean_comp = CompressionConfig(compressor="terngrad",
+                                  budget=BudgetConfig(kind="fixed", value=1.0),
+                                  server="mean")
+    with pytest.raises(ValueError, match="silently ignored"):
+        build_train_step(model, TrainStepConfig(
+            compression=mean_comp, lr=LrSchedule(base=0.05),
+            worker_axes=("data",), quorum=5), mesh)
 
 
 def test_quorum_deadband_blocks_minority_updates():
