@@ -30,6 +30,8 @@ from repro.kernels.ef_server.ops import ef_server_op
 from repro.kernels.ef_server.ref import ef_scale, ef_server_ref
 from repro.kernels.pack2bit.ops import pack2bit_op
 from repro.kernels.pack2bit.ref import pack2bit_ref
+from repro.kernels.pack8.ops import qsgd8_op, qsgd8_pack8_op
+from repro.kernels.pack8.ref import qsgd8_levels_ref
 from repro.kernels.sparsign.ops import sparsign_op
 from repro.kernels.sparsign.ref import sparsign_ref
 from repro.kernels.sparsign_pack2bit.ops import sparsign_pack2bit_op
@@ -76,6 +78,13 @@ BYTES_PER_COORD = {
     ("uplink_fused_terngrad", "pallas"): 4 + 0.25,
     ("uplink_two_pass_noisy_sign", "pallas"): (4 + 1) + (1 + 0.25),
     ("uplink_two_pass_terngrad", "pallas"): (4 + 1) + (1 + 0.25),
+    # the 8-bit QSGD (pack8) uplink: fused reads the f32 gradient and writes
+    # the int8 sign*level wire payload in ONE pass (1 B/coord on the wire);
+    # the decoded-psum chain it replaces quantizes, re-reads the levels and
+    # writes the 4 B/coord fp32 psum payload
+    ("uplink_fused_qsgd8", "pallas"): 4 + 1,
+    ("uplink_decoded_psum_qsgd8", "pallas"): (4 + 1) + (1 + 4),
+    ("uplink_decoded_psum_qsgd8", "jnp"): (4 + 4 + 4 + 1) + (1 + 4),
 }
 
 
@@ -136,6 +145,23 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
              lambda rule=rule, param=param: jax.block_until_ready(
                  pack2bit_op(ternary_compress_op(g, param, 7, rule=rule)))),
         ]
+    # the 8-bit QSGD (pack8) uplink vs the decoded-psum chain it replaces
+    # (1 B/coord wire payload vs 4 B/coord fp32); seed passed as uint32 like
+    # the engine supplies it, so the no-int32 jaxpr pin below stays exact
+    s8 = max(float(np.linalg.norm(np.asarray(g))), 1e-12) / 127.0
+    seed8 = jnp.uint32(7)
+    qsgd8_decoded_jnp = jax.jit(
+        lambda x: qsgd8_levels_ref(x, s8, seed8).astype(jnp.float32)
+        * jnp.float32(s8))
+    cases += [
+        ("uplink_fused_qsgd8", "pallas",
+         lambda: jax.block_until_ready(qsgd8_pack8_op(g, s8, seed8))),
+        ("uplink_decoded_psum_qsgd8", "pallas",
+         lambda: jax.block_until_ready(
+             qsgd8_op(g, s8, seed8).astype(jnp.float32) * jnp.float32(s8))),
+        ("uplink_decoded_psum_qsgd8", "jnp",
+         lambda: jax.block_until_ready(qsgd8_decoded_jnp(g))),
+    ]
     # structural guarantee behind the fused uplinks' byte count: no int8
     # ternary tensor at the HBM level (the two-pass chains have one of >= n),
     # measured per backend on the exact chains timed above
@@ -158,6 +184,18 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
         assert t_i8 >= n
         int8_hbm[(f"uplink_fused_{label}", "pallas")] = 0
         int8_hbm[(f"uplink_two_pass_{label}", "pallas")] = t_i8
+    # pack8 structural pin: the fused qsgd8 uplink has no int32 level tensor
+    # at the HBM level (<= 1 allows the to_2d pad's scatter-start index); the
+    # decoded chain necessarily re-reads its int8 levels for the f32 decode
+    f8_i32 = kcommon.int32_hbm_elems(lambda x: qsgd8_pack8_op(x, s8, seed8), g)
+    assert f8_i32 <= 1, (
+        f"fused qsgd8 uplink materializes {f8_i32} int32 elems in HBM")
+    d8_i8 = kcommon.int8_hbm_elems(
+        lambda x: qsgd8_op(x, s8, seed8).astype(jnp.float32)
+        * jnp.float32(s8), g)
+    assert d8_i8 >= n
+    int32_hbm = {("uplink_fused_qsgd8", "pallas"): f8_i32}
+    int8_hbm[("uplink_decoded_psum_qsgd8", "pallas")] = d8_i8
 
     for kernel, backend, fn in cases:
         _, dt = timed(fn)
@@ -173,6 +211,8 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
         }
         if (kernel, backend) in int8_hbm:
             rec["int8_hbm_intermediate_elems"] = int8_hbm[(kernel, backend)]
+        if (kernel, backend) in int32_hbm:
+            rec["int32_hbm_intermediate_elems"] = int32_hbm[(kernel, backend)]
         records.append(rec)
         csv_row([kernel, name, label, rec["us_per_call"],
                  rec["hbm_bytes_per_coord_tpu"]])

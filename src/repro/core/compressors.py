@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import prng
+from repro.kernels.pack8.ops import qsgd8_op, qsgd8_pack8_op
+from repro.kernels.pack8.ref import QSGD8_LEVELS, qsgd8_levels_ref
 from repro.kernels.sparsign.ops import sparsign_op
 from repro.kernels.sparsign_pack2bit.ops import sparsign_pack2bit_op
 from repro.kernels.ternary.ops import (noisy_sign_op, noisy_sign_pack2bit_op,
@@ -184,19 +186,40 @@ def terngrad(g, *, budget=None, seed=0, counter_base=0, shared_max: Optional[jnp
 
 
 def qsgd(g, *, s: int, budget=None, seed=0, counter_base=0) -> CompressedGrad:
-    """Full QSGD with s quantization levels (Appendix B Eq. 42-43). Used by the
-    FedCom baseline (8-bit => s = 2**8 - 1 levels). Payload is int8-like small ints
-    times scale/s; we keep values as int32 level*sign for exact bit accounting.
-    ``budget`` is accepted (and ignored) for registry-signature compatibility —
-    the level count s, not a magnitude budget, sets this family's rate."""
+    """Full QSGD with s quantization levels (Appendix B Eq. 42-43), any s.
+    Payload is int32 level*sign for exact bit accounting at arbitrary s; the
+    registered 8-bit baseline is the dedicated ``qsgd8`` below (whose levels
+    are clipped into the int8 wire domain). ``budget`` is accepted (and
+    ignored) for registry-signature compatibility — the level count s, not a
+    magnitude budget, sets this family's rate."""
     scale = _scale_qsgd(g, s)
     vals = _qsgd_level_values(g, scale, seed, counter_base)
+    return CompressedGrad(values=vals, scale=scale.astype(jnp.float32))
+
+
+def qsgd8(g, *, budget=None, seed=0, counter_base=0) -> CompressedGrad:
+    """FedCom-style 8-bit QSGD: 1 sign bit + 7 level bits, s = 2**7 - 1 = 127.
+
+    The signed stochastic level rides the ``pack8`` wire losslessly as one
+    int8 byte per coordinate (levels clip at 127 — reachable only by a float
+    ulp when a single coordinate carries the whole norm, where an unclipped
+    128 would wrap to -128 on the wire). The level rule lives in
+    ``kernels.pack8.ref.qsgd8_levels_ref``, shared bitwise by this shim, the
+    engine's jnp path and the fused Pallas kernel."""
+    scale = _scale_qsgd(g, QSGD8_LEVELS)
+    vals = qsgd8_levels_ref(g, scale, seed, counter_base)
     return CompressedGrad(values=vals, scale=scale.astype(jnp.float32))
 
 
 def identity(g, *, budget=None, seed=None, counter_base=0) -> CompressedGrad:
     """Uncompressed baseline (D-SGD)."""
     return CompressedGrad(values=g, scale=jnp.float32(1.0))
+
+
+def qsgd8_scale(g: jnp.ndarray) -> jnp.ndarray:
+    """The qsgd8 decode scale max(||g||_2, eps) / 127 — public alias for
+    callers quantizing outside the registry (e.g. the 8-bit downlink)."""
+    return _scale_qsgd(g, QSGD8_LEVELS)
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +241,14 @@ SCALE_PROTOCOLS = ("none", "local_norm", "shared_max")
 #:   dequant     — non-ternary payload; decoded floats, mean server only
 SERVER_DECODES = ("sign", "scaled_sign", "dequant")
 
+#: densest lossless wire encoding of one worker message — what the message
+#: payload looks like on the byte-exchange wires (``engine.wire_mode`` and the
+#: ``VoteWire`` negotiation key on this, with no name branching):
+#:   pack2 — ternary symbols, 2-bit packed canonical view (0.25 B/coord)
+#:   pack8 — int8 sign*level canonical view + one f32 scale (1 B/coord + 4 B)
+#:   float — no sub-float encoding; decoded fp32 psum only (4 B/coord)
+WIRE_FORMATS = ("pack2", "pack8", "float")
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressorSpec:
@@ -234,16 +265,21 @@ class CompressorSpec:
     scale_protocol: str = "none"
     local_scale: Optional[Callable] = None      # g -> f32 scalar (protocol != none)
     pallas_op: Optional[Callable] = None        # (g, param, seed, base, *, interpret=)
-    fused_pack_op: Optional[Callable] = None    # fused ->pack2bit variant, or None
+    fused_pack_op: Optional[Callable] = None    # fused ->wire-payload variant, or None
     server_decode: str = "sign"
     chunkable: bool = False                     # jnp path may stream in chunks
+    wire_format: str = "pack2"                  # pack2 | pack8 | float (WIRE_FORMATS)
 
     def __post_init__(self):
         assert self.scale_protocol in SCALE_PROTOCOLS, self.scale_protocol
         assert self.server_decode in SERVER_DECODES, self.server_decode
+        assert self.wire_format in WIRE_FORMATS, self.wire_format
         assert (self.scale_protocol == "none") == (self.local_scale is None), self.name
+        # ternary <=> the 2-bit codebook; pack8/float are the non-ternary rows
+        assert (self.wire_format == "pack2") == self.is_ternary, self.name
         if self.fused_pack_op is not None:
-            assert self.is_ternary, f"{self.name}: only ternary wires pack to 2 bits"
+            assert self.wire_format != "float", \
+                f"{self.name}: a fused pack op needs a packed wire format"
 
     @property
     def scale_shared(self) -> bool:
@@ -254,7 +290,11 @@ class CompressorSpec:
     def resolve_scale(self, g, shared_linf=None) -> Optional[jnp.ndarray]:
         """The decode-time scale for one leaf, or None for scale-free specs.
         ``shared_linf`` (the psum-max'd worker L-inf) feeds the shared_max
-        protocol; absent, it degrades to the local norm (single-worker)."""
+        protocol; absent, it degrades to the local norm — which is only the
+        single-worker semantics. ``engine.compress_leaf`` refuses that degrade
+        inside a mapped (multi-worker) context, where it would silently
+        reintroduce per-worker TernGrad drift; the fallback here serves the
+        public single-worker API and the tests only."""
         if self.scale_protocol == "none":
             return None
         if self.scale_protocol == "shared_max" and shared_linf is not None:
@@ -302,15 +342,17 @@ SPECS: dict[str, CompressorSpec] = {spec.name: spec for spec in (
         fused_pack_op=stochastic_ternary_pack2bit_op,
         server_decode="scaled_sign", chunkable=True),
     CompressorSpec(
-        # FedCom 8-bit baseline: 2**8 - 1 levels
-        name="qsgd8", api=partial(qsgd, s=255), values=_qsgd_level_values,
+        # FedCom 8-bit baseline: 1 sign bit + 7 level bits (s = 127), so one
+        # worker message is exactly 1 B/coord on the pack8 wire + one f32 scale
+        name="qsgd8", api=qsgd8, values=qsgd8_levels_ref,
         is_ternary=False, scale_protocol="local_norm",
-        local_scale=partial(_scale_qsgd, s=255),
-        server_decode="dequant", chunkable=True),
+        local_scale=partial(_scale_qsgd, s=QSGD8_LEVELS),
+        pallas_op=qsgd8_op, fused_pack_op=qsgd8_pack8_op,
+        server_decode="dequant", chunkable=True, wire_format="pack8"),
     CompressorSpec(
         name="identity", api=identity, values=_identity_values,
         is_ternary=False, scale_protocol="none",
-        server_decode="dequant"),
+        server_decode="dequant", wire_format="float"),
 )}
 
 

@@ -102,6 +102,9 @@ def baseline_bits_per_round(d: int, algorithm: str, *, nnz: float | None = None)
         return ternary_stream_bits(d, int(round(nnz)), coder="golomb") + 32.0
     if algorithm == "identity":
         return 32.0 * d
-    if algorithm.startswith("qsgd"):
-        return 8.0 * d  # 8-bit QSGD as in FedCom comparison
+    if algorithm == "qsgd8":
+        # FedCom 8-bit QSGD on the pack8 wire: 1 sign bit + 7 level bits per
+        # coordinate, plus the one 32-bit decode scale per message — the same
+        # accounting the VoteWire ledger (wire_bytes + scalar_bytes) reports
+        return 8.0 * d + 32.0
     raise ValueError(algorithm)

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from repro.core.budgets import BudgetConfig, resolve_budget
 from repro.core.compressors import (CompressedGrad, CompressorSpec,
                                     chunked_values, get_spec)
+from repro.dist import compat
 from repro.kernels import common as kcommon
 from repro.kernels.ef_server.ops import ef_server_op
 from repro.kernels.ef_server.ref import ef_server_ref
@@ -66,7 +67,7 @@ VOTE_SERVERS = ("majority_vote", "scaled_sign_ef")
 SERVER_RULES = ("majority_vote", "scaled_sign_ef", "mean")
 
 # how a compressor's messages ride the worker-axis wire (see wire_mode)
-WIRE_MODES = ("votes", "scaled_votes", "decoded")
+WIRE_MODES = ("votes", "scaled_votes", "pack8", "decoded")
 
 
 def resolve_backend(backend: Optional[str] = None) -> str:
@@ -88,9 +89,9 @@ def needs_server_ef(server: str) -> bool:
     return server == "scaled_sign_ef"
 
 
-def wire_mode(cfg: "CompressionConfig") -> str:
-    """How this (compressor, server) pair's uplink rides the worker wire —
-    a pure CompressorSpec table lookup:
+def wire_mode(cfg: "CompressionConfig", vote_impl: Optional[str] = None) -> str:
+    """How this (compressor, server, vote_impl) triple's uplink rides the
+    worker wire — a pure CompressorSpec table lookup on ``spec.wire_format``:
 
       votes        — ternary symbols on the integer/packed vote wire, consumed
                      raw by a vote server (majority_vote / scaled_sign_ef).
@@ -98,12 +99,20 @@ def wire_mode(cfg: "CompressionConfig") -> str:
                      shared decode scale; the mean server multiplies the vote
                      mean by it. Requires a worker-invariant scale (protocol
                      none or shared_max).
+      pack8        — int8 sign*level payload (1 B/coord) plus each worker's
+                     f32 decode scale on the all-gather wire; the exchange
+                     dequantizes into the mean server's float sum. Needs the
+                     gather wire (``vote_impl='allgather_packed'``) — a psum
+                     cannot reduce differently-scaled levels on the fabric,
+                     so the psum/hier impls fall back to the decoded wire.
       decoded      — decoded float32 messages, psum + mean server (per-worker
-                     scales and non-ternary payloads).
+                     scales on ternary wires, and the float wire format).
     """
     spec = get_spec(cfg.compressor)
-    if not spec.is_ternary:
+    if spec.wire_format == "float":
         return "decoded"
+    if spec.wire_format == "pack8":
+        return "pack8" if vote_impl == "allgather_packed" else "decoded"
     if is_vote_server(cfg):
         return "votes"
     return "scaled_votes" if spec.scale_shared else "decoded"
@@ -200,25 +209,45 @@ def compress_leaf(
     scale protocol (TernGrad's magnitude sharing).
 
     ``wire`` (a ``repro.dist.collectives.VoteWire``, or None) selects the
-    message's *wire-native* format. When the wire wants the 2-bit packed
-    format, ``values`` is the packed uint8 canonical view — produced in one
-    fused pass (gradient -> wire bytes, no int8 ternary tensor in HBM) when
-    the spec registers a ``fused_pack_op``, else compressed then packed. The
-    bytes are identical either way; only the number of HBM round-trips
+    message's *wire-native* format (``wire.native_format``, validated against
+    the spec's declared ``wire_format``). When the wire wants a packed format
+    — 2-bit codes for ternary compressors, int8 sign*level for pack8 —
+    ``values`` is the packed canonical view, produced in one fused pass
+    (gradient -> wire bytes, no int8 ternary / int32 level tensor in HBM)
+    when the spec registers a ``fused_pack_op``, else compressed then packed.
+    The bytes are identical either way; only the number of HBM round-trips
     differs. Scale-carrying compressors return their decode scale in
     ``msg.scale`` alongside the (packed) payload.
     """
     backend = resolve_backend(backend)
     spec: CompressorSpec = get_spec(cfg.compressor)
+    if shared_linf is None and needs_shared_linf(cfg):
+        mapped = compat.manual_axis_names()
+        if mapped:
+            raise ValueError(
+                f"compressor {cfg.compressor!r} needs the magnitude-shared "
+                f"worker L-inf (scale protocol "
+                f"{spec.scale_protocol!r} / budget kind {cfg.budget.kind!r}) "
+                f"but compress_leaf was called inside a mapped context (axes "
+                f"{sorted(mapped)}) without shared_linf=. Degrading to the "
+                f"per-worker local norm here would silently give every worker "
+                f"its own TernGrad normalizer — the exact drift the sharing "
+                f"protocol exists to kill. Reduce "
+                f"collectives.worker_shared_linf over the worker axes and "
+                f"pass it; the local-norm fallback is only valid for the "
+                f"single-worker public API outside a mesh.")
     budget = resolve_budget(cfg.budget, g, shared_linf=shared_linf)
     scale = spec.resolve_scale(g, shared_linf=shared_linf)
     param = budget if scale is None else scale
     msg_scale = jnp.float32(1.0) if scale is None else scale.astype(jnp.float32)
-    want_packed = wire is not None and wire.wants_packed
-    if want_packed and not spec.is_ternary:
+    wire_fmt = wire.native_format if wire is not None else None
+    want_packed = wire_fmt in ("pack2", "pack8")
+    if want_packed and spec.wire_format != wire_fmt:
         raise ValueError(
-            f"the 2-bit packed vote wire carries ternary messages only; "
-            f"compressor {cfg.compressor!r} is not ternary")
+            f"the {wire_fmt!r} wire carries "
+            f"{'ternary' if wire_fmt == 'pack2' else 'int8 sign*level'} "
+            f"messages only; compressor {cfg.compressor!r} declares wire "
+            f"format {spec.wire_format!r}")
     interpret = backend == "interpret"
     if backend != "jnp" and spec.pallas_op is not None:
         if want_packed and spec.fused_pack_op is not None:
@@ -233,6 +262,10 @@ def compress_leaf(
     if want_packed:
         # two-pass fallback (specs without a fused kernel, and the jnp
         # reference backend): same wire bytes, one extra round-trip
+        if wire_fmt == "pack8":
+            # the pack8 payload IS the canonical int8 view of the levels
+            view, _ = kcommon.to_2d(vals.reshape(-1))
+            return CompressedGrad(values=view, scale=msg_scale)
         if backend == "jnp":
             view, _ = kcommon.to_2d(vals.reshape(-1))
             packed = pack2bit_ref(view)

@@ -20,17 +20,25 @@ All three return the same per-coordinate vote total; the equivalence is
 pinned by tests/mdev/check_collectives.py on a forced 8-device host mesh and
 by tests/mdev/check_wires.py at the train-step level.
 
-``make_vote_wire(impl, axes, mesh)`` builds the wire object at step-build
-time. A wire knows its *native message format* (``wants_packed``: int8 ternary
-tensor vs 2-bit packed canonical view — what ``engine.compress_leaf(wire=...)``
+Non-ternary 8-bit payloads (qsgd8's sign*level stream, wire format ``pack8``)
+get their own gather-wire twin, ``vote_allgather_packed8``/``Pack8Wire``:
+1 B/coord plus each worker's 4-B decode scale, dequantized into the mean
+server's float sum during the fused decode — the honest FedCom-baseline wire
+(vs 4 B/coord decoded psum). There is no psum variant: a fabric reduction
+cannot sum levels quantized against different norms.
+
+``make_vote_wire(impl, axes, mesh, wire_format=)`` builds the wire object at
+step-build time. A wire knows its *native message format* (``native_format``:
+``int8`` leaf-shaped ternary votes, ``pack2`` 2-bit canonical view, or
+``pack8`` int8 level canonical view — what ``engine.compress_leaf(wire=...)``
 emits), how to mask/count/exchange messages in that format, and its
 per-round per-device wire-byte ledger (``wire_bytes``), computed from the real
 buffer sizes (including canonical-view padding), not an idealized model.
 
-Scale-carrying ternary compressors (the ``scaled_votes`` wire mode) ship one
-shared f32 decode scale per leaf next to the payload: ``worker_shared_linf``
-is the magnitude-sharing all-reduce(max) that produces it, and
-``VoteWire.scalar_bytes`` its ledger entry.
+Scale-carrying compressors ship f32 decode scales next to the payload: one
+shared scalar for the ``scaled_votes`` mode (``worker_shared_linf`` is the
+magnitude-sharing all-reduce(max) that produces it), per-worker scalars on
+the pack8 wire; ``VoteWire.scalar_bytes`` is the ledger entry either way.
 """
 
 from __future__ import annotations
@@ -83,9 +91,15 @@ def packed_nbytes(n_coords: int) -> int:
     canonical (rows, LANES) view is padded to the sublane tile, and the padded
     rows ship. This is the *real* per-worker payload (vs the idealized d/4)."""
     from repro.kernels import common as kcommon
-    rows = -(-n_coords // kcommon.LANES)
-    rows = -(-rows // kcommon.SUBLANE_PAD) * kcommon.SUBLANE_PAD
-    return rows * (kcommon.LANES // 4)
+    return kcommon.canonical_rows(n_coords) * (kcommon.LANES // 4)
+
+
+def packed8_nbytes(n_coords: int) -> int:
+    """Actual bytes of the pack8 wire for an n-coordinate leaf: the canonical
+    (rows, LANES) int8 view, padded rows included — 1 B/coord at aligned
+    sizes (vs the idealized d)."""
+    from repro.kernels import common as kcommon
+    return kcommon.canonical_rows(n_coords) * kcommon.LANES
 
 
 def vote_psum(votes: jnp.ndarray, axes: Sequence[str], n_workers: int) -> jnp.ndarray:
@@ -151,6 +165,61 @@ def _packed_decode_sum(gathered: jnp.ndarray, size: int, shape,
     return unpack2bit_sum_op(gathered, size, shape, interpret=interpret)
 
 
+def decoded_exchange(values: jnp.ndarray, scale, mask, axes: Sequence[str],
+                     *, is_ternary: bool):
+    """The ``decoded`` wire mode, shared verbatim by both train modes: decode
+    one worker's message locally (values * scale), zero non-participants, and
+    fp32-psum over the worker axes. Returns ``(float sum, this worker's
+    masked nnz)`` — ternary messages count |symbols|, float payloads count
+    nonzero decoded coordinates. One definition keeps the cross-mode bitwise
+    pin (check_wires.py) from depending on two hand-synchronized copies."""
+    dec = values.astype(jnp.float32) * scale
+    dec = jnp.where(mask, dec, 0.0)
+    if is_ternary:
+        nnz = jnp.sum(jnp.abs(
+            jnp.where(mask, values, jnp.zeros((), values.dtype))).astype(jnp.float32))
+    else:
+        nnz = jnp.sum((dec != 0.0).astype(jnp.float32))
+    return jax.lax.psum(dec, tuple(axes)), nnz
+
+
+def decoded_wire_bytes(n_coords: int, n_workers: int) -> float:
+    """Per-device byte ledger of the decoded fp32 psum (the float wire the
+    ``decoded`` mode rides, outside any VoteWire): one ring all-reduce of
+    4 B/coord."""
+    return 2.0 * (n_workers - 1) / n_workers * 4.0 * n_coords
+
+
+def vote_allgather_packed8(payload: jnp.ndarray, scale, axes: Sequence[str],
+                           size: int, shape, *,
+                           backend: Optional[str] = None) -> jnp.ndarray:
+    """All-gather of int8 sign*level payloads + per-worker f32 scales, fused
+    dequantize-sum — the pack8 (8-bit QSGD) wire exchange.
+
+    Wire bytes = M * (ceil'd d + 4) per device; returns the float32 decoded
+    sum ``sum_m scale_m * levels_m`` of shape ``shape`` — exactly what the
+    mean server consumes. Workers are accumulated strictly in worker-index
+    order (the gather order), which is also how the decoded-psum wire
+    associates its float adds, so the two wires agree bitwise.
+
+    ``backend='jnp'`` skips the gather entirely: each worker dequantizes its
+    own payload and the sum IS a float psum — the reference program whose
+    association the kernel path reproduces. Same values, fp32 fabric bytes;
+    the kernel backends run the honest 1 B/coord gather.
+    """
+    from repro.kernels import common as kcommon
+    from repro.kernels.pack8.ops import unpack8_sum_op
+
+    scale = jnp.asarray(scale, jnp.float32)
+    if backend == "jnp":
+        dec = kcommon.from_2d(payload, size, shape).astype(jnp.float32) * scale
+        return jax.lax.psum(dec, tuple(axes))
+    gathered = jax.lax.all_gather(payload, tuple(axes), axis=0, tiled=False)
+    scales = jax.lax.all_gather(scale, tuple(axes), axis=0, tiled=False)
+    interpret = (backend == "interpret") if backend is not None else None
+    return unpack8_sum_op(gathered, scales, size, shape, interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # The wire abstraction
 # ---------------------------------------------------------------------------
@@ -169,9 +238,16 @@ class VoteWire:
     n_workers: int
 
     name = "psum"
-    #: native uplink message format: False -> int8 ternary tensor (leaf shape),
-    #: True -> 2-bit packed uint8 canonical view (rows, LANES//4)
-    wants_packed = False
+    #: native uplink message format ("int8": leaf-shaped int8 ternary votes,
+    #: "pack2": 2-bit packed uint8 canonical view, "pack8": int8 sign*level
+    #: canonical view); ``engine.compress_leaf(wire=...)`` emits it and
+    #: validates it against the CompressorSpec's declared wire_format
+    native_format = "int8"
+
+    @property
+    def wants_packed(self) -> bool:
+        """Does this wire speak a packed canonical view (vs leaf-shaped votes)?"""
+        return self.native_format != "int8"
 
     def mask_message(self, values: jnp.ndarray, mask) -> jnp.ndarray:
         """Zero a non-participating worker's message, in wire-native format
@@ -182,8 +258,17 @@ class VoteWire:
         """Number of nonzero votes in one wire-native message (f32 scalar)."""
         return jnp.sum(jnp.abs(values).astype(jnp.float32))
 
-    def exchange(self, values: jnp.ndarray, size: int, shape) -> jnp.ndarray:
-        """Wire-native message -> integer vote sum of shape ``shape``."""
+    def exchange(self, values: jnp.ndarray, size: int, shape, *,
+                 scale=None) -> jnp.ndarray:
+        """Wire-native message -> integer vote sum of shape ``shape``.
+
+        ``scale`` is only meaningful on the pack8 wire (each worker's decode
+        scale rides the gather); the integer vote wires reject it loudly —
+        a shared scale stays OUTSIDE the exchange (``scaled_votes`` decode)."""
+        if scale is not None:
+            raise ValueError(
+                f"the {self.name!r} vote wire exchanges raw integer votes; "
+                f"a decode scale inside the exchange is a pack8-wire concept")
         return vote_psum(values, self.axes, self.n_workers)
 
     def wire_bytes(self, n_coords: int) -> float:
@@ -194,9 +279,10 @@ class VoteWire:
         return 2.0 * (m - 1) / m * payload
 
     def scalar_bytes(self) -> float:
-        """Ledger for one shared f32 scalar riding alongside a leaf's payload —
-        the magnitude-shared scale (``worker_shared_linf``) of scale-carrying
-        ternary compressors. One ring all-reduce of 4 bytes."""
+        """Ledger for the f32 decode scale(s) riding alongside a leaf's
+        payload: one ring all-reduce of 4 bytes (the magnitude-shared scale of
+        ``worker_shared_linf``). The pack8 wire overrides this with its
+        per-worker scale gather."""
         m = self.n_workers
         return 2.0 * (m - 1) / m * 4.0
 
@@ -211,14 +297,21 @@ class HierVoteWire(VoteWire):
 
     name = "hier"
 
-    def exchange(self, values, size, shape):
+    def exchange(self, values, size, shape, *, scale=None):
+        if scale is not None:
+            raise ValueError(
+                "the 'hier' vote wire exchanges raw integer votes; a decode "
+                "scale inside the exchange is a pack8-wire concept")
         return vote_psum_hier(values, self.axes[1], self.axes[0],
                               self.inner_size, self.outer_size)
 
     def wire_bytes(self, n_coords):
+        # both ring terms share one (symmetric) formula — make_vote_wire
+        # validates the axis sizes >= 1 at build time, so neither denominator
+        # needs a zero guard
         ni, no = self.inner_size, self.outer_size
         inner = 2.0 * (ni - 1) / ni * n_coords * jnp.dtype(_sum_dtype(ni)).itemsize
-        outer = 2.0 * (no - 1) / max(no, 1) * n_coords * jnp.dtype(_sum_dtype(ni * no)).itemsize
+        outer = 2.0 * (no - 1) / no * n_coords * jnp.dtype(_sum_dtype(ni * no)).itemsize
         return inner + outer
 
 
@@ -231,7 +324,7 @@ class PackedVoteWire(VoteWire):
     backend: Optional[str] = None
 
     name = "allgather_packed"
-    wants_packed = True
+    native_format = "pack2"
 
     def message_nnz(self, values):
         # count nonzero 2-bit codes straight off the bytes: codes are {0,1,2},
@@ -240,7 +333,11 @@ class PackedVoteWire(VoteWire):
         cnt = ((nz & 1) + ((nz >> 2) & 1) + ((nz >> 4) & 1) + ((nz >> 6) & 1))
         return jnp.sum(cnt.astype(jnp.float32))
 
-    def exchange(self, values, size, shape):
+    def exchange(self, values, size, shape, *, scale=None):
+        if scale is not None:
+            raise ValueError(
+                "the 2-bit packed vote wire exchanges raw ternary votes; a "
+                "decode scale inside the exchange is a pack8-wire concept")
         gathered = jax.lax.all_gather(values, self.axes, axis=0, tiled=False)
         total = _packed_decode_sum(gathered, size, shape, backend=self.backend)
         return total.astype(_sum_dtype(self.n_workers))
@@ -251,14 +348,57 @@ class PackedVoteWire(VoteWire):
         return float((self.n_workers - 1) * packed_nbytes(n_coords))
 
 
+@dataclasses.dataclass(frozen=True)
+class Pack8Wire(VoteWire):
+    """All-gather of int8 sign*level payloads (the pack8 wire format) + fused
+    dequantize-sum — the non-ternary 8-bit twin of ``PackedVoteWire``. The
+    message IS the canonical (rows, LANES) int8 view of the signed levels,
+    produced in one pass by the fused qsgd8_pack8 kernel on the kernel
+    backends; each worker's f32 decode scale rides the gather next to it and
+    the exchange returns the float32 decoded sum the mean server consumes."""
+
+    backend: Optional[str] = None
+
+    name = "allgather_packed8"
+    native_format = "pack8"
+
+    def message_nnz(self, values):
+        # nonzero LEVELS, not their magnitudes: |level| would overweight
+        # large coordinates in the nnz_frac metric
+        return jnp.sum((values != 0).astype(jnp.float32))
+
+    def exchange(self, values, size, shape, *, scale=None):
+        if scale is None:
+            raise ValueError(
+                "the pack8 wire dequantizes during the exchange and needs "
+                "this worker's decode scale (CompressedGrad.scale)")
+        return vote_allgather_packed8(values, scale, self.axes, size, shape,
+                                      backend=self.backend)
+
+    def wire_bytes(self, n_coords):
+        # ring all-gather of the (padded) int8 payload to M-1 peers
+        return float((self.n_workers - 1) * packed8_nbytes(n_coords))
+
+    def scalar_bytes(self):
+        # per-WORKER decode scales ride the same ring all-gather: M-1
+        # incoming 4-B scalars per device (vs the all-reduced shared scalar
+        # of the scaled_votes mode)
+        return float((self.n_workers - 1) * 4.0)
+
+
 def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
-                   backend: Optional[str] = None) -> VoteWire:
+                   backend: Optional[str] = None,
+                   wire_format: str = "pack2") -> VoteWire:
     """Build the wire for ``impl`` over the worker ``axes`` at step-build time.
 
     Axis sizes come from ``mesh.shape`` when a mesh is given (the builders'
     path — errors surface before tracing), else from the ambient axis env
-    (valid inside shard_map). ``backend`` steers the packed wire's decode-sum
-    dispatch exactly like the engine's kernel backends.
+    (valid inside shard_map). ``backend`` steers the packed wires' decode-sum
+    dispatch exactly like the engine's kernel backends. ``wire_format`` is the
+    compressor's declared payload format (``CompressorSpec.wire_format``):
+    ``pack2`` selects the ternary wires, ``pack8`` the 8-bit level gather
+    (``allgather_packed`` impl only — levels quantized against per-worker
+    norms cannot be reduced on the fabric).
     """
     axes = tuple(axes)
     if impl not in VOTE_IMPLS:
@@ -269,11 +409,29 @@ def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
             f"— e.g. ('pod', 'data') — got {axes!r}. Use vote_impl='psum' "
             f"for a flat worker domain; silently substituting the flat wire "
             f"here would misreport the hierarchical byte ledger.")
+    if wire_format not in ("pack2", "pack8"):
+        raise ValueError(
+            f"unknown wire payload format {wire_format!r}; the vote wires "
+            f"speak 'pack2' (ternary) or 'pack8' (8-bit levels) — the float "
+            f"format rides the decoded psum, not a VoteWire")
+    if wire_format == "pack8" and impl != "allgather_packed":
+        raise ValueError(
+            f"the pack8 wire needs vote_impl='allgather_packed' (per-worker "
+            f"decode scales ride the gather; a fabric psum cannot sum levels "
+            f"quantized against different norms), got {impl!r} — "
+            f"engine.wire_mode falls back to the decoded wire there")
     sizes = tuple(int(mesh.shape[a]) for a in axes) if mesh is not None \
         else tuple(compat.axis_size(a) for a in axes)
+    # one build-time validation point: every per-size /n in the byte ledgers
+    # (and the worker count itself) is safe downstream of this check
+    if not axes or any(s < 1 for s in sizes):
+        raise ValueError(
+            f"vote wire needs >= 1 worker: axes {axes!r} have sizes {sizes!r}")
     n = 1
     for s in sizes:
         n *= s
+    if wire_format == "pack8":
+        return Pack8Wire(axes=axes, n_workers=n, backend=backend)
     if impl == "hier":
         return HierVoteWire(axes=axes, n_workers=n,
                             inner_size=sizes[1], outer_size=sizes[0])

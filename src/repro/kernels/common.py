@@ -55,6 +55,16 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def canonical_rows(n: int, lanes: int = LANES, row_pad: int = SUBLANE_PAD) -> int:
+    """Row count of the canonical (rows, lanes) view of an n-element stream:
+    ceil to full lanes, rows padded to the sublane tile. The single source of
+    the padding rule — ``to_2d`` builds the buffers with it and the wire
+    ledgers (``dist.collectives.packed_nbytes``/``packed8_nbytes``) size the
+    real payloads from it, so accounting can never drift from the buffers."""
+    rows = -(-n // lanes)
+    return -(-rows // row_pad) * row_pad
+
+
 def to_2d(flat: jnp.ndarray, lanes: int = LANES, row_pad: int = SUBLANE_PAD):
     """Pad a flat array to a (rows, lanes) canonical view.
 
@@ -63,8 +73,7 @@ def to_2d(flat: jnp.ndarray, lanes: int = LANES, row_pad: int = SUBLANE_PAD):
     """
     assert flat.ndim == 1
     n = flat.shape[0]
-    rows = -(-n // lanes)
-    rows = -(-rows // row_pad) * row_pad
+    rows = canonical_rows(n, lanes, row_pad)
     padded = jnp.zeros((rows * lanes,), dtype=flat.dtype).at[:n].set(flat)
     return padded.reshape(rows, lanes), n
 
@@ -88,13 +97,13 @@ def smem_scalar(x, dtype) -> jnp.ndarray:
     return jnp.asarray(x, dtype=dtype).reshape(1, 1)
 
 
-def int8_hbm_elems(fn, *args) -> int:
-    """Element count of int8 arrays materialized *between* ops when tracing
-    ``fn(*args)`` — i.e. HBM-level int8 traffic. Walks the jaxpr recursively
-    but never descends into a pallas_call's kernel body (whose int8 values
-    live in VMEM registers). Used by the wire tests/bench to pin that the
-    fused sparsign->pack2bit uplink has no int8 ternary intermediate while
-    the two-pass chain necessarily does."""
+def hbm_elems(fn, *args, dtype=jnp.int8) -> int:
+    """Element count of ``dtype`` arrays materialized *between* ops when
+    tracing ``fn(*args)`` — i.e. HBM-level traffic of that dtype. Walks the
+    jaxpr recursively but never descends into a pallas_call's kernel body
+    (whose values live in VMEM registers). Used by the wire tests/bench to pin
+    that the fused uplinks have no int8 ternary (2-bit wire) or int32 level
+    (pack8 wire) intermediate while the unfused chains necessarily do."""
     try:
         from jax.extend import core as jcore
     except ImportError:  # pragma: no cover — very old jax
@@ -102,6 +111,7 @@ def int8_hbm_elems(fn, *args) -> int:
 
     closed = jax.make_jaxpr(fn)(*args)
     total = 0
+    want = jnp.dtype(dtype)
 
     def sub_jaxprs(params):
         for v in params.values():
@@ -117,7 +127,7 @@ def int8_hbm_elems(fn, *args) -> int:
         for eqn in jaxpr.eqns:
             for v in eqn.outvars:
                 aval = getattr(v, "aval", None)
-                if aval is not None and getattr(aval, "dtype", None) == jnp.int8:
+                if aval is not None and getattr(aval, "dtype", None) == want:
                     total += math.prod(aval.shape)
             if eqn.primitive.name == "pallas_call":
                 continue  # kernel-internal values are VMEM, not HBM
@@ -126,6 +136,16 @@ def int8_hbm_elems(fn, *args) -> int:
 
     visit(closed.jaxpr)
     return total
+
+
+def int8_hbm_elems(fn, *args) -> int:
+    """HBM-level int8 element count of ``fn(*args)`` (see ``hbm_elems``)."""
+    return hbm_elems(fn, *args, dtype=jnp.int8)
+
+
+def int32_hbm_elems(fn, *args) -> int:
+    """HBM-level int32 element count of ``fn(*args)`` (see ``hbm_elems``)."""
+    return hbm_elems(fn, *args, dtype=jnp.int32)
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracle for the 8-bit QSGD (``pack8``) uplink wire.
+
+Wire format: the canonical (rows, LANES) int8 view of the *signed stochastic
+level* stream — 1 B/coord plus one f32 decode scale per (worker, leaf). Unlike
+the 2-bit ternary wire there is no sub-byte interleaving: the int8 payload IS
+the wire byte stream, so "packing" is exactly the canonical-view padding.
+
+Level rule (FedCom-style 8-bit QSGD, s = 127 = 1 sign bit + 7 level bits)::
+
+    r     = |g| / param                  # param = max(||g||_2, eps) / 127
+    level = min(floor(r) + Bern(r - floor(r)), 127)
+
+The clip at 127 keeps sign*level inside int8 losslessly: r can exceed s by a
+float ulp when one coordinate carries the whole norm, and an unclipped level
+of 128 would wrap to -128 on the wire (a sign flip, not just noise). The clip
+is part of the quantizer's definition here — kernel, oracle and the public
+``qsgd8`` compressor all share it bitwise.
+
+Decode side (``unpack8_sum_ref``): the gathered per-worker payloads are
+decoded with their per-worker scales and accumulated *sequentially in worker
+order* — float addition is non-associative, and worker order is exactly how
+the decoded-psum wire reduces, so the pack8 wire stays bitwise-equal to the
+fp32 psum oracle stream.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import prng
+from repro.kernels import common
+
+#: level count of the 8-bit wire: 1 sign bit + 7 level bits = 2**7 - 1
+QSGD8_LEVELS = 127
+
+
+def qsgd8_levels_ref(g: jnp.ndarray, param, seed, counter_base=0) -> jnp.ndarray:
+    """int8 signed stochastic levels of ``g`` (any shape, f32/bf16).
+
+    ``param`` is the decode scale max(||g||_2, eps)/127, resolved by the caller
+    from the *whole* tensor (so the chunked jnp path and the kernel agree).
+    """
+    gf = g.astype(jnp.float32)
+    idx = (jnp.arange(g.size, dtype=jnp.uint32).reshape(g.shape)
+           + jnp.asarray(counter_base, jnp.uint32))
+    r = jnp.abs(gf) / jnp.maximum(jnp.asarray(param, jnp.float32), 1e-20)
+    l = jnp.floor(r)
+    u = prng.uniform01(seed, idx)
+    level = jnp.minimum(l + (u < (r - l)).astype(jnp.float32),
+                        jnp.float32(QSGD8_LEVELS))
+    return (jnp.sign(gf) * level).astype(jnp.int8)
+
+
+def qsgd8_pack8_ref(g: jnp.ndarray, param, seed, counter_base=0) -> jnp.ndarray:
+    """(any shape) -> (rows, LANES) int8 canonical wire view: the two-pass
+    composition (quantize, then pad to the canonical view) the fused kernel
+    must reproduce byte-for-byte."""
+    t = qsgd8_levels_ref(g, param, seed, counter_base)
+    view, _ = common.to_2d(t.reshape(-1))
+    return view
+
+
+def unpack8_sum_ref(gathered: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """(M, rows, LANES) int8 worker levels + (M,) f32 scales -> (rows, LANES)
+    f32 decoded sum: sum_m scales[m] * levels[m].
+
+    The python loop is deliberate: left-to-right adds in worker order, the
+    exact association of the decoded-psum wire (and of the fused kernel's
+    unrolled accumulator). A jnp.sum here would re-associate and break the
+    cross-wire bitwise pin. Run it EAGERLY (it is the test oracle): inside a
+    jit fusion the compiler may contract the products into the adds, which is
+    exactly why the kernel rounds them through a VMEM scratch and why the
+    wire's jnp backend exchanges decoded floats over psum instead.
+    """
+    m = gathered.shape[0]
+    acc = jnp.zeros(gathered.shape[1:], jnp.float32)
+    for i in range(m):
+        acc = acc + gathered[i].astype(jnp.float32) * scales[i]
+    return acc

@@ -49,11 +49,13 @@ def build_everything(args):
     mode = args.mode or trainer_mode(args.arch)
     if mode == "simple":
         step = build_train_step(model, TrainStepConfig(
-            compression=comp, lr=lr, local_lr=args.local_lr, worker_axes=wa), mesh)
+            compression=comp, lr=lr, local_lr=args.local_lr, worker_axes=wa,
+            vote_impl=args.vote_impl), mesh)
         params = model.init(jax.random.PRNGKey(args.seed))
     else:
         step = build_streamed_train_step(model, StreamedStepConfig(
-            compression=comp, lr=lr, worker_axes=wa), mesh)
+            compression=comp, lr=lr, worker_axes=wa,
+            vote_impl=args.vote_impl), mesh)
         params = model.init(jax.random.PRNGKey(args.seed))
         params = jax.tree_util.tree_map(jax.device_put, params,
                                         fsdp_param_shardings(model, mesh))
@@ -100,6 +102,10 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=10)
     ap.add_argument("--compressor", default="sparsign")
     ap.add_argument("--server", default="scaled_sign_ef")
+    ap.add_argument("--vote-impl", default="psum",
+                    choices=["psum", "hier", "allgather_packed"],
+                    help="vote wire; allgather_packed engages the packed "
+                         "uplinks (2-bit ternary, or pack8 for qsgd8)")
     ap.add_argument("--budget", type=float, default=1.0)
     ap.add_argument("--local-budget", type=float, default=10.0)
     ap.add_argument("--tau", type=int, default=1)

@@ -10,10 +10,13 @@ GSPMD insert the distributed-softmax reductions.
 ``build_update_ingest`` keeps a serving fleet in lockstep with a live training
 job: the trainer broadcasts each round's server *decision* — the quorum-gated
 sign of the vote sum, a ternary tensor shipped on the same 2-bit packed wire
-format the uplink uses (0.25 B/coord downlink) — and every replica applies it
-through ``engine.server_apply``, i.e. the identical fused vote_update kernel
+format the uplink uses (0.25 B/coord downlink), or, for mean-server trainers
+whose decision is a float delta, the qsgd8-quantized 8-bit ``packed8`` wire
+(1 B/coord + one f32 scale, ``encode_weight_update8``) — and every replica
+applies it through ``engine.server_apply``, i.e. the identical fused kernels
 the trainers run. Replica params therefore stay bitwise equal to the training
-params without ever shipping weights.
+params (2-bit wire) or quantization-faithful to them (8-bit float deltas)
+without ever shipping weights.
 """
 
 from __future__ import annotations
@@ -64,6 +67,31 @@ def build_prefill(model: Model, mesh, *, worker_axes: Sequence[str] = ("data",),
     return jax.jit(step)
 
 
+def encode_weight_update8(update: jnp.ndarray, *, seed, counter_base=0,
+                          backend: Optional[str] = None):
+    """Trainer-side 8-bit downlink encoder: a float server update tensor ->
+    ``(payload, scale)`` where ``payload`` is the canonical (rows, LANES) int8
+    sign*level view (1 B/coord) and ``scale`` the f32 decode scale — the
+    qsgd8 quantizer applied to the *downlink*, for mean-server trainers whose
+    decision is a float delta rather than a ternary sign. The replica applies
+    ``p - lr * scale * levels`` via ``build_update_ingest(wire='packed8')``,
+    stochastic-rounding driven by the same counter stream as the uplink."""
+    from repro.core.compressors import qsgd8_scale
+    from repro.kernels import common as kcommon
+    from repro.kernels.pack8.ops import qsgd8_pack8_op
+    from repro.kernels.pack8.ref import qsgd8_levels_ref
+
+    backend = engine.resolve_backend(backend)
+    scale = qsgd8_scale(update)
+    if backend == "jnp":
+        levels = qsgd8_levels_ref(update, scale, seed, counter_base)
+        payload, _ = kcommon.to_2d(levels.reshape(-1))
+    else:
+        payload = qsgd8_pack8_op(update, scale, seed, counter_base,
+                                 interpret=(backend == "interpret"))
+    return payload, scale.astype(jnp.float32)
+
+
 def encode_weight_update(vote_sum: jnp.ndarray, *, quorum: int = 1,
                          backend: Optional[str] = None) -> jnp.ndarray:
     """Trainer-side downlink encoder: integer vote sum -> 2-bit packed ternary
@@ -96,6 +124,10 @@ def build_update_ingest(model: Model, mesh, *, lr, quorum: int = 1,
       - ``"packed2bit"``: uint8 (rows, LANES//4) canonical views from
         ``encode_weight_update`` — 0.25 B/coord on the wire; decoded by the
         fused unpack kernel (backend-dispatched) straight into the update.
+      - ``"packed8"``: int8 (rows, LANES) canonical sign*level views from
+        ``encode_weight_update8`` — 1 B/coord; ``scales`` is REQUIRED (the
+        qsgd8 decode scale per leaf) and the replica applies the dequantized
+        float delta ``p - lr * scale * levels`` (mean rule, n_sel=1).
       - ``"int8"``: raw ternary (or small-int vote-sum) tensors in leaf shape.
 
     ``scales`` (optional pytree of f32 scalars matching ``params``) carries a
@@ -113,14 +145,20 @@ def build_update_ingest(model: Model, mesh, *, lr, quorum: int = 1,
     from repro.kernels.pack2bit.ops import unpack2bit_op
     from repro.kernels.pack2bit.ref import unpack2bit_ref
 
-    if wire not in ("packed2bit", "int8"):
-        raise ValueError(f"unknown update wire {wire!r}; known: packed2bit | int8")
+    if wire not in ("packed2bit", "packed8", "int8"):
+        raise ValueError(
+            f"unknown update wire {wire!r}; known: packed2bit | packed8 | int8")
     if wire == "packed2bit" and quorum != 1:
         raise ValueError(
             "the packed2bit wire carries already-gated ternary decisions — "
             "apply the quorum deadband trainer-side in encode_weight_update"
             "(vote_sum, quorum=...); a replica-side quorum here would be "
             "silently ignored. Use wire='int8' to gate on the replica.")
+    if wire == "packed8" and quorum != 1:
+        raise ValueError(
+            "the packed8 wire carries dequantized float deltas (sign*level * "
+            "scale), not votes — a quorum deadband does not apply. Use a "
+            "ternary wire to gate updates.")
     backend = engine.resolve_backend(backend)
     # the ingest config only selects the server rule; the decision tensor is
     # compressor-agnostic (any ternary uplink produces the same wire format)
@@ -128,6 +166,15 @@ def build_update_ingest(model: Model, mesh, *, lr, quorum: int = 1,
 
     def ingest(params, updates, scales=None):
         def leaf(p, u, scale=None):
+            if wire == "packed8":
+                # 8-bit downlink: canonical int8 sign*level view -> leaf
+                # levels; the mean rule with n_sel=1 applies the dequantized
+                # delta p - lr * scale * levels
+                levels = kcommon.from_2d(u, p.size, p.shape)
+                new_p, _ = engine.server_apply(
+                    p, levels, cfg, lr=lr, server="mean", n_sel=1.0,
+                    scale=scale, backend=backend)
+                return new_p
             if wire == "packed2bit":
                 if backend == "jnp":
                     votes = kcommon.from_2d(unpack2bit_ref(u), p.size, p.shape)
@@ -148,6 +195,13 @@ def build_update_ingest(model: Model, mesh, *, lr, quorum: int = 1,
             new_p, _ = engine.server_apply(p, votes, cfg, lr=lr, quorum=q,
                                            backend=backend)
             return new_p
+        if wire == "packed8":
+            if scales is None:
+                raise ValueError(
+                    "the packed8 downlink is meaningless without its decode "
+                    "scales — pass the per-leaf f32 scales from "
+                    "encode_weight_update8")
+            return jax.tree_util.tree_map(leaf, params, updates, scales)
         if scales is None:
             return jax.tree_util.tree_map(leaf, params, updates)
         if wire != "packed2bit":

@@ -21,10 +21,12 @@ Per round (Algorithm 1 / Algorithm 2 with tau=1..):
 Which wire a compressor rides is negotiated from the CompressorSpec table
 (``engine.wire_mode``): ternary compressors with a worker-invariant scale
 (scale-free, or TernGrad's psum-max'd shared_max) exchange ternary votes on
-the integer/packed wire even under a mean server; per-worker-scale baselines
-(qsgd_1bit/identity/...) psum decoded float32 — honestly costing fp32
-collective bytes, which is exactly the communication gap the paper's tables
-report.
+the integer/packed wire even under a mean server; qsgd8's int8 sign*level
+payload rides the 1 B/coord pack8 gather (+ per-worker f32 scales) when
+``vote_impl='allgather_packed'``; per-worker-scale ternary baselines
+(qsgd_1bit/scaled_sign under mean) and the float formats psum decoded
+float32 — honestly costing fp32 collective bytes, which is exactly the
+communication gap the paper's tables report.
 """
 
 from __future__ import annotations
@@ -109,13 +111,23 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
     comp = step_cfg.compression
     axes = tuple(step_cfg.worker_axes)
     backend = engine.resolve_backend(step_cfg.backend)
-    # built (and validated — hier demands two worker axes) at step-build time
-    wire = collectives.make_vote_wire(step_cfg.vote_impl, axes, mesh,
-                                      backend=backend)
     # wire negotiation + per-leaf quorum: CompressorSpec/table lookups resolved
     # (and validated) before tracing
-    mode = engine.wire_mode(comp)
+    mode = engine.wire_mode(comp, vote_impl=step_cfg.vote_impl)
+    # built (and validated — hier demands two worker axes, sizes >= 1) at
+    # step-build time, in the compressor's declared payload format
+    wire = collectives.make_vote_wire(
+        step_cfg.vote_impl, axes, mesh, backend=backend,
+        wire_format=("pack8" if mode == "pack8" else "pack2"))
     share_linf = engine.needs_shared_linf(comp)
+    if mode != "votes" and engine.needs_server_ef(comp.server):
+        raise ValueError(
+            f"server {comp.server!r} keeps an error-feedback residual that "
+            f"only updates on the integer vote wire, but compressor "
+            f"{comp.compressor!r} rides the {mode!r} wire — the run would "
+            f"silently aggregate by mean while carrying a dead full-model EF "
+            f"residual; use a ternary vote-wire compressor or a plain 'mean' "
+            f"server")
     quorum_leaves = jax.tree_util.tree_leaves(
         engine.broadcast_quorum(step_cfg.quorum, model.param_shapes()))
     if mode != "votes" and any(q != 1 for q in quorum_leaves):
@@ -164,22 +176,32 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
                 shared = collectives.worker_shared_linf(g, axes, mask=mask)
                 wire_bytes += wire.scalar_bytes()
             if mode != "decoded":
-                # wire-native ternary votes (packed uint8 or int8, per the
-                # wire): one exchange = upload + server sum, then C(.) + SGD
-                # fused in the engine. scaled_votes additionally carries ONE
-                # shared decode scale (msg.scale) next to the payload.
+                # wire-native messages (packed uint8 / int8 votes, or int8
+                # pack8 levels): one exchange = upload + server sum, then
+                # C(.) + SGD fused in the engine. scaled_votes additionally
+                # carries ONE shared decode scale (msg.scale) next to the
+                # payload; pack8 gathers every worker's scale and dequantizes
+                # during the exchange.
                 msg = engine.compress_leaf(g, comp, seed_i, backend=backend,
                                            wire=wire, shared_linf=shared)
                 votes = wire.mask_message(msg.values, mask)
-                vote_sum = wire.exchange(votes, g.size, g.shape)
                 nnz_acc += wire.message_nnz(votes)
                 wire_bytes += wire.wire_bytes(g.size)
                 n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
-                if mode == "votes":
+                if mode == "pack8":
+                    dec_sum = wire.exchange(votes, g.size, g.shape,
+                                            scale=msg.scale)
+                    wire_bytes += wire.scalar_bytes()
+                    new_p, new_ef = engine.server_apply(
+                        p, dec_sum, comp, lr=lr, ef=ef, n_sel=n_sel,
+                        server="mean", backend=backend)
+                elif mode == "votes":
+                    vote_sum = wire.exchange(votes, g.size, g.shape)
                     new_p, new_ef = engine.server_apply(
                         p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel,
                         quorum=quorum_leaves[i], backend=backend)
                 else:
+                    vote_sum = wire.exchange(votes, g.size, g.shape)
                     new_p, new_ef = engine.server_apply(
                         p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel,
                         server="mean", scale=msg.scale, backend=backend)
@@ -187,18 +209,15 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
                 msg = engine.compress_leaf(g, comp, seed_i, backend=backend,
                                            shared_linf=shared)
                 # decoded-float wire: per-worker-scale ternary baselines
-                # (qsgd_1bit/scaled_sign under a mean server) and every
-                # non-ternary baseline ship decode(compress(g)) — fp32
-                # collective bytes, honestly the cost this family pays
-                # (identity's message IS g, so D-SGD is bit-identical to raw psum)
-                dec = msg.values.astype(jnp.float32) * msg.scale
-                dec = jnp.where(mask, dec, 0.0)
-                if comp.is_ternary:
-                    nnz_acc += jnp.sum(jnp.abs(jnp.where(mask, msg.values, jnp.int8(0))).astype(jnp.float32))
-                else:
-                    nnz_acc += jnp.sum((dec != 0.0).astype(jnp.float32))
-                vote_sum = jax.lax.psum(dec, axes)
-                wire_bytes += 2.0 * (n_workers - 1) / n_workers * 4 * g.size
+                # (qsgd_1bit/scaled_sign under a mean server) and the float
+                # formats ship decode(compress(g)) — fp32 collective bytes,
+                # honestly the cost this family pays (identity's message IS
+                # g, so D-SGD is bit-identical to raw psum)
+                vote_sum, nnz = collectives.decoded_exchange(
+                    msg.values, msg.scale, mask, axes,
+                    is_ternary=comp.is_ternary)
+                nnz_acc += nnz
+                wire_bytes += collectives.decoded_wire_bytes(g.size, n_workers)
                 n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
                 new_p, new_ef = engine.server_apply(
                     p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel, server="mean",

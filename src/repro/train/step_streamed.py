@@ -11,10 +11,12 @@ ALL parameters (block stacks AND embed/head) are FSDP-sharded along 'data'
   head:     gather embed/head, loss + vjp for the outer params.
   backward: reverse lax.scan; per superblock: re-gather params, recompute under
             jax.vjp (remat), compress the *local, unreduced* block gradient,
-            exchange the wire-native votes over the worker axes (any
-            `vote_impl`: psum | hier | allgather_packed), then do ALL server math
-            (sign / scaled-sign EF, SGD) on this rank's shard only — the full
-            fp32 update tensor never exists. Gradients die block-by-block.
+            exchange the wire-native message over the worker axes (any
+            `vote_impl`: psum | hier | allgather_packed, and any wire mode:
+            votes | scaled_votes | pack8 | decoded), then do ALL server math
+            (sign / scaled-sign EF / scaled mean, SGD) on this rank's shard
+            only — the full fp32 update tensor never exists. Gradients die
+            block-by-block.
 
 Counter streams are laid out identically to simple mode (leaf salt = canonical
 tree position, counter = offset within the stacked leaf) — the cross-mode
@@ -152,15 +154,25 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     assert not cfg.tie_embeddings, "streamed mode expects untied embeddings"
     comp = step_cfg.compression
     assert comp.local_steps == 1, "streamed mode implements Alg. 1 exchange (tau=1)"
-    if not engine.is_vote_server(comp):
-        raise ValueError(f"streamed mode supports vote servers {engine.VOTE_SERVERS}, "
-                         f"got {comp.server!r}")
     backend = engine.resolve_backend(step_cfg.backend)
     axes = tuple(step_cfg.worker_axes)
-    # built (and validated — hier demands two worker axes) at step-build time
-    wire = collectives.make_vote_wire(step_cfg.vote_impl, axes, mesh,
-                                      backend=backend)
+    # wire-mode negotiation (CompressorSpec lookup) resolved before tracing;
+    # every mode — votes, scaled_votes, pack8, decoded — runs streamed
+    mode = engine.wire_mode(comp, vote_impl=step_cfg.vote_impl)
+    # built (and validated — hier demands two worker axes, sizes >= 1) at
+    # step-build time, in the compressor's declared payload format
+    wire = collectives.make_vote_wire(
+        step_cfg.vote_impl, axes, mesh, backend=backend,
+        wire_format=("pack8" if mode == "pack8" else "pack2"))
     share_linf = engine.needs_shared_linf(comp)
+    if mode != "votes" and engine.needs_server_ef(comp.server):
+        raise ValueError(
+            f"server {comp.server!r} keeps an error-feedback residual that "
+            f"only updates on the integer vote wire, but compressor "
+            f"{comp.compressor!r} rides the {mode!r} wire — the run would "
+            f"silently aggregate by mean while carrying a dead full-model EF "
+            f"residual; use a ternary vote-wire compressor or a plain 'mean' "
+            f"server")
     fsdp_ax = step_cfg.fsdp_axis
     n_shards = mesh.shape[fsdp_ax]
 
@@ -169,6 +181,12 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     # position (same flat order as idx_tree below)
     quorum_flat = jax.tree_util.tree_leaves(
         engine.broadcast_quorum(step_cfg.quorum, shapes))
+    if mode != "votes" and any(q != 1 for q in quorum_flat):
+        raise ValueError(
+            f"quorum={step_cfg.quorum!r} is a vote-server deadband, but "
+            f"compressor {comp.compressor!r} with server {comp.server!r} "
+            f"rides the {mode!r} wire where it would be silently ignored; "
+            f"use a vote server ({engine.VOTE_SERVERS}) or quorum=1")
     _, axes_all, manual_specs = streamed_shardings(model, mesh, fsdp_ax)
     block_specs, block_axes = manual_specs["blocks"], axes_all["blocks"]
     outer_keys = [k for k in shapes if k != "blocks"]
@@ -183,11 +201,22 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     # per-round per-device uplink ledger: block leaves exchange once per layer
     # at their per-layer size (padding is per-exchange, so it multiplies out),
     # outer leaves once at full size
-    scalar_tax = wire.scalar_bytes() if share_linf else 0.0
+    n_workers_static = wire.n_workers
+
+    def exchange_bytes(n: int) -> float:
+        if mode == "decoded":
+            # fp32 psum of decoded messages — the wire object is bypassed
+            base = collectives.decoded_wire_bytes(n, n_workers_static)
+        else:
+            base = wire.wire_bytes(n)
+        if mode == "pack8":
+            return base + wire.scalar_bytes()   # per-worker decode scales
+        return base + (wire.scalar_bytes() if share_linf else 0.0)
+
     wire_ledger = sum(
-        cfg.n_repeats * (wire.wire_bytes(math.prod(s.shape[1:])) + scalar_tax)
+        cfg.n_repeats * exchange_bytes(math.prod(s.shape[1:]))
         for s in jax.tree_util.tree_leaves(shapes["blocks"]))
-    wire_ledger += sum(wire.wire_bytes(math.prod(s.shape)) + scalar_tax
+    wire_ledger += sum(exchange_bytes(math.prod(s.shape))
                        for k in outer_keys
                        for s in jax.tree_util.tree_leaves(shapes[k]))
 
@@ -204,28 +233,48 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                     shard_ax: int, leaf_size: int, quorum: int):
         """compress(full) -> wire exchange(full) -> server math + SGD on the SHARD.
 
-        The fp32 update/EF tensors only ever exist at shard size; the full-size
-        artifacts are the bf16/f32 gradient (transient, from vjp) and the
-        wire-native votes (1 B/coord int8 for the psum wires, 0.25 B/coord
-        packed for allgather_packed)."""
+        The fp32 update/EF tensors only ever exist at shard size; the
+        full-size artifacts are the bf16/f32 gradient (transient, from vjp)
+        and the exchanged message (1 B/coord int8 votes for the psum wires,
+        0.25 B/coord packed ternary or 1 B/coord pack8 levels for the gather
+        wires, 4 B/coord fp32 for the decoded psum)."""
         shared = (collectives.worker_shared_linf(g_full, axes, mask=mask)
                   if share_linf else None)
-        msg = engine.compress_leaf(g_full, comp, seed, counter_base,
-                                   backend=backend, wire=wire,
-                                   shared_linf=shared)
-        votes = wire.mask_message(msg.values, mask)
-        vote_sum = wire.exchange(votes, g_full.size, g_full.shape)
-        nnz = wire.message_nnz(votes)
-        shard_size = p_shard.shape[shard_ax] if shard_ax != REPLICATED else None
-        vs = _slice(vote_sum, shard_ax, shard_size)
         n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
-        # shards partition the leaf, so the scaled-sign L1 reduces across them
-        l1_reduce = ((lambda part: jax.lax.psum(part, fsdp_ax))
-                     if shard_ax != REPLICATED else None)
-        new_shard, new_ef = engine.server_apply(
-            p_shard, vs, comp, lr=lr, ef=ef_shard, n_sel=n_sel,
-            leaf_size=leaf_size, l1_reduce=l1_reduce, quorum=quorum,
-            backend=backend)
+        if mode == "decoded":
+            # per-worker decode scales / float payloads: decode locally, psum
+            # fp32 — the wire object is bypassed, exactly like simple mode
+            # (decoded_exchange is the one shared definition)
+            msg = engine.compress_leaf(g_full, comp, seed, counter_base,
+                                       backend=backend, shared_linf=shared)
+            agg, nnz = collectives.decoded_exchange(
+                msg.values, msg.scale, mask, axes, is_ternary=comp.is_ternary)
+        else:
+            msg = engine.compress_leaf(g_full, comp, seed, counter_base,
+                                       backend=backend, wire=wire,
+                                       shared_linf=shared)
+            votes = wire.mask_message(msg.values, mask)
+            nnz = wire.message_nnz(votes)
+            agg = wire.exchange(votes, g_full.size, g_full.shape,
+                                scale=(msg.scale if mode == "pack8" else None))
+        shard_size = p_shard.shape[shard_ax] if shard_ax != REPLICATED else None
+        vs = _slice(agg, shard_ax, shard_size)
+        if mode == "votes":
+            # shards partition the leaf, so the scaled-sign L1 reduces across them
+            l1_reduce = ((lambda part: jax.lax.psum(part, fsdp_ax))
+                         if shard_ax != REPLICATED else None)
+            new_shard, new_ef = engine.server_apply(
+                p_shard, vs, comp, lr=lr, ef=ef_shard, n_sel=n_sel,
+                leaf_size=leaf_size, l1_reduce=l1_reduce, quorum=quorum,
+                backend=backend)
+        else:
+            # mean-server wires: scaled_votes carries the ONE shared decode
+            # scale outside the sum; pack8/decoded sums arrive pre-dequantized
+            new_shard, new_ef = engine.server_apply(
+                p_shard, vs, comp, lr=lr, ef=ef_shard, n_sel=n_sel,
+                server="mean",
+                scale=(msg.scale if mode == "scaled_votes" else None),
+                backend=backend)
         return new_shard, new_ef, nnz
 
     def body(state: TrainState, batch):

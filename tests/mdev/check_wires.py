@@ -16,7 +16,19 @@ Beyond sparsign, the non-sparsign ternary compressors run the same 3-wire x
 2-backend sweep in simple mode: noisy_sign exercises the generic ternary
 kernel template on the votes wire, terngrad exercises the scaled_votes wire
 (magnitude-shared s_t pmax'd over ('pod','data'), ternary votes + one scalar
-on the fabric, mean-server decode).
+on the fabric, mean-server decode). Streamed mode runs the terngrad
+scaled_votes sweep too — all four wire modes now run in both train modes.
+
+qsgd8 (the FedCom 8-bit baseline) sweeps its two wires in BOTH modes: the
+decoded fp32 psum (vote_impl=psum — the oracle stream) vs the pack8 gather
+(vote_impl=allgather_packed: 1 B/coord int8 sign*level payloads + per-worker
+f32 scales, fused dequantize-sum). Bitwise equality of a FLOAT sum across
+wires holds because every implementation associates the adds in worker-index
+order, which is also how the host-platform psum reduces; the pack8 kernel
+rounds each decoded product through a VMEM scratch to pin the same rounding
+points (see kernels/pack8). On a real TPU pod the psum association is the
+runtime's choice, so there this check pins the gather wires against each
+other rather than against psum.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -55,10 +67,10 @@ def flat_np(tree):
         jax.tree_util.tree_map(np.asarray, tree))]
 
 
-def check_mode(mode, mesh, model, params, batch, comp, lr):
+def check_mode(mode, mesh, model, params, batch, comp, lr, wires=WIRES):
     ref, ref_label = None, None
     for backend in BACKENDS:
-        for wire in WIRES:
+        for wire in wires:
             if mode == "simple":
                 scfg = TrainStepConfig(compression=comp, lr=lr, worker_axes=AXES,
                                        vote_impl=wire, donate=False, backend=backend)
@@ -101,8 +113,7 @@ def main():
     print("OK simple-mode wires bitwise-equal (3 wires x 2 backends)")
 
     # non-sparsign ternary compressors: same wire-invariance sweep through the
-    # generic ternary kernel template (simple mode; streamed mode is pinned to
-    # vote servers, covered by the sparsign sweep above)
+    # generic ternary kernel template (simple mode)
     for name, server, value in (("noisy_sign", "majority_vote", 0.5),
                                 ("terngrad", "mean", 1.0)):
         comp_n = CompressionConfig(compressor=name,
@@ -113,6 +124,17 @@ def main():
                    make_batch(cfg_s, 8, 16), comp_n, lr)
         print(f"OK {name} wires bitwise-equal (3 wires x 2 backends)")
 
+    # qsgd8 on the pack8 wire vs its decoded-psum oracle stream (the FedCom
+    # 8-bit baseline, Appendix B): vote_impl=psum negotiates the fp32 decoded
+    # wire, allgather_packed the 1 B/coord pack8 gather — same round bitwise
+    comp_q = CompressionConfig(compressor="qsgd8",
+                               budget=BudgetConfig(kind="fixed", value=1.0),
+                               server="mean")
+    print("simple mode (qsgd8 / mean — decoded-psum oracle vs pack8 gather):")
+    check_mode("simple", mesh, model_s, params_s, make_batch(cfg_s, 8, 16),
+               comp_q, lr, wires=("psum", "allgather_packed"))
+    print("OK qsgd8 pack8 wire bitwise-equal to the decoded psum (2 backends)")
+
     cfg_t = get_config("qwen2-moe-a2.7b", smoke=True)
     model_t = Model(cfg_t)
     params_t = model_t.init(jax.random.PRNGKey(0))
@@ -121,6 +143,24 @@ def main():
     print("streamed mode (qwen2-moe-a2.7b smoke, FSDP over data):")
     check_mode("streamed", mesh, model_t, params_t, make_batch(cfg_t, 8, 16), comp, lr)
     print("OK streamed-mode wires bitwise-equal (3 wires x 2 backends)")
+
+    # streamed mode is no longer pinned to vote servers: the terngrad
+    # scaled_votes wire (integer votes + ONE shared scale, mean decode on the
+    # FSDP shard) and the qsgd8 pack8/decoded wires run the same sweeps
+    comp_tg = CompressionConfig(compressor="terngrad",
+                                budget=BudgetConfig(kind="fixed", value=1.0),
+                                server="mean")
+    print("streamed mode (terngrad / mean — scaled_votes):")
+    check_mode("streamed", mesh, model_t, params_t, make_batch(cfg_t, 8, 16),
+               comp_tg, lr)
+    print("OK streamed terngrad scaled_votes wires bitwise-equal "
+          "(3 wires x 2 backends)")
+
+    print("streamed mode (qsgd8 / mean — decoded-psum oracle vs pack8 gather):")
+    check_mode("streamed", mesh, model_t, params_t, make_batch(cfg_t, 8, 16),
+               comp_q, lr, wires=("psum", "allgather_packed"))
+    print("OK streamed qsgd8 pack8 wire bitwise-equal to the decoded psum "
+          "(2 backends)")
 
 
 if __name__ == "__main__":

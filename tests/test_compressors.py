@@ -95,21 +95,39 @@ def test_stochastic_ternary_unbiased(name):
 
 
 def test_qsgd8_registered_and_bounded():
-    """The FedCom 8-bit baseline is reachable via the registry; levels stay in
-    [-s, s] and the compressor honors the shared compress signature."""
+    """The FedCom 8-bit baseline is reachable via the registry; sign*level
+    fits int8 losslessly (1 sign bit + 7 level bits, s = 127) and the
+    compressor honors the shared compress signature."""
     fn = get_compressor("qsgd8")
     g = jnp.asarray(np.random.RandomState(10).randn(4096) * 2, jnp.float32)
     msg = fn(g, budget=1.0, seed=3, counter_base=0)
     vals = np.asarray(msg.values)
-    assert vals.dtype == np.int32
-    assert np.abs(vals).max() <= 255
+    assert vals.dtype == np.int8
+    assert np.abs(vals.astype(np.int32)).max() <= 127
     # transmitted coordinates carry the true sign
     nz = vals != 0
     assert np.array_equal(np.sign(vals[nz]), np.sign(np.asarray(g))[nz])
 
 
+def test_qsgd8_level_clip_keeps_int8_lossless():
+    """The edge the clip exists for: a single-coordinate tensor has
+    |g| == ||g||_2, so the level ratio sits exactly at s and a float ulp
+    (or the stochastic round-up) would otherwise produce level 128 — which
+    wraps to -128 in int8, flipping the sign on the wire."""
+    fn = get_compressor("qsgd8")
+    # values above the 1e-12 norm floor (below it the scale saturates at
+    # eps/127 and the level honestly collapses to 0)
+    for v in (1.0, 3.7e8, 1.2e-6):
+        for seed in range(8):
+            msg = fn(jnp.asarray([v], jnp.float32), seed=seed)
+            lvl = int(np.asarray(msg.values)[0])
+            assert lvl == 127, (v, seed, lvl)  # never 128/-128
+            dec = lvl * float(msg.scale)
+            assert dec == pytest.approx(v, rel=1e-5)
+
+
 def test_qsgd8_unbiased_decode():
-    """E[decode] = g: with s=255 levels a single draw is already within
+    """E[decode] = g: with s=127 levels a single draw is already within
     half a level, so a small trial count pins the mean tightly."""
     rng = np.random.RandomState(11)
     g = jnp.asarray(rng.randn(256), jnp.float32)
@@ -122,7 +140,7 @@ def test_qsgd8_unbiased_decode():
     # per-coord sigma of the n-trial mean <= level/(2 sqrt(n)) ~ level/14, so
     # level/3 passes comfortably for stochastic rounding but fails a biased
     # floor-only implementation (whose mean error is uniform in [0, level))
-    level = float(np.linalg.norm(np.asarray(g))) / 255.0
+    level = float(np.linalg.norm(np.asarray(g))) / 127.0
     err = np.abs(acc / n - np.asarray(g))
     assert err.max() < level / 3.0, err.max()
 

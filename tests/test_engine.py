@@ -52,32 +52,91 @@ def test_compress_leaf_backend_equivalence(shape, dtype, compressor):
 
 def test_spec_registry_is_total_and_wellformed():
     """Every registered compressor has a complete, self-consistent spec row."""
+    from repro.core.compressors import WIRE_FORMATS
     for name, spec in SPECS.items():
         assert spec.name == name
         assert callable(spec.api) and callable(spec.values)
         assert spec.scale_protocol in SCALE_PROTOCOLS
         assert spec.server_decode in SERVER_DECODES
+        assert spec.wire_format in WIRE_FORMATS
         assert (spec.local_scale is None) == (spec.scale_protocol == "none")
+        # wire_format is the declarative negotiation key: pack2 <=> ternary,
+        # and only packed formats may register a fused pack op
+        assert (spec.wire_format == "pack2") == spec.is_ternary
         if spec.fused_pack_op is not None:
-            assert spec.is_ternary and spec.pallas_op is not None
+            assert spec.wire_format != "float" and spec.pallas_op is not None
         # ternary <-> CompressionConfig.is_ternary agrees with the table
         assert _cfg(name).is_ternary == spec.is_ternary
+    assert SPECS["qsgd8"].wire_format == "pack8"
+    assert SPECS["identity"].wire_format == "float"
     with pytest.raises(KeyError, match="unknown compressor"):
         get_spec("bogus")
 
 
 def test_wire_mode_negotiation():
-    """(compressor, server) -> wire format is a pure spec lookup."""
+    """(compressor, server, vote_impl) -> wire mode is a pure spec lookup."""
     assert engine.wire_mode(_cfg("sparsign")) == "votes"
     assert engine.wire_mode(_cfg("noisy_sign", server="scaled_sign_ef")) == "votes"
     # shared-scale ternary + mean server: integer votes + ONE scalar
     assert engine.wire_mode(_cfg("terngrad", server="mean")) == "scaled_votes"
     assert engine.wire_mode(_cfg("sign", server="mean")) == "scaled_votes"
-    # per-worker scales and non-ternary payloads stay on the float wire
+    # per-worker scales on ternary wires stay on the float wire
     assert engine.wire_mode(_cfg("qsgd_1bit_l2", server="mean")) == "decoded"
     assert engine.wire_mode(_cfg("scaled_sign", server="mean")) == "decoded"
-    assert engine.wire_mode(_cfg("qsgd8", server="majority_vote")) == "decoded"
     assert engine.wire_mode(_cfg("identity", server="mean")) == "decoded"
+    # pack8 payloads take the 8-bit gather when the gather wire is selected,
+    # decoded psum otherwise (levels cannot be reduced on the fabric)
+    for server in ("mean", "majority_vote"):
+        assert engine.wire_mode(_cfg("qsgd8", server=server)) == "decoded"
+        assert engine.wire_mode(_cfg("qsgd8", server=server),
+                                vote_impl="allgather_packed") == "pack8"
+        assert engine.wire_mode(_cfg("qsgd8", server=server),
+                                vote_impl="hier") == "decoded"
+    # the gather impl does not perturb the ternary/float rows
+    assert engine.wire_mode(_cfg("sparsign"),
+                            vote_impl="allgather_packed") == "votes"
+    assert engine.wire_mode(_cfg("identity", server="mean"),
+                            vote_impl="allgather_packed") == "decoded"
+
+
+def test_compress_leaf_shared_linf_mapped_context_is_loud():
+    """Regression (PR 5): inside a mapped (multi-worker) context a shared_max
+    compressor without shared_linf= must raise, not silently degrade to the
+    per-worker local norm — that degrade IS the TernGrad drift PR 4 killed.
+    Outside a mesh the single-worker degrade stays available (public API)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import compat
+    from repro.launch.mesh import make_host_mesh
+
+    g = jnp.asarray(np.random.RandomState(11).randn(64), jnp.float32)
+    # outside any mapped context: degrades to the local L-inf, loudly documented
+    msg = engine.compress_leaf(g, _cfg("terngrad"), 3, backend="jnp")
+    assert float(msg.scale) == float(jnp.max(jnp.abs(g)))
+
+    mesh = make_host_mesh(1, 1)
+
+    def body(x):
+        return engine.compress_leaf(x, _cfg("terngrad"), 3, backend="jnp").values
+
+    mapped = compat.shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                              axis_names={"data"}, check_vma=False)
+    with pytest.raises(ValueError, match="shared_linf"):
+        with compat.set_mesh(mesh):
+            jax.jit(mapped)(g)
+
+    # supplying shared_linf inside the same mapped context is fine
+    def body_ok(x):
+        from repro.dist import collectives
+        shared = collectives.worker_shared_linf(x, ("data",))
+        return engine.compress_leaf(x, _cfg("terngrad"), 3, backend="jnp",
+                                    shared_linf=shared).values
+
+    mapped_ok = compat.shard_map(body_ok, mesh=mesh, in_specs=(P(),),
+                                 out_specs=P(), axis_names={"data"},
+                                 check_vma=False)
+    with compat.set_mesh(mesh):
+        out = jax.jit(mapped_ok)(g)
+    assert out.shape == g.shape
 
 
 def test_needs_shared_linf():

@@ -196,6 +196,53 @@ def test_scaled_update_ingest_applies_shared_scale():
         assert np.array_equal(a, b)
 
 
+def test_packed8_update_ingest_matches_quantized_apply():
+    """The 8-bit downlink: encode_weight_update8 quantizes a float server
+    delta (qsgd8 levels + one f32 scale per leaf, 1 B/coord) and the replica
+    lands on exactly p - lr * scale * levels — bitwise, both backends; the
+    scales are mandatory and a quorum is rejected (levels are not votes)."""
+    import pytest
+    from repro.core import engine
+    from repro.kernels import common as kcommon
+    from repro.serve.decode import encode_weight_update8
+    from repro.core.algorithm import CompressionConfig
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    m = Model(cfg)
+    mesh = make_host_mesh(1, 1)
+    params = m.init(jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    rng = np.random.RandomState(17)
+    deltas = [jnp.asarray(rng.randn(*l.shape), jnp.float32) for l in leaves]
+    lr = 0.05
+    comp = CompressionConfig(server="majority_vote")
+
+    other = "interpret" if jax.default_backend() != "tpu" else "pallas"
+    for backend in ("jnp", other):
+        enc = [encode_weight_update8(d, seed=i, backend=backend)
+               for i, d in enumerate(deltas)]
+        payloads = jax.tree_util.tree_unflatten(treedef, [e[0] for e in enc])
+        scales = jax.tree_util.tree_unflatten(treedef, [e[1] for e in enc])
+        # trainer-side oracle: the dequantized delta applied via the same
+        # jitted mean rule the ingest step runs
+        trainer_apply = jax.jit(lambda p, u, s: engine.server_apply(
+            p, u, comp, lr=lr, server="mean", n_sel=1.0, scale=s,
+            backend=backend)[0])
+        want = [np.asarray(trainer_apply(
+                    p, kcommon.from_2d(pl8, p.size, p.shape), s))
+                for p, (pl8, s) in zip(leaves, enc)]
+        ingest = build_update_ingest(m, mesh, lr=lr, wire="packed8",
+                                     backend=backend, donate=False)
+        got = jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+            np.asarray, ingest(params, payloads, scales)))
+        for a, b in zip(got, want):
+            assert np.array_equal(a, b), backend
+        with pytest.raises(ValueError, match="decode scales"):
+            ingest(params, payloads)
+    with pytest.raises(ValueError, match="not votes"):
+        build_update_ingest(m, mesh, lr=lr, wire="packed8", quorum=2)
+
+
 def test_encoder_prefill_builder():
     cfg = get_config("hubert-xlarge", smoke=True)
     m = Model(cfg)

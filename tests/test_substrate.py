@@ -110,6 +110,12 @@ def test_baseline_bits():
     assert baseline_bits_per_round(d, "sign") == d
     assert baseline_bits_per_round(d, "identity") == 32 * d
     assert baseline_bits_per_round(d, "sparsign", nnz=100) < d  # sparser than 1 bit/coord
+    # regression (PR 5): qsgd8 counts its 32-bit decode scale like the wire
+    # ledger does (8 bits/coord + one f32 per message), and unknown algorithms
+    # stay loud (no startswith("qsgd") catch-all)
+    assert baseline_bits_per_round(d, "qsgd8") == 8 * d + 32
+    with pytest.raises(ValueError):
+        baseline_bits_per_round(d, "qsgd_777")
 
 
 # ---------------------------------------------------------------------------

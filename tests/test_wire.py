@@ -359,3 +359,239 @@ def test_streamed_config_exposes_vote_impl_and_quorum():
                              lr=LrSchedule(base=0.1),
                              vote_impl="allgather_packed", quorum=3)
     assert cfg.vote_impl == "allgather_packed" and cfg.quorum == 3
+
+
+# ---------------------------------------------------------------------------
+# the pack8 (8-bit QSGD) wire: fused kernel, decode-sum, Pack8Wire, engine
+# ---------------------------------------------------------------------------
+
+from repro.kernels.pack8.ops import qsgd8_op, qsgd8_pack8_op, unpack8_sum_op
+from repro.kernels.pack8.ref import (QSGD8_LEVELS, qsgd8_levels_ref,
+                                     qsgd8_pack8_ref, unpack8_sum_ref)
+
+
+def _qsgd8_param(g):
+    from repro.core.compressors import qsgd8_scale
+    return qsgd8_scale(g)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pack8_fused_matches_ref(shape, dtype):
+    """Fused quantize->wire kernel == quantize-then-pad reference, byte for
+    byte, across odd shapes / bf16 / counter bases (the pack8 round-trip)."""
+    g = jnp.asarray(np.random.RandomState(7).randn(*shape), dtype)
+    param = _qsgd8_param(g)
+    for seed, base in [(1, 0), (99, 12345), (7, 2**20)]:
+        fused = qsgd8_pack8_op(g, param, seed, base)
+        ref = qsgd8_pack8_ref(g, param, seed, base)
+        assert fused.dtype == jnp.int8
+        assert np.array_equal(np.asarray(fused), np.asarray(ref)), (shape, dtype, seed)
+        # leaf-shaped op unpads the same payload
+        leaf = qsgd8_op(g, param, seed, base)
+        assert leaf.shape == g.shape
+        assert np.array_equal(np.asarray(leaf),
+                              np.asarray(qsgd8_levels_ref(g, param, seed, base)))
+        assert int(np.abs(np.asarray(leaf).astype(np.int32)).max()) <= QSGD8_LEVELS
+
+
+def test_pack8_fused_no_int32_hbm_intermediate():
+    """The fused uplink's structural guarantee: gradient -> int8 wire bytes
+    with no int32 level tensor at the HBM level (the legacy generic-qsgd jnp
+    chain necessarily materializes one)."""
+    from repro.core.compressors import _qsgd_level_values
+    g = jnp.asarray(np.random.RandomState(8).randn(4096), jnp.float32)
+    param = _qsgd8_param(g)
+    # uint32 seed, as the engine supplies it (a python-int seed would add one
+    # i32->u32 scalar conversion to the jaxpr and muddy the zero pin)
+    seed = jnp.uint32(7)
+    fused_i32 = common.int32_hbm_elems(
+        lambda x: qsgd8_pack8_op(x, param, seed, interpret=True), g)
+    legacy_i32 = common.int32_hbm_elems(
+        lambda x: _qsgd_level_values(x, param, seed, 0), g)
+    # <= 1: the single scatter-start index of the to_2d canonical-view pad
+    # (every canonical-view op carries it); the point is no O(n) level tensor
+    assert fused_i32 <= 1, f"fused pack8 uplink materializes {fused_i32} int32 elems"
+    assert legacy_i32 >= g.size
+
+
+@pytest.mark.parametrize("m", [1, 3, 8, 40])  # 40 exercises worker chunking
+@pytest.mark.parametrize("n", [63, 1000])
+def test_unpack8_sum_matches_sequential_oracle(m, n):
+    """Fused dequantize-sum == eager worker-order accumulation of the decoded
+    payloads — the association the decoded-psum wire uses, which is what makes
+    the pack8 wire bitwise-honest against the fp32 oracle stream. m=40 splits
+    into worker chunks (the VMEM bound for large M), whose grid accumulation
+    must preserve the same worker-order association."""
+    rng = np.random.RandomState(9)
+    payloads, scales = [], []
+    for i in range(m):
+        gi = jnp.asarray(rng.randn(n), jnp.float32)
+        pi = _qsgd8_param(gi)
+        payloads.append(qsgd8_pack8_op(gi, pi, i))
+        scales.append(jnp.float32(pi))
+    gathered = jnp.stack(payloads)
+    scales = jnp.stack(scales)
+    got = jax.jit(lambda ga, s: unpack8_sum_op(ga, s, n, (n,)))(gathered, scales)
+    want = common.from_2d(unpack8_sum_ref(gathered, scales), n, (n,))
+    assert got.dtype == jnp.float32
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # eager sequential oracle (rounded products, worker-order adds)
+    acc = np.zeros(n, np.float32)
+    for i in range(m):
+        dec = np.asarray(common.from_2d(gathered[i], n, (n,)), np.float32) * np.asarray(scales)[i]
+        acc = (acc + dec).astype(np.float32)
+    assert np.array_equal(np.asarray(got), acc)
+
+
+def test_pack8_wire_nnz_mask_and_ledger():
+    wire = collectives.Pack8Wire(axes=("data",), n_workers=4)
+    assert wire.native_format == "pack8" and wire.wants_packed
+    g = jnp.asarray(np.random.RandomState(10).randn(1000), jnp.float32)
+    payload = qsgd8_pack8_op(g, _qsgd8_param(g), 3)
+    # nnz counts nonzero LEVELS (not their magnitudes)
+    levels = np.asarray(common.from_2d(payload, 1000, (1000,)))
+    assert float(wire.message_nnz(payload)) == float((levels != 0).sum())
+    masked = wire.mask_message(payload, jnp.bool_(False))
+    assert float(wire.message_nnz(masked)) == 0.0
+    # ledger: (M-1) x real padded int8 payload + (M-1) gathered f32 scales
+    n = 1 << 20
+    assert wire.wire_bytes(n) == 3 * collectives.packed8_nbytes(n)
+    assert collectives.packed8_nbytes(n) == n       # aligned: exactly 1 B/coord
+    assert collectives.packed8_nbytes(1) == common.SUBLANE_PAD * common.LANES
+    assert wire.scalar_bytes() == 3 * 4.0
+    # integer vote wires reject an in-exchange scale loudly
+    with pytest.raises(ValueError, match="pack8-wire concept"):
+        collectives.VoteWire(axes=("data",), n_workers=4).exchange(
+            jnp.zeros(8, jnp.int8), 8, (8,), scale=jnp.float32(1.0))
+
+
+def test_wire_ledger_matches_real_payload_nbytes():
+    """Satellite pin: every wire impl's ledger == the bytes of the REAL
+    (padded) message buffers it exchanges, from first principles — no
+    idealized d/4 or d models anywhere."""
+    n = 1000  # unaligned on purpose: the pad must be counted
+    g = jnp.asarray(np.random.RandomState(12).randn(n), jnp.float32)
+    t = jnp.sign(g).astype(jnp.int8)
+
+    m = 16
+    psum = collectives.VoteWire(axes=("data",), n_workers=m)
+    # psum payload: leaf-shaped votes in the narrowest sum dtype (no padding)
+    votes = t.astype(collectives._sum_dtype(m))
+    assert psum.wire_bytes(n) == pytest.approx(2 * (m - 1) / m * votes.nbytes)
+
+    hier = collectives.HierVoteWire(axes=("pod", "data"), n_workers=m,
+                                    inner_size=8, outer_size=2)
+    inner_payload = t.astype(collectives._sum_dtype(8)).nbytes
+    outer_payload = t.astype(collectives._sum_dtype(16)).nbytes
+    assert hier.wire_bytes(n) == pytest.approx(
+        2 * 7 / 8 * inner_payload + 2 * 1 / 2 * outer_payload)
+
+    packed = collectives.PackedVoteWire(axes=("data",), n_workers=m)
+    payload2 = pack2bit_op(t)
+    assert packed.wire_bytes(n) == (m - 1) * payload2.nbytes
+
+    p8 = collectives.Pack8Wire(axes=("data",), n_workers=m)
+    payload8 = qsgd8_pack8_op(g, _qsgd8_param(g), 0)
+    assert p8.wire_bytes(n) == (m - 1) * payload8.nbytes
+    assert p8.scalar_bytes() == (m - 1) * jnp.float32(0).nbytes
+
+
+def test_make_vote_wire_pack8_validation():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    wire = collectives.make_vote_wire("allgather_packed", ("data",), mesh,
+                                      wire_format="pack8")
+    assert isinstance(wire, collectives.Pack8Wire)
+    # the pack8 payload cannot ride a fabric reduction
+    for impl in ("psum", "hier"):
+        with pytest.raises(ValueError, match="allgather_packed"):
+            collectives.make_vote_wire(impl, ("pod", "data"), mesh,
+                                       wire_format="pack8")
+    with pytest.raises(ValueError, match="payload format"):
+        collectives.make_vote_wire("psum", ("data",), mesh, wire_format="float")
+
+
+@pytest.mark.parametrize("backend", ["jnp", OTHER])
+def test_compress_leaf_pack8_wire_native(backend):
+    """compress_leaf(wire=Pack8Wire) returns the canonical int8 level payload
+    (fused kernel or padded reference — identical bytes) with the per-worker
+    decode scale riding alongside."""
+    wire = collectives.Pack8Wire(axes=("data",), n_workers=4)
+    g = jnp.asarray(np.random.RandomState(13).randn(7, 333), jnp.float32)
+    cfg = _cfg(compressor="qsgd8")
+    msg_plain = engine.compress_leaf(g, cfg, 9, 123, backend=backend)
+    msg_wire = engine.compress_leaf(g, cfg, 9, 123, backend=backend, wire=wire)
+    assert msg_plain.values.dtype == jnp.int8 and msg_plain.values.shape == g.shape
+    assert msg_wire.values.dtype == jnp.int8
+    view, _ = common.to_2d(msg_plain.values.reshape(-1))
+    assert np.array_equal(np.asarray(msg_wire.values), np.asarray(view))
+    assert np.array_equal(np.asarray(msg_wire.scale), np.asarray(msg_plain.scale))
+    assert float(msg_wire.scale) == float(_qsgd8_param(g))
+
+
+def test_compress_leaf_wire_format_mismatch_is_loud():
+    g = jnp.zeros((8,), jnp.float32)
+    # ternary wire refuses pack8/float specs (pre-existing contract)
+    pack2 = collectives.PackedVoteWire(axes=("data",), n_workers=4)
+    with pytest.raises(ValueError, match="ternary"):
+        engine.compress_leaf(g, _cfg(compressor="qsgd8"), 0, wire=pack2)
+    # pack8 wire refuses ternary/float specs
+    p8 = collectives.Pack8Wire(axes=("data",), n_workers=4)
+    with pytest.raises(ValueError, match="pack8"):
+        engine.compress_leaf(g, _cfg(compressor="sparsign"), 0, wire=p8)
+    with pytest.raises(ValueError, match="pack8"):
+        engine.compress_leaf(g, _cfg(compressor="identity"), 0, wire=p8)
+
+
+def test_server_ef_off_the_votes_wire_is_loud():
+    """scaled_sign_ef keeps a residual that only updates on the integer vote
+    wire; pairing it with a pack8/float compressor must fail at build time,
+    not silently train plain mean while carrying a dead full-model EF tree."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.state import LrSchedule
+    from repro.train.step_simple import TrainStepConfig, build_train_step
+    from repro.train.step_streamed import (StreamedStepConfig,
+                                           build_streamed_train_step)
+    model = _tiny_model()
+    mesh = make_host_mesh(1, 1)
+    for compressor in ("qsgd8", "identity"):
+        comp = CompressionConfig(compressor=compressor,
+                                 budget=BudgetConfig(kind="fixed", value=1.0),
+                                 server="scaled_sign_ef")
+        with pytest.raises(ValueError, match="error-feedback residual"):
+            build_train_step(model, TrainStepConfig(
+                compression=comp, lr=LrSchedule(base=0.05),
+                worker_axes=("data",)), mesh)
+        with pytest.raises(ValueError, match="error-feedback residual"):
+            build_streamed_train_step(model, StreamedStepConfig(
+                compression=comp, lr=LrSchedule(base=0.05),
+                worker_axes=("data",), fsdp_axis="data"), mesh)
+
+
+def test_simple_step_qsgd8_pack8_bitwise_equals_decoded_psum():
+    """The acceptance pin at M=1: qsgd8 end-to-end on the pack8 gather wire ==
+    the decoded-psum stream bitwise, jnp and kernel backends; the ledger
+    metric is emitted from the pack8 wire's accounting."""
+    from repro.launch.mesh import make_host_mesh
+    model = _tiny_model()
+    mesh = make_host_mesh(1, 1)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _tiny_batch(model.cfg.vocab_size)
+    comp = CompressionConfig(compressor="qsgd8",
+                             budget=BudgetConfig(kind="fixed", value=1.0),
+                             server="mean")
+    ref, m_ref = _one_step(model, params, batch, mesh, comp=comp, vote_impl="psum")
+    moved = any(not np.array_equal(a, np.asarray(b)) for a, b in zip(
+        jax.tree_util.tree_leaves(ref), jax.tree_util.tree_leaves(params)))
+    assert moved, "the step must actually update params"
+    for backend in ("jnp", OTHER):
+        got, m_got = _one_step(model, params, batch, mesh, comp=comp,
+                               vote_impl="allgather_packed", backend=backend)
+        for (ka, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(ref)[0],
+                jax.tree_util.tree_flatten_with_path(got)[0]):
+            assert np.array_equal(a, b), (backend, jax.tree_util.keystr(ka))
+        # M=1 ring collectives move zero bytes on both wires
+        assert float(m_got["wire_bytes_per_device"]) == 0.0
+    assert float(m_ref["wire_bytes_per_device"]) == 0.0
