@@ -31,6 +31,43 @@ def packed_real_bytes(cfg, n_data: int = 16, n_pod: int = 1) -> float:
                for s in jax.tree_util.tree_leaves(shapes))
 
 
+def packed_census_bytes(cfg, n_data: int = 16, n_pod: int = 1) -> float:
+    """Traced-jaxpr cross-check of the ``packed_real`` ledger column: run the
+    repro.analysis CollectiveCensus over the actual PackedVoteWire exchange
+    program (one trace per distinct leaf size), ring-costed at the same M.
+    Equals packed_real_bytes unless the wire implementation and the ledger
+    drift apart — which is exactly what the column is for."""
+    import math
+    from collections import Counter
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import collective_census
+    from repro.dist import compat
+    from repro.dist.collectives import PackedVoteWire
+    from repro.kernels import common as kcommon
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import Model
+
+    m = n_data * n_pod
+    wire = PackedVoteWire(axes=("data",), n_workers=m, backend="interpret")
+    mesh = make_host_mesh(1, 1)
+    P = jax.sharding.PartitionSpec
+    sizes = Counter(int(math.prod(s.shape))
+                    for s in jax.tree_util.tree_leaves(Model(cfg).param_shapes()))
+    total = 0.0
+    for n, count in sizes.items():
+        packed = jax.ShapeDtypeStruct(
+            (kcommon.canonical_rows(n), kcommon.LANES // 4), jnp.uint8)
+        fn = compat.shard_map(lambda p, n=n: wire.exchange(p, n, (n,)),
+                              mesh=mesh, in_specs=P(), out_specs=P(),
+                              check_vma=False)
+        census = collective_census(jax.make_jaxpr(fn)(packed))
+        total += census.total_bytes({"data": m}) * count
+    return total
+
+
 def wire_model(n_params: int, mode: str, n_data: int = 16, n_pod: int = 1,
                variant: str = "sparsign_int8") -> dict:
     """Per-device wire bytes for one round's gradient exchange (+FSDP traffic).
@@ -58,7 +95,7 @@ def main(fast: bool = False):
     print("# per-device wire bytes per round, by exchange variant (single pod, 16 data)")
     csv_header(["arch", "mode", "params_B", "fp32_dp", "sparsign_int8",
                 "vs_fp32", "fsdp_gather", "hier_2pod", "packed_model",
-                "packed_real", "pad_tax"])
+                "packed_real", "packed_census", "pad_tax"])
     for arch in ARCH_IDS:
         cfg = get_config(arch)
         n = cfg.param_count()
@@ -68,11 +105,15 @@ def main(fast: bool = False):
         hier = wire_model(n, mode, n_pod=2, variant="sparsign_int8_hier")
         packed = wire_model(n, mode, variant="sparsign_packed_allgather")
         real = packed_real_bytes(cfg)
+        census = packed_census_bytes(cfg)
+        assert census == real, (
+            f"{arch}: traced census {census:.6g} != ledger {real:.6g}")
         csv_row([arch, mode, f"{n/1e9:.2f}e9",
                  f"{base['grad_exchange']:.3e}", f"{ours['grad_exchange']:.3e}",
                  f"{base['grad_exchange']/ours['grad_exchange']:.1f}x",
                  f"{ours['fsdp_gather']:.3e}", f"{hier['grad_exchange']:.3e}",
                  f"{packed['grad_exchange']:.3e}", f"{real:.3e}",
+                 f"{census:.3e}",
                  f"{real / packed['grad_exchange'] - 1:+.1%}"])
 
 

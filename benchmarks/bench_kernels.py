@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_header, csv_row, timed
+from repro.analysis.jaxpr_audit import NoHbmIntermediate
 from repro.kernels import common as kcommon
 from repro.kernels.ef_server.ops import ef_server_op
 from repro.kernels.ef_server.ref import ef_scale, ef_server_ref
@@ -164,32 +165,39 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
     ]
     # structural guarantee behind the fused uplinks' byte count: no int8
     # ternary tensor at the HBM level (the two-pass chains have one of >= n),
-    # measured per backend on the exact chains timed above
-    fused_i8 = kcommon.int8_hbm_elems(lambda x: sparsign_pack2bit_op(x, 1.0, 7), g)
+    # measured per backend on the exact chains timed above.  The "no
+    # intermediate" side is the declarative NoHbmIntermediate rule from
+    # repro.analysis (same rule CI's `python -m repro.analysis` gate runs per
+    # CompressorSpec); the two-pass counts stay numeric for the JSON records.
+    no_i8 = NoHbmIntermediate(jnp.int8)
+    findings = no_i8.check(
+        "uplink_fused", lambda x: sparsign_pack2bit_op(x, 1.0, 7), g)
+    assert findings == [], "\n".join(f.render() for f in findings)
     two_pass_i8 = kcommon.int8_hbm_elems(
         lambda x: pack2bit_op(sparsign_op(x, 1.0, 7)), g)
     two_pass_jnp_i8 = kcommon.int8_hbm_elems(uplink_jnp, g)
-    assert fused_i8 == 0, f"fused uplink materializes {fused_i8} int8 elems in HBM"
     assert two_pass_i8 >= n and two_pass_jnp_i8 >= n
     int8_hbm = {("uplink_fused", "pallas"): 0,
                 ("uplink_two_pass", "pallas"): two_pass_i8,
                 ("uplink_two_pass", "jnp"): two_pass_jnp_i8}
     for label, rule, param in ternary_uplinks:
-        f_i8 = kcommon.int8_hbm_elems(
+        findings = no_i8.check(
+            f"uplink_fused_{label}",
             lambda x: ternary_pack2bit_op(x, param, 7, rule=rule), g)
+        assert findings == [], "\n".join(f.render() for f in findings)
         t_i8 = kcommon.int8_hbm_elems(
             lambda x: pack2bit_op(ternary_compress_op(x, param, 7, rule=rule)), g)
-        assert f_i8 == 0, (
-            f"fused {label} uplink materializes {f_i8} int8 elems in HBM")
         assert t_i8 >= n
         int8_hbm[(f"uplink_fused_{label}", "pallas")] = 0
         int8_hbm[(f"uplink_two_pass_{label}", "pallas")] = t_i8
     # pack8 structural pin: the fused qsgd8 uplink has no int32 level tensor
-    # at the HBM level (<= 1 allows the to_2d pad's scatter-start index); the
-    # decoded chain necessarily re-reads its int8 levels for the f32 decode
+    # at the HBM level (limit=1 allows the to_2d pad's scatter-start index,
+    # exactly qsgd8's declared hbm_limits); the decoded chain necessarily
+    # re-reads its int8 levels for the f32 decode
+    findings = NoHbmIntermediate(jnp.int32, limit=1).check(
+        "uplink_fused_qsgd8", lambda x: qsgd8_pack8_op(x, s8, seed8), g)
+    assert findings == [], "\n".join(f.render() for f in findings)
     f8_i32 = kcommon.int32_hbm_elems(lambda x: qsgd8_pack8_op(x, s8, seed8), g)
-    assert f8_i32 <= 1, (
-        f"fused qsgd8 uplink materializes {f8_i32} int32 elems in HBM")
     d8_i8 = kcommon.int8_hbm_elems(
         lambda x: qsgd8_op(x, s8, seed8).astype(jnp.float32)
         * jnp.float32(s8), g)

@@ -1,0 +1,25 @@
+"""`repro.analysis` — the rule-based static-analysis subsystem.
+
+Three passes share one ``Rule``/``Finding``/``report`` framework
+(``analysis.framework``):
+
+  jaxpr_audit — traceable-program rules: ``NoHbmIntermediate`` (the
+                per-CompressorSpec generalization of the old hand-written
+                ``int8_hbm_elems`` pins), ``CollectiveCensus`` (collective
+                payload bytes vs the VoteWire ledger) and
+                ``DtypePromotionDrift`` (f32 leaks on bf16 leaf paths).
+  hlo_audit   — the post-SPMD collective census (``launch/hlo_stats``) pinned
+                against the jaxpr census and the ledger within a documented
+                padding tolerance.
+  repolint    — AST architecture lint: no compressor name-branching outside
+                ``core/compressors.SPECS``, no raw ``lax`` collectives outside
+                ``dist/collectives.py``, no jnp array allocation inside Pallas
+                kernel bodies, SPECS completeness. Zero-entry allowlist.
+
+``python -m repro.analysis`` runs everything and exits nonzero on any error
+finding — the blocking CI gate.
+"""
+
+from repro.analysis.framework import Finding, Report, Rule, report
+
+__all__ = ["Finding", "Report", "Rule", "report"]

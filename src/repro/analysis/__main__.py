@@ -1,0 +1,45 @@
+"""``python -m repro.analysis`` — run every static-analysis pass and exit
+nonzero on any error finding. This is the blocking CI gate.
+
+Order: AST repo-lint first (cheap, no tracing), then per-spec traceable-program
+rules, then the four wire-mode collective censuses, then the HLO agreement
+check (compiles one step).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.analysis import drivers, report
+from repro.analysis.framework import merge
+from repro.analysis.repolint import run_repolint
+
+
+def main(argv=None) -> int:
+    reports = []
+
+    findings, checks = run_repolint()
+    reports.append(report(findings, checks))
+    print(f"repolint: {checks} checks, {len(findings)} findings", flush=True)
+
+    findings, checks = drivers.run_spec_checks()
+    reports.append(report(findings, checks))
+    print(f"spec rules: {checks} checks, {len(findings)} findings", flush=True)
+
+    findings, checks = drivers.run_census_checks()
+    reports.append(report(findings, checks))
+    print(f"collective census: {checks} checks, {len(findings)} findings",
+          flush=True)
+
+    findings, checks = drivers.hlo_check()
+    reports.append(report(findings, checks))
+    print(f"hlo agreement: {checks} checks, {len(findings)} findings",
+          flush=True)
+
+    rep = merge(reports)
+    print(rep.render())
+    return rep.exit_code()
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

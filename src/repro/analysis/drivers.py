@@ -1,0 +1,210 @@
+"""Shared drivers for the analysis CLI and tests: the tiny-model step builds
+whose traced collectives the census/HLO passes pin against the VoteWire ledger.
+
+One definition serves both ``python -m repro.analysis`` and
+tests/test_analysis.py, so the blocking CI gate and the tier-1 suite audit the
+SAME programs.
+
+Census-at-hypothetical-M mechanics: the step is built and traced on a 1-device
+mesh (tier-1 has no multi-device hardware), but the equation *structure* —
+which collectives run, over which named axes, with what operand shapes — is
+independent of the axis size, so the ring byte model is evaluated at
+``HYPOTHETICAL_M`` workers to make every term non-vacuous. Two constraints
+make this sound:
+
+  * M <= 127 keeps the hypothetical worker count in the same int8
+    ``_sum_dtype`` bucket as the M=1 build, so the traced psum payload dtype
+    is the one a real M-worker build would use;
+  * the step is built with ``backend="interpret"`` — the jnp backend of the
+    gather wires SKIPS the all-gather (it is the fp32-psum oracle program),
+    so only the kernel backends trace the honest wire.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_audit import HloJaxprAgreement, hlo_collective_stats
+from repro.analysis.jaxpr_audit import (CollectiveCensus, DtypePromotionDrift,
+                                        check_fused_uplink, collective_census)
+
+#: hypothetical worker count the census ring model is costed at: > 1 so every
+#: ring term is non-vacuous, <= 127 so the int8 _sum_dtype bucket still holds
+HYPOTHETICAL_M = 16
+
+#: wire mode -> (compressor, server, vote_impl, budget): one representative
+#: registry row per mode (engine.wire_mode must resolve to the key)
+MODE_SETUPS = {
+    "votes": ("sparsign", "majority_vote", "psum", 2.0),
+    "scaled_votes": ("terngrad", "mean", "psum", 1.0),
+    "pack8": ("qsgd8", "mean", "allgather_packed", 1.0),
+    "decoded": ("qsgd8", "mean", "psum", 1.0),
+}
+
+
+def tiny_model():
+    from repro.configs.base import LayerSpec, ModelConfig
+    from repro.models.model import Model
+    cfg = ModelConfig(name="analysis-tiny", family="dense", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=64, pattern=(LayerSpec(mixer="attn"),),
+                      dtype="float32", attn_chunk=8, q_chunk=8, loss_chunk=8,
+                      remat=False)
+    return Model(cfg)
+
+
+def tiny_batch(vocab: int, b: int = 2, s: int = 8, seed: int = 0):
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    return {
+        "inputs": jnp.asarray(rng.randint(0, vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.randint(0, vocab, (b, s)), jnp.int32),
+        "positions": jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32),
+    }
+
+
+def build_mode_step(mode: str):
+    """Build the 1-device `simple` train step whose wire negotiation resolves
+    to ``mode``; returns (step, state, batch, model, mesh, comp)."""
+    from repro.core import engine
+    from repro.core.algorithm import CompressionConfig
+    from repro.core.budgets import BudgetConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.state import LrSchedule, init_state
+    from repro.train.step_simple import TrainStepConfig, build_train_step
+
+    compressor, server, vote_impl, budget = MODE_SETUPS[mode]
+    comp = CompressionConfig(compressor=compressor,
+                             budget=BudgetConfig(kind="fixed", value=budget),
+                             server=server)
+    resolved = engine.wire_mode(comp, vote_impl=vote_impl)
+    assert resolved == mode, (mode, resolved)
+    model = tiny_model()
+    mesh = make_host_mesh(1, 1)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = tiny_batch(model.cfg.vocab_size)
+    scfg = TrainStepConfig(compression=comp, lr=LrSchedule(base=0.05),
+                           worker_axes=("data",), vote_impl=vote_impl,
+                           donate=False, backend="interpret")
+    step = build_train_step(model, scfg, mesh)
+    state = init_state(params, server=server, seed=7)
+    return step, state, batch, model, mesh, comp
+
+
+def mode_ledger(mode: str, model, m: int):
+    """(payload_bytes, scalar_bytes) the VoteWire ledger bills for one round
+    of the tiny model at a hypothetical worker count ``m`` — split the way the
+    census splits (array payloads vs protocol scalars). The split re-sums to
+    ``collectives.uplink_ledger`` exactly (asserted per leaf)."""
+    from repro.core import engine
+    from repro.core.algorithm import CompressionConfig
+    from repro.core.budgets import BudgetConfig
+    from repro.dist import collectives
+
+    compressor, server, vote_impl, budget = MODE_SETUPS[mode]
+    comp = CompressionConfig(compressor=compressor,
+                             budget=BudgetConfig(kind="fixed", value=budget),
+                             server=server)
+    share = engine.needs_shared_linf(comp)
+    if mode == "pack8":
+        wire = collectives.Pack8Wire(axes=("data",), n_workers=m)
+    else:
+        wire = collectives.VoteWire(axes=("data",), n_workers=m)
+    payload = scalar = 0.0
+    for s in jax.tree_util.tree_leaves(model.param_shapes()):
+        n = int(math.prod(s.shape))
+        p = (collectives.decoded_wire_bytes(n, m) if mode == "decoded"
+             else wire.wire_bytes(n))
+        sc = (wire.scalar_bytes() if mode == "pack8" else 0.0) \
+            + (collectives.allreduce_scalar_bytes(m) if share else 0.0)
+        assert abs((p + sc) - collectives.uplink_ledger(
+            mode, wire, n, share_linf=share)) < 1e-6, (mode, n)
+        payload += p
+        scalar += sc
+    return payload, scalar
+
+
+def traced_step_census(mode: str):
+    """Trace the mode's built step and census its collectives. Returns
+    (census, model)."""
+    from repro.dist import compat
+
+    step, state, batch, model, mesh, _ = build_mode_step(mode)
+    with compat.set_mesh(mesh):
+        closed = jax.make_jaxpr(step)(state, batch)
+    return collective_census(closed), model
+
+
+def census_check(mode: str, m: int = HYPOTHETICAL_M):
+    """The acceptance pin: traced collective array-payload bytes == VoteWire
+    ledger bytes at ``m`` hypothetical workers, scalar traffic covers the
+    protocol scalars. Returns (findings, census, ledger_payload, ledger_scalar)."""
+    census, model = traced_step_census(mode)
+    payload, scalar = mode_ledger(mode, model, m)
+    rule = CollectiveCensus(axis_sizes={"data": m})
+    findings = rule.check(f"step[{mode}]", census,
+                          ledger_payload=payload, ledger_scalar_min=scalar)
+    return findings, census, payload, scalar
+
+
+def run_census_checks(m: int = HYPOTHETICAL_M):
+    findings, checks = [], 0
+    for mode in MODE_SETUPS:
+        f, _, _, _ = census_check(mode, m)
+        findings += f
+        checks += 1
+    return findings, checks
+
+
+def hlo_check(mode: str = "votes"):
+    """Compile one step and pin the post-SPMD HLO collective bytes against the
+    jaxpr census and the ledger at the BUILD worker count. Tier-1 builds on
+    one device, where every ring term is zero on all three sides — degenerate
+    but honest; the nonzero byte math of the HLO model is pinned by the
+    synthetic-HLO tests in tests/test_analysis.py."""
+    from repro.dist import compat
+
+    step, state, batch, model, mesh, _ = build_mode_step(mode)
+    with compat.set_mesh(mesh):
+        stats = hlo_collective_stats(step, state, batch, default_group=1)
+        closed = jax.make_jaxpr(step)(state, batch)
+    census = collective_census(closed)
+    m = int(mesh.shape["data"])
+    jaxpr_bytes = census.total_bytes({"data": m})
+    payload, scalar = mode_ledger(mode, model, m)
+    rule = HloJaxprAgreement()
+    findings = rule.check(f"hlo[{mode}]", hlo_bytes=stats.wire_bytes,
+                          jaxpr_bytes=jaxpr_bytes,
+                          ledger_bytes=payload + scalar)
+    return findings, 1
+
+
+def run_spec_checks():
+    """Per-registry-row traceable-program rules: every fused wire op against
+    its declared ``hbm_limits`` contract (the old hand-written int8/int32 pins,
+    now spec-driven), plus the bf16 promotion-drift pin — a declared-bf16
+    gradient must reach the wire without a full-size f32 HBM copy."""
+    import numpy as np
+    from repro.core.compressors import SPECS
+
+    findings, checks = [], 0
+    g32 = jnp.asarray(np.random.RandomState(11).randn(4096), jnp.float32)
+    g16 = g32.astype(jnp.bfloat16)
+    drift = DtypePromotionDrift(banned=("float32",), min_elems=2)
+    for spec in SPECS.values():
+        if spec.fused_pack_op is None:
+            continue
+        findings += check_fused_uplink(spec, g32)
+        checks += 1
+        # param resolved OUTSIDE the traced fn: the scale statistic itself
+        # legitimately reads g in f32 — the pin is about the uplink path
+        param = spec.local_scale(g16) if spec.local_scale is not None else 1.0
+        findings += drift.check(
+            f"{spec.name}.fused_pack_op[bf16]",
+            lambda x: spec.fused_pack_op(x, param, jnp.uint32(7),
+                                         interpret=True), g16)
+        checks += 1
+    return findings, checks

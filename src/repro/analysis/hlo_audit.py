@@ -1,0 +1,67 @@
+"""HLO auditor: the post-SPMD collective census as an analysis pass.
+
+``launch/hlo_stats.parse_collectives`` (the dry-run helper) supplies the
+parser and the ring byte model; this pass compiles a step, parses the
+compiled module's text, and pins the post-SPMD census against the jaxpr-level
+census and the VoteWire ledger.
+
+Tolerance: the jaxpr census and the ledger are built from the same padded
+canonical-view buffers, so they agree exactly; the compiler may additionally
+pad/fuse collective operands (tile alignment, scalar widening to the minimum
+transfer granule), so HLO-vs-ledger agreement is pinned within
+``PAD_TOLERANCE`` (documented relative slack, matching the padding caveat in
+launch/hlo_stats.py). On a 1-device tier-1 build all ring terms are zero on
+both sides — the math itself is pinned by synthetic-HLO tests in
+tests/test_analysis.py.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.framework import Rule
+from repro.launch.hlo_stats import CollectiveStats, parse_collectives
+
+#: relative slack for HLO-vs-ledger byte agreement: compiler-side operand
+#: padding/widening only — structural disagreement (a missing or extra
+#: collective) is orders of magnitude larger
+PAD_TOLERANCE = 0.05
+
+
+def hlo_collective_stats(fn, *args, default_group: int = 1) -> CollectiveStats:
+    """Compile ``fn(*args)`` (jit if not already) and parse the post-SPMD
+    collective census out of the compiled HLO text."""
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    compiled = jitted.lower(*args).compile()
+    return parse_collectives(compiled.as_text(), default_group=default_group)
+
+
+class HloJaxprAgreement(Rule):
+    """Post-SPMD HLO collective bytes must agree with the jaxpr census and
+    the VoteWire ledger within PAD_TOLERANCE."""
+
+    name = "hlo-jaxpr-agreement"
+    description = "compiled-HLO census == jaxpr census == ledger (± padding)"
+
+    def __init__(self, tolerance: float = PAD_TOLERANCE):
+        self.tolerance = float(tolerance)
+
+    def _close(self, a: float, b: float) -> bool:
+        return abs(a - b) <= self.tolerance * max(abs(a), abs(b), 1.0)
+
+    def check(self, label: str, *, hlo_bytes: float, jaxpr_bytes: float,
+              ledger_bytes: float) -> list:
+        findings = []
+        if not self._close(hlo_bytes, jaxpr_bytes):
+            findings.append(self.finding(
+                label,
+                f"post-SPMD HLO collective bytes {hlo_bytes:.1f} disagree "
+                f"with the jaxpr census {jaxpr_bytes:.1f} beyond the "
+                f"{self.tolerance:.0%} padding tolerance"))
+        if not self._close(hlo_bytes, ledger_bytes):
+            findings.append(self.finding(
+                label,
+                f"post-SPMD HLO collective bytes {hlo_bytes:.1f} disagree "
+                f"with the VoteWire ledger {ledger_bytes:.1f} beyond the "
+                f"{self.tolerance:.0%} padding tolerance"))
+        return findings

@@ -1,0 +1,360 @@
+"""Jaxpr auditor: traceable-program rules over recursively-walked jaxprs.
+
+The walker (``iter_eqns``) is the generalization of the old
+``kernels/common.hbm_elems`` visitor (which now delegates here). It descends
+into every sub-jaxpr an equation carries — scan/while/cond/pjit bodies,
+``custom_jvp_call``/``custom_vjp_call``/``closed_call`` and their
+post-AD ``*_jaxpr`` forms via an explicit primitive->param map, plus a generic
+sweep over list/tuple/dict-valued params for anything the map doesn't name —
+but never into a ``pallas_call`` kernel body, whose values live in VMEM
+registers, not HBM.
+
+Rules:
+
+  NoHbmIntermediate(dtype, limit)  — at most ``limit`` elements of ``dtype``
+      materialized between ops. Declared per-``CompressorSpec``
+      (``spec.hbm_limits``); ``check_fused_uplink`` runs a spec's declared
+      rules against its own fused wire op — the declarative replacement for
+      every hand-written int8/int32 pin.
+  CollectiveCensus(axis_sizes, tolerance) — tally psum/all_gather/ppermute/...
+      payload bytes of a traced step under the ring-collective byte model at
+      *hypothetical* worker-axis sizes, and pin them against the VoteWire
+      ledger. Tracing happens on a 1-device mesh (tier-1); the eqn structure
+      is M-independent, so evaluating the model at M=16 gives a non-vacuous
+      byte pin without multi-device hardware. M must stay <= 127 so the
+      build-time ``_sum_dtype`` bucket (int8) matches the hypothetical M.
+  DtypePromotionDrift(banned, min_elems) — flags ``banned``-dtype tensors of
+      >= min_elems elements on a declared-narrow (e.g. bf16) leaf path: a
+      full-size f32 HBM intermediate on a bf16 uplink is a silent 2x traffic
+      regression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import Counter
+from typing import Callable, Iterable, Iterator, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.framework import Finding, Rule
+
+try:
+    from jax.extend import core as jcore
+except ImportError:  # pragma: no cover — very old jax
+    from jax import core as jcore
+
+
+# ---------------------------------------------------------------------------
+# The walker
+# ---------------------------------------------------------------------------
+
+#: primitive -> param keys that carry its sub-jaxprs. The generic param sweep
+#: below finds ClosedJaxpr/Jaxpr values wherever they sit, so most primitives
+#: need no entry; the explicit map exists for the call-like primitives whose
+#: descent is a *contract* (the old walker's blind spot): custom_jvp/custom_vjp
+#: calls, closed_call, and the post-partial-eval ``*_call_jaxpr`` forms.
+EXPLICIT_SUB_JAXPRS: dict[str, tuple] = {
+    "custom_jvp_call": ("call_jaxpr",),
+    "custom_jvp_call_jaxpr": ("fun_jaxpr",),
+    "custom_vjp_call": ("call_jaxpr",),
+    "custom_vjp_call_jaxpr": ("fun_jaxpr",),
+    "closed_call": ("call_jaxpr",),
+    "core_call": ("call_jaxpr",),
+    "remat2": ("jaxpr",),
+    "checkpoint": ("jaxpr",),
+    "pjit": ("jaxpr",),
+    "scan": ("jaxpr",),
+    "while": ("cond_jaxpr", "body_jaxpr"),
+    "cond": ("branches",),
+}
+
+
+def _param_jaxprs(value, seen: set) -> Iterator:
+    """Yield every (unvisited) Jaxpr reachable from one param value:
+    ClosedJaxpr/Jaxpr directly, or nested in lists/tuples/dicts."""
+    if isinstance(value, jcore.ClosedJaxpr):
+        value = value.jaxpr
+    if isinstance(value, jcore.Jaxpr):
+        if id(value) not in seen:
+            seen.add(id(value))
+            yield value
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _param_jaxprs(v, seen)
+    elif isinstance(value, dict):
+        for v in value.values():
+            yield from _param_jaxprs(v, seen)
+
+
+def sub_jaxprs(eqn) -> Iterator:
+    """All sub-jaxprs of one equation: the explicit contract params first,
+    then the generic sweep (deduplicated, so nothing is visited twice)."""
+    seen: set = set()
+    for key in EXPLICIT_SUB_JAXPRS.get(eqn.primitive.name, ()):
+        if key in eqn.params:
+            yield from _param_jaxprs(eqn.params[key], seen)
+    for value in eqn.params.values():
+        yield from _param_jaxprs(value, seen)
+
+
+def iter_eqns(jaxpr, *, enter_pallas: bool = False) -> Iterator:
+    """Depth-first over every equation of ``jaxpr`` and its sub-jaxprs.
+    ``enter_pallas=False`` (the HBM view) stops at pallas_call boundaries."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call" and not enter_pallas:
+            continue
+        for sub in sub_jaxprs(eqn):
+            yield from iter_eqns(sub, enter_pallas=enter_pallas)
+
+
+def _as_jaxpr(fn_or_jaxpr, args):
+    if isinstance(fn_or_jaxpr, jcore.ClosedJaxpr):
+        return fn_or_jaxpr.jaxpr
+    if isinstance(fn_or_jaxpr, jcore.Jaxpr):
+        return fn_or_jaxpr
+    return jax.make_jaxpr(fn_or_jaxpr)(*args).jaxpr
+
+
+def hbm_usage(fn, *args, dtypes: Sequence = (jnp.int8,)) -> dict:
+    """Element count per dtype of arrays materialized *between* ops (HBM-level
+    traffic) when tracing ``fn(*args)``. Pallas kernel bodies excluded."""
+    want = {jnp.dtype(d): 0 for d in dtypes}
+    for eqn in iter_eqns(_as_jaxpr(fn, args)):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt in want:
+                want[dt] += math.prod(aval.shape)
+    return want
+
+
+def hbm_elems(fn, *args, dtype=jnp.int8) -> int:
+    """Single-dtype view of ``hbm_usage`` — the engine of the historical
+    ``kernels.common.int8_hbm_elems``/``int32_hbm_elems`` pins."""
+    return hbm_usage(fn, *args, dtypes=(dtype,))[jnp.dtype(dtype)]
+
+
+# ---------------------------------------------------------------------------
+# NoHbmIntermediate — the per-spec fused-uplink contract
+# ---------------------------------------------------------------------------
+
+class NoHbmIntermediate(Rule):
+    """At most ``limit`` elements of ``dtype`` may hit HBM in the traced
+    program. ``limit=0`` is the fused-kernel guarantee (gradient -> wire bytes
+    in one pass); qsgd8 declares ``("int32", 1)`` — the single scatter-start
+    index of the canonical-view pad, never an O(n) level tensor."""
+
+    name = "no-hbm-intermediate"
+    description = "fused ops must not materialize banned-dtype HBM tensors"
+
+    def __init__(self, dtype, limit: int = 0):
+        self.dtype = jnp.dtype(dtype)
+        self.limit = int(limit)
+
+    def check(self, label: str, fn, *args) -> list:
+        count = hbm_elems(fn, *args, dtype=self.dtype)
+        if count > self.limit:
+            return [self.finding(
+                label,
+                f"{count} {self.dtype.name} elements materialized at the HBM "
+                f"level (declared limit {self.limit})")]
+        return []
+
+
+def spec_hbm_rules(spec) -> tuple:
+    """The NoHbmIntermediate rules one CompressorSpec row declares."""
+    return tuple(NoHbmIntermediate(dtype, limit) for dtype, limit in spec.hbm_limits)
+
+
+def check_fused_uplink(spec, g, *, seed: int = 7, param=None) -> list:
+    """Run a spec's declared HBM rules against its own fused wire op.
+
+    ``param`` defaults to the spec's local scale statistic (scale-carrying
+    rows) or 1.0 (scale-free rows) — the counts are structural, not
+    param-dependent. The seed is passed as uint32 exactly as the engine
+    supplies it, so no stray i32->u32 scalar conversion muddies the count.
+    """
+    if spec.fused_pack_op is None:
+        return []
+    if param is None:
+        param = spec.local_scale(g) if spec.local_scale is not None else 1.0
+    findings: list = []
+    for rule in spec_hbm_rules(spec):
+        findings += rule.check(
+            f"{spec.name}.fused_pack_op",
+            lambda x: spec.fused_pack_op(x, param, jnp.uint32(seed),
+                                         interpret=True), g)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# CollectiveCensus — collective payload bytes vs the VoteWire ledger
+# ---------------------------------------------------------------------------
+
+#: ring-model family per collective primitive (mirrors launch/hlo_stats.py and
+#: the VoteWire ledgers — one byte model, three places that must agree)
+COLLECTIVE_PRIMS = ("psum", "pmax", "pmin", "all_gather", "all_to_all",
+                    "ppermute", "reduce_scatter", "psum_scatter")
+
+
+def _named_axes(eqn) -> tuple:
+    ax = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+    if not isinstance(ax, (tuple, list)):
+        ax = (ax,)
+    return tuple(a for a in ax if isinstance(a, str))
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRecord:
+    """One collective equation: what ships, over which named axes."""
+
+    primitive: str
+    axes: tuple
+    in_elems: int      # total operand elements (1 => scalar protocol traffic)
+    in_bytes: int      # total operand payload bytes
+    out_bytes: int
+
+    def group_size(self, axis_sizes: Mapping[str, int]) -> int:
+        m = 1
+        for a in self.axes:
+            m *= int(axis_sizes[a])
+        return m
+
+    def ring_bytes(self, axis_sizes: Mapping[str, int]) -> float:
+        """Per-device wire bytes under the ring model at the given axis sizes
+        (the same first principles as hlo_stats and the VoteWire ledgers)."""
+        m = self.group_size(axis_sizes)
+        if m <= 1:
+            return 0.0
+        if self.primitive in ("psum", "pmax", "pmin"):      # all-reduce
+            return 2.0 * (m - 1) / m * self.in_bytes
+        if self.primitive == "all_gather":                  # transmit to M-1 peers
+            return float((m - 1) * self.in_bytes)
+        if self.primitive in ("reduce_scatter", "psum_scatter"):
+            return float((m - 1) * self.out_bytes)
+        if self.primitive == "all_to_all":
+            return (m - 1) / m * self.in_bytes
+        return float(self.in_bytes)                         # ppermute
+
+
+@dataclasses.dataclass(frozen=True)
+class Census:
+    """Every collective of one traced program, byte-costable at any
+    hypothetical axis sizes."""
+
+    records: tuple
+
+    def counts(self) -> Counter:
+        return Counter(r.primitive for r in self.records)
+
+    def total_bytes(self, axis_sizes, *, min_elems: int = 0,
+                    max_elems: Optional[int] = None) -> float:
+        return sum(r.ring_bytes(axis_sizes) for r in self.records
+                   if r.in_elems >= min_elems
+                   and (max_elems is None or r.in_elems <= max_elems))
+
+    def payload_bytes(self, axis_sizes) -> float:
+        """Array-payload traffic (>= 2 elements): the wire-ledger term."""
+        return self.total_bytes(axis_sizes, min_elems=2)
+
+    def scalar_bytes(self, axis_sizes) -> float:
+        """Scalar protocol traffic: decode scales, n_sel/loss/nnz metrics."""
+        return self.total_bytes(axis_sizes, max_elems=1)
+
+
+def collective_census(fn, *args) -> Census:
+    """Trace ``fn(*args)`` (or take a ready jaxpr) and record every
+    collective equation, descending like the HBM walker."""
+    records = []
+    for eqn in iter_eqns(_as_jaxpr(fn, args)):
+        if eqn.primitive.name not in COLLECTIVE_PRIMS:
+            continue
+        in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+        out_avals = [v.aval for v in eqn.outvars if hasattr(v, "aval")]
+        records.append(CollectiveRecord(
+            primitive=eqn.primitive.name,
+            axes=_named_axes(eqn),
+            in_elems=sum(math.prod(a.shape) for a in in_avals),
+            in_bytes=sum(math.prod(a.shape) * jnp.dtype(a.dtype).itemsize
+                         for a in in_avals),
+            out_bytes=sum(math.prod(a.shape) * jnp.dtype(a.dtype).itemsize
+                          for a in out_avals),
+        ))
+    return Census(records=tuple(records))
+
+
+class CollectiveCensus(Rule):
+    """Pin a traced step's collective bytes against the VoteWire ledger.
+
+    Array payloads (>= 2 elements) must equal the ledger's ``wire_bytes`` sum
+    exactly (within ``tolerance`` — 0 by default: the ledger is built from the
+    same padded buffer sizes the collectives ship). Scalar traffic must cover
+    at least the ledger's ``scalar_bytes`` protocol term; the census may
+    legitimately exceed it with metric reductions (n_sel / loss / nnz), which
+    the ledger deliberately does not bill to the wire.
+    """
+
+    name = "collective-census"
+    description = "traced collective bytes must match the VoteWire ledger"
+
+    def __init__(self, axis_sizes: Mapping[str, int], tolerance: float = 0.0):
+        self.axis_sizes = dict(axis_sizes)
+        self.tolerance = float(tolerance)
+
+    def check(self, label: str, census: Census, *, ledger_payload: float,
+              ledger_scalar_min: float = 0.0) -> list:
+        findings = []
+        payload = census.payload_bytes(self.axis_sizes)
+        tol = self.tolerance * max(abs(ledger_payload), 1.0)
+        if abs(payload - ledger_payload) > tol:
+            findings.append(self.finding(
+                label,
+                f"collective array-payload bytes {payload:.1f} != VoteWire "
+                f"ledger {ledger_payload:.1f} at axis sizes "
+                f"{self.axis_sizes} (census: {dict(census.counts())})"))
+        scal = census.scalar_bytes(self.axis_sizes)
+        if scal + 1e-9 < ledger_scalar_min:
+            findings.append(self.finding(
+                label,
+                f"scalar collective bytes {scal:.1f} do not cover the "
+                f"ledger's protocol scalars {ledger_scalar_min:.1f}"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# DtypePromotionDrift — f32 leaks on declared-narrow leaf paths
+# ---------------------------------------------------------------------------
+
+class DtypePromotionDrift(Rule):
+    """No >= min_elems tensor of a banned (wide) dtype may hit HBM on a path
+    declared narrow — e.g. a bf16 gradient leaf reaching the packed wire must
+    not round-trip through a full-size f32 copy (in-register f32 math inside
+    kernel bodies is fine and expected)."""
+
+    name = "dtype-promotion-drift"
+    description = "no full-size wide-dtype HBM tensors on narrow leaf paths"
+
+    def __init__(self, banned: Sequence = ("float32",), min_elems: int = 2):
+        self.banned = tuple(jnp.dtype(d) for d in banned)
+        self.min_elems = int(min_elems)
+
+    def check(self, label: str, fn, *args) -> list:
+        leaks: Counter = Counter()
+        for eqn in iter_eqns(_as_jaxpr(fn, args)):
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                dt = getattr(aval, "dtype", None)
+                if dt in self.banned and math.prod(aval.shape) >= self.min_elems:
+                    leaks[(eqn.primitive.name, dt.name)] += math.prod(aval.shape)
+        if not leaks:
+            return []
+        worst = ", ".join(f"{prim}->{dt}({n})" for (prim, dt), n
+                          in leaks.most_common(3))
+        return [self.finding(
+            label,
+            f"{sum(leaks.values())} wide-dtype elements (>= {self.min_elems} "
+            f"per tensor) materialized on a declared-narrow path: {worst}")]

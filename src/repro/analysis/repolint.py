@@ -1,0 +1,287 @@
+"""AST repo-lint: the architecture invariants the registry refactors bought,
+enforced at parse time with a **zero-entry allowlist**.
+
+Rules (scope: every ``.py`` under ``src/repro``):
+
+  no-compressor-name-branching — comparing an identifier that mentions
+      ``compressor``/``algorithm`` against a ``SPECS`` name (or a
+      ``startswith`` prefix of one) is dispatch-by-name: the drift PR 4/5
+      eradicated. All capability questions go through
+      ``core.compressors.SPECS`` lookups. (The registry module itself — where
+      the names are *defined* — is exempt.)
+  no-raw-collectives — ``lax.psum``/``all_gather``/... outside
+      ``dist/collectives.py`` bypasses the VoteWire ledger: bytes move that no
+      ledger bills. Use ``collectives.scalar_psum`` (metrics),
+      ``collectives.fsdp_all_gather`` (param gathers) or a VoteWire.
+      ``lax.axis_index`` is fine — it moves no payload.
+  no-jnp-alloc-in-kernel — inside a Pallas kernel body (any function with a
+      ``*_ref`` parameter in ``kernels/*/kernel.py``), literal-shape jnp
+      allocators (``jnp.zeros``/``arange``/``asarray``/...) don't lower on
+      TPU (1-D iota, host-shape allocation — scratch memory belongs in
+      ``scratch_shapes``). Elementwise jnp math and ``*_like`` constructors
+      (shape taken from a Ref operand) are kernel-legal and allowed.
+  specs-complete — runtime registry lint: every ``CompressorSpec`` row is
+      fully populated (fused ops must declare their ``hbm_limits`` contract,
+      ``uplink_bits`` must name a bit model) and the legacy ``COMPRESSORS``
+      view is exactly the derived table.
+
+The allowlist is the escape hatch for a *temporarily* grandfathered site; it
+ships empty and tests pin it empty.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, Optional
+
+from repro.analysis.framework import Finding, Rule
+
+#: (rule_name, repo-relative posix path) pairs exempted from that rule.
+#: SHIPS EMPTY — tests/test_analysis.py pins ``len(ALLOWLIST) == 0``.
+ALLOWLIST: frozenset = frozenset()
+
+#: the package root this lint walks (src/repro)
+PKG_ROOT = Path(__file__).resolve().parents[1]
+
+_BANNED_COLLECTIVES = frozenset({
+    "psum", "pmean", "pmax", "pmin", "all_gather", "all_to_all",
+    "ppermute", "pshuffle", "psum_scatter", "reduce_scatter",
+})
+
+#: literal-shape allocators + iota family; *_like variants deliberately absent
+_JNP_ALLOC_FNS = frozenset({
+    "zeros", "ones", "full", "empty", "arange", "linspace", "logspace",
+    "eye", "tri", "identity", "indices", "asarray", "array", "frombuffer",
+    "fromfunction", "meshgrid",
+})
+
+_NAME_TOKENS = ("compressor", "algorithm")
+
+
+def _dotted(node) -> Optional[str]:
+    """'jax.lax.psum' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _mentions_compressor(node) -> bool:
+    """Does this expression involve an identifier naming a compressor/algorithm?"""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and any(t in n.id.lower() for t in _NAME_TOKENS):
+            return True
+        if isinstance(n, ast.Attribute) and any(t in n.attr.lower() for t in _NAME_TOKENS):
+            return True
+    return False
+
+
+def _spec_names() -> frozenset:
+    from repro.core.compressors import SPECS
+    return frozenset(SPECS)
+
+
+def _str_consts(node) -> list:
+    """String literals of a comparator: a Constant, or the elements of a
+    literal tuple/list/set."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+class NoCompressorNameBranching(Rule):
+    name = "no-compressor-name-branching"
+    description = "dispatch on compressor names only via core.compressors.SPECS"
+
+    EXEMPT = ("repro/core/compressors.py",)
+
+    def check(self, tree: ast.AST, relpath: str) -> list:
+        if relpath in self.EXEMPT:
+            return []
+        names = _spec_names()
+        findings = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Compare) and any(
+                    isinstance(op, (ast.Eq, ast.NotEq, ast.In, ast.NotIn))
+                    for op in node.ops):
+                sides = [node.left, *node.comparators]
+                lits = [s for side in sides for s in _str_consts(side)]
+                hit = sorted(set(lits) & names)
+                if hit and any(_mentions_compressor(s) for s in sides
+                               if not _str_consts(s)):
+                    findings.append(self.finding(
+                        f"{relpath}:{node.lineno}",
+                        f"branches on compressor name(s) {hit} — use a "
+                        f"CompressorSpec lookup (get_spec(...).<field>)"))
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "startswith"
+                  and node.args
+                  and _mentions_compressor(node.func.value)):
+                for prefix in _str_consts(node.args[0]):
+                    if prefix and any(n.startswith(prefix) for n in names):
+                        findings.append(self.finding(
+                            f"{relpath}:{node.lineno}",
+                            f"prefix-matches compressor names via "
+                            f"startswith({prefix!r}) — use a CompressorSpec "
+                            f"lookup"))
+                        break
+        return findings
+
+
+class NoRawCollectives(Rule):
+    name = "no-raw-collectives"
+    description = "lax collectives live in dist/collectives.py only"
+
+    EXEMPT = ("repro/dist/collectives.py",)
+
+    def check(self, tree: ast.AST, relpath: str) -> list:
+        if relpath in self.EXEMPT:
+            return []
+        findings = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) and node.attr in _BANNED_COLLECTIVES:
+                chain = _dotted(node.value)
+                if chain is not None and chain.split(".")[-1] == "lax":
+                    findings.append(self.finding(
+                        f"{relpath}:{node.lineno}",
+                        f"raw lax.{node.attr} outside dist/collectives.py — "
+                        f"bytes the VoteWire ledger never sees; use the "
+                        f"sanctioned wrapper (collectives.scalar_psum / "
+                        f"fsdp_all_gather / a VoteWire exchange)"))
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.module.split(".")[-1] == "lax":
+                bad = sorted({a.name for a in node.names} & _BANNED_COLLECTIVES)
+                if bad:
+                    findings.append(self.finding(
+                        f"{relpath}:{node.lineno}",
+                        f"imports raw collectives {bad} from jax.lax outside "
+                        f"dist/collectives.py"))
+        return findings
+
+
+class NoJnpAllocInKernel(Rule):
+    name = "no-jnp-alloc-in-kernel"
+    description = "no literal-shape jnp allocation inside Pallas kernel bodies"
+
+    @staticmethod
+    def _is_kernel_file(relpath: str) -> bool:
+        parts = Path(relpath).parts
+        return "kernels" in parts and parts[-1] == "kernel.py"
+
+    def check(self, tree: ast.AST, relpath: str) -> list:
+        if not self._is_kernel_file(relpath):
+            return []
+        findings = []
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            args = node.args
+            all_args = [*args.posonlyargs, *args.args, *args.kwonlyargs]
+            if not any(a.arg.endswith("_ref") for a in all_args):
+                continue  # not a kernel body (wrapper/launcher code is fine)
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr in _JNP_ALLOC_FNS):
+                    chain = _dotted(sub.func.value)
+                    if chain in ("jnp", "jax.numpy", "numpy", "np"):
+                        findings.append(self.finding(
+                            f"{relpath}:{sub.lineno}",
+                            f"{chain}.{sub.func.attr} inside kernel body "
+                            f"{node.name!r}: literal-shape allocation/iota "
+                            f"does not lower on TPU — use "
+                            f"lax.broadcasted_iota, *_like, or a "
+                            f"scratch_shapes entry"))
+        return findings
+
+
+class SpecsComplete(Rule):
+    name = "specs-complete"
+    description = "every CompressorSpec row fully declares its contracts"
+
+    def check(self) -> list:
+        import jax.numpy as jnp
+
+        from repro.core import compressors as C
+
+        findings = []
+        where = "repro/core/compressors.py"
+        for name, spec in C.SPECS.items():
+            if spec.name != name:
+                findings.append(self.finding(
+                    where, f"SPECS key {name!r} != spec.name {spec.name!r}"))
+            if not callable(spec.api) or not callable(spec.values):
+                findings.append(self.finding(
+                    where, f"{name}: api/values must be callable"))
+            if spec.uplink_bits not in C.UPLINK_BIT_MODELS:
+                findings.append(self.finding(
+                    where, f"{name}: uplink_bits {spec.uplink_bits!r} not in "
+                           f"{C.UPLINK_BIT_MODELS}"))
+            if spec.fused_pack_op is not None and not spec.hbm_limits:
+                findings.append(self.finding(
+                    where, f"{name}: a fused wire op must declare its "
+                           f"hbm_limits contract (which dtypes never hit HBM)"))
+            for entry in spec.hbm_limits:
+                dtype, limit = entry
+                try:
+                    jnp.dtype(dtype)
+                except TypeError:
+                    findings.append(self.finding(
+                        where, f"{name}: hbm_limits dtype {dtype!r} unknown"))
+                if not isinstance(limit, int) or limit < 0:
+                    findings.append(self.finding(
+                        where, f"{name}: hbm_limits limit {limit!r} must be "
+                               f"an int >= 0"))
+        if C.COMPRESSORS != {n: s.api for n, s in C.SPECS.items()}:
+            findings.append(self.finding(
+                where, "COMPRESSORS is not the derived {name: spec.api} view"))
+        return findings
+
+
+AST_RULES = (NoCompressorNameBranching(), NoRawCollectives(), NoJnpAllocInKernel())
+
+
+def _allowed(f: Finding) -> bool:
+    relpath = f.where.rsplit(":", 1)[0]
+    return (f.rule, relpath) in ALLOWLIST
+
+
+def lint_source(src: str, relpath: str) -> list:
+    """Run the AST rules over one source string (unit-test entry point)."""
+    tree = ast.parse(src, filename=relpath)
+    findings = []
+    for rule in AST_RULES:
+        findings += rule.check(tree, relpath)
+    return [f for f in findings if not _allowed(f)]
+
+
+def iter_py_files(root: Path) -> Iterable[Path]:
+    for p in sorted(root.rglob("*.py")):
+        if "__pycache__" not in p.parts:
+            yield p
+
+
+def run_repolint(root: Optional[Path] = None) -> tuple:
+    """AST rules over every file under src/repro + the registry lint.
+    Returns (findings, checks)."""
+    root = Path(root) if root is not None else PKG_ROOT
+    findings = []
+    checks = 0
+    for path in iter_py_files(root):
+        relpath = "repro/" + path.relative_to(root).as_posix() \
+            if root.name == "repro" else path.relative_to(root).as_posix()
+        findings += lint_source(path.read_text(), relpath)
+        checks += len(AST_RULES)
+    specs_rule = SpecsComplete()
+    findings += [f for f in specs_rule.check() if not _allowed(f)]
+    checks += 1
+    return findings, checks

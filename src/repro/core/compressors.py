@@ -249,6 +249,16 @@ SERVER_DECODES = ("sign", "scaled_sign", "dequant")
 #:   float — no sub-float encoding; decoded fp32 psum only (4 B/coord)
 WIRE_FORMATS = ("pack2", "pack8", "float")
 
+#: information-theoretic uplink bit model of one worker message (paper §6 /
+#: Eq. 12 accounting — ``core.encoding.baseline_bits_per_round`` keys on this,
+#: with no name branching):
+#:   dense_sign     — 1 bit/coord (sign family; the 32-bit scale is negligible)
+#:   golomb_ternary — Golomb-coded nonzero positions + 1 sign bit/nonzero + one
+#:                    32-bit scale (sparse ternary family, Eq. 12)
+#:   level8         — 8 bits/coord + one 32-bit decode scale (pack8 wire)
+#:   fp32           — 32 bits/coord (uncompressed)
+UPLINK_BIT_MODELS = ("dense_sign", "golomb_ternary", "level8", "fp32")
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressorSpec:
@@ -269,17 +279,35 @@ class CompressorSpec:
     server_decode: str = "sign"
     chunkable: bool = False                     # jnp path may stream in chunks
     wire_format: str = "pack2"                  # pack2 | pack8 | float (WIRE_FORMATS)
+    #: HBM contract of the fused wire op: ((dtype_name, max_elems), ...) — at
+    #: most ``max_elems`` elements of that dtype may materialize between ops
+    #: when tracing ``fused_pack_op``. The jaxpr auditor
+    #: (``repro.analysis.jaxpr_audit.check_fused_uplink``) enforces it as
+    #: ``NoHbmIntermediate`` rules — the declarative form of the old
+    #: hand-written int8/int32 pins.
+    hbm_limits: tuple = ()
+    #: information-theoretic uplink accounting (UPLINK_BIT_MODELS) — keys
+    #: ``core.encoding.baseline_bits_per_round``
+    uplink_bits: str = "dense_sign"
 
     def __post_init__(self):
         assert self.scale_protocol in SCALE_PROTOCOLS, self.scale_protocol
         assert self.server_decode in SERVER_DECODES, self.server_decode
         assert self.wire_format in WIRE_FORMATS, self.wire_format
+        assert self.uplink_bits in UPLINK_BIT_MODELS, self.uplink_bits
         assert (self.scale_protocol == "none") == (self.local_scale is None), self.name
         # ternary <=> the 2-bit codebook; pack8/float are the non-ternary rows
         assert (self.wire_format == "pack2") == self.is_ternary, self.name
         if self.fused_pack_op is not None:
             assert self.wire_format != "float", \
                 f"{self.name}: a fused pack op needs a packed wire format"
+            # a fused wire op without a declared HBM contract is an unaudited
+            # kernel — the whole point of the fusion is checkable, so declare it
+            assert self.hbm_limits, \
+                f"{self.name}: fused_pack_op requires declared hbm_limits"
+        for dtype, limit in self.hbm_limits:
+            assert isinstance(dtype, str) and isinstance(limit, int) and limit >= 0, \
+                (self.name, dtype, limit)
 
     @property
     def scale_shared(self) -> bool:
@@ -302,45 +330,56 @@ class CompressorSpec:
         return self.local_scale(g)
 
 
+#: the fused-ternary HBM contract: gradient -> packed wire bytes with ZERO
+#: int8 ternary elements at the HBM level (the two-pass chain has >= n)
+_TERNARY_FUSED_HBM = (("int8", 0),)
+
 SPECS: dict[str, CompressorSpec] = {spec.name: spec for spec in (
     CompressorSpec(
         name="sparsign", api=sparsign, values=_sparsign_values,
         is_ternary=True, scale_protocol="none",
         pallas_op=sparsign_op, fused_pack_op=sparsign_pack2bit_op,
-        server_decode="sign", chunkable=True),
+        server_decode="sign", chunkable=True,
+        hbm_limits=_TERNARY_FUSED_HBM, uplink_bits="golomb_ternary"),
     CompressorSpec(
         name="sign", api=sign_compressor, values=_sign_values,
         is_ternary=True, scale_protocol="none",
         pallas_op=sign_op, fused_pack_op=sign_pack2bit_op,
-        server_decode="sign"),
+        server_decode="sign",
+        hbm_limits=_TERNARY_FUSED_HBM, uplink_bits="dense_sign"),
     CompressorSpec(
         name="scaled_sign", api=scaled_sign, values=_sign_values,
         is_ternary=True, scale_protocol="local_norm", local_scale=_scale_l1_mean,
         pallas_op=sign_op, fused_pack_op=sign_pack2bit_op,
-        server_decode="scaled_sign"),
+        server_decode="scaled_sign",
+        hbm_limits=_TERNARY_FUSED_HBM, uplink_bits="dense_sign"),
     CompressorSpec(
         name="noisy_sign", api=noisy_sign, values=_noisy_sign_values,
         is_ternary=True, scale_protocol="none",
         pallas_op=noisy_sign_op, fused_pack_op=noisy_sign_pack2bit_op,
-        server_decode="sign", chunkable=True),
+        server_decode="sign", chunkable=True,
+        hbm_limits=_TERNARY_FUSED_HBM, uplink_bits="dense_sign"),
     CompressorSpec(
         name="qsgd_1bit_l2", api=qsgd_1bit_l2, values=_stochastic_ternary_values,
         is_ternary=True, scale_protocol="local_norm", local_scale=_scale_l2,
         pallas_op=stochastic_ternary_op,
         fused_pack_op=stochastic_ternary_pack2bit_op,
-        server_decode="scaled_sign", chunkable=True),
+        server_decode="scaled_sign", chunkable=True,
+        hbm_limits=_TERNARY_FUSED_HBM, uplink_bits="golomb_ternary"),
     CompressorSpec(
         name="qsgd_1bit_linf", api=qsgd_1bit_linf, values=_stochastic_ternary_values,
         is_ternary=True, scale_protocol="local_norm", local_scale=_scale_linf,
         pallas_op=stochastic_ternary_op,
         fused_pack_op=stochastic_ternary_pack2bit_op,
-        server_decode="scaled_sign", chunkable=True),
+        server_decode="scaled_sign", chunkable=True,
+        hbm_limits=_TERNARY_FUSED_HBM, uplink_bits="golomb_ternary"),
     CompressorSpec(
         name="terngrad", api=terngrad, values=_stochastic_ternary_values,
         is_ternary=True, scale_protocol="shared_max", local_scale=_scale_linf,
         pallas_op=stochastic_ternary_op,
         fused_pack_op=stochastic_ternary_pack2bit_op,
-        server_decode="scaled_sign", chunkable=True),
+        server_decode="scaled_sign", chunkable=True,
+        hbm_limits=_TERNARY_FUSED_HBM, uplink_bits="golomb_ternary"),
     CompressorSpec(
         # FedCom 8-bit baseline: 1 sign bit + 7 level bits (s = 127), so one
         # worker message is exactly 1 B/coord on the pack8 wire + one f32 scale
@@ -348,11 +387,15 @@ SPECS: dict[str, CompressorSpec] = {spec.name: spec for spec in (
         is_ternary=False, scale_protocol="local_norm",
         local_scale=partial(_scale_qsgd, s=QSGD8_LEVELS),
         pallas_op=qsgd8_op, fused_pack_op=qsgd8_pack8_op,
-        server_decode="dequant", chunkable=True, wire_format="pack8"),
+        server_decode="dequant", chunkable=True, wire_format="pack8",
+        # int32 limit 1: the single scatter-start index of the to_2d
+        # canonical-view pad — never an O(n) level tensor (the legacy generic
+        # qsgd chain materializes >= n int32 levels)
+        hbm_limits=(("int32", 1),), uplink_bits="level8"),
     CompressorSpec(
         name="identity", api=identity, values=_identity_values,
         is_ternary=False, scale_protocol="none",
-        server_decode="dequant", wire_format="float"),
+        server_decode="dequant", wire_format="float", uplink_bits="fp32"),
 )}
 
 

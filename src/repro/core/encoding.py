@@ -94,17 +94,25 @@ def round_bits(
 
 
 def baseline_bits_per_round(d: int, algorithm: str, *, nnz: float | None = None) -> float:
-    """Uplink bits per worker per round for each §6 baseline."""
-    if algorithm in ("sign", "scaled_sign", "noisy_sign"):
+    """Uplink bits per worker per round for each §6 baseline.
+
+    The bit model is a ``CompressorSpec`` lookup (``spec.uplink_bits``) — no
+    algorithm-name branching, so a new registry row is automatically costable.
+    """
+    from repro.core.compressors import get_spec  # lazy: encoding is dependency-free
+
+    try:
+        model = get_spec(algorithm).uplink_bits
+    except KeyError as e:
+        raise ValueError(str(e)) from None
+    if model == "dense_sign":
         return float(d)  # 1 bit per coordinate (+32 for the scale; negligible, matches paper)
-    if algorithm in ("qsgd_1bit_l2", "qsgd_1bit_linf", "terngrad", "sparsign"):
+    if model == "golomb_ternary":
         assert nnz is not None, "ternary methods need the realized nnz"
         return ternary_stream_bits(d, int(round(nnz)), coder="golomb") + 32.0
-    if algorithm == "identity":
+    if model == "fp32":
         return 32.0 * d
-    if algorithm == "qsgd8":
-        # FedCom 8-bit QSGD on the pack8 wire: 1 sign bit + 7 level bits per
-        # coordinate, plus the one 32-bit decode scale per message — the same
-        # accounting the VoteWire ledger (wire_bytes + scalar_bytes) reports
-        return 8.0 * d + 32.0
-    raise ValueError(algorithm)
+    # level8 — FedCom 8-bit QSGD on the pack8 wire: 1 sign bit + 7 level bits
+    # per coordinate, plus the one 32-bit decode scale per message — the same
+    # accounting the VoteWire ledger (wire_bytes + scalar_bytes) reports
+    return 8.0 * d + 32.0

@@ -107,6 +107,26 @@ def vote_psum(votes: jnp.ndarray, axes: Sequence[str], n_workers: int) -> jnp.nd
     return jax.lax.psum(votes.astype(_sum_dtype(int(n_workers))), tuple(axes))
 
 
+def scalar_psum(x: jnp.ndarray, axes) -> jnp.ndarray:
+    """Sanctioned all-reduce for O(1) protocol/metric scalars (loss, nnz,
+    participation counts, scaled-sign shard L1 partials). Raw ``lax.psum``
+    outside this module is a repolint error — array payloads must ride a
+    ``VoteWire`` (or ``decoded_exchange``) so the byte ledger sees them; a
+    scalar reduction is protocol traffic the ledger deliberately does not
+    bill, and routing it here keeps that distinction auditable."""
+    return jax.lax.psum(x, axes if isinstance(axes, str) else tuple(axes))
+
+
+def fsdp_all_gather(leaf: jnp.ndarray, axis_name: str, axis: int, *,
+                    tiled: bool = True) -> jnp.ndarray:
+    """Sanctioned all-gather for FSDP parameter unsharding (streamed mode's
+    per-superblock param regather). Not uplink traffic — it moves parameters,
+    not gradient messages — so it is billed by the FSDP gather model in
+    benchmarks/bench_collectives.py, not the VoteWire ledger; keeping the raw
+    collective here (and only here) lets the repolint distinguish the two."""
+    return jax.lax.all_gather(leaf, axis_name, axis=axis, tiled=tiled)
+
+
 def worker_shared_linf(g: jnp.ndarray, axes: Sequence[str], mask=None) -> jnp.ndarray:
     """max_m ||g_m||_inf over the worker axes — TernGrad's magnitude-sharing
     protocol (one f32 scalar all-reduce(max), ~4 B on the fabric) and the
@@ -188,6 +208,37 @@ def decoded_wire_bytes(n_coords: int, n_workers: int) -> float:
     ``decoded`` mode rides, outside any VoteWire): one ring all-reduce of
     4 B/coord."""
     return 2.0 * (n_workers - 1) / n_workers * 4.0 * n_coords
+
+
+def allreduce_scalar_bytes(n_workers: int) -> float:
+    """Ring all-reduce of one f32 scalar — the magnitude-sharing pmax
+    (``worker_shared_linf``) and any shared-scale protocol scalar."""
+    return 2.0 * (n_workers - 1) / n_workers * 4.0
+
+
+def uplink_ledger(mode: str, wire: "VoteWire", n_coords: int, *,
+                  share_linf: bool = False) -> float:
+    """Per-device uplink bytes to exchange one n-coordinate leaf under a wire
+    mode (``engine.wire_mode``: votes | scaled_votes | pack8 | decoded) — THE
+    ledger definition, shared by both train steps and pinned against the
+    traced collective census by ``repro.analysis`` (jaxpr + HLO passes).
+
+    Terms: the mode's array payload (the wire's own ``wire_bytes``, or the
+    decoded fp32 psum which bypasses the wire object), plus the pack8 wire's
+    per-worker decode-scale gather, plus — when the compressor's scale
+    protocol shares a magnitude (``engine.needs_shared_linf``) — one f32
+    scalar all-reduce for the pmax'd L-inf. The shared-linf term is billed at
+    the all-reduce model regardless of which wire carries the payload (the
+    pmax rides the fabric, not the gather)."""
+    if mode == "decoded":
+        total = decoded_wire_bytes(n_coords, wire.n_workers)
+    else:
+        total = wire.wire_bytes(n_coords)
+    if mode == "pack8":
+        total += wire.scalar_bytes()   # per-worker decode scales ride the gather
+    if share_linf:
+        total += allreduce_scalar_bytes(wire.n_workers)
+    return total
 
 
 def vote_allgather_packed8(payload: jnp.ndarray, scale, axes: Sequence[str],

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import prng
-from repro.core.compressors import sparsign
+from repro.core.compressors import get_spec
 
 
 def rosenbrock(x: jnp.ndarray) -> jnp.ndarray:
@@ -70,6 +70,9 @@ def run(
     x = jnp.full((d,), -0.5)
     grad_f = jax.grad(rosenbrock)
     key = jax.random.PRNGKey(seed)
+    # spec lookup, not name branching: any ternary registry row votes here
+    # ('sign' ignores budget/seed by its own signature — same bits as before)
+    spec = get_spec(compressor)
 
     @jax.jit
     def round_fn(x, r, key):
@@ -80,11 +83,9 @@ def run(
         mask = jnp.zeros((m,), bool).at[sel].set(True)
 
         def msg(gm, widx):
-            if compressor == "sign":
-                return jnp.sign(gm).astype(jnp.int8)
             wseed = prng.fold_seed(jnp.uint32(seed), 7) + widx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) \
                     + jnp.uint32(r) * jnp.uint32(0x85EBCA6B)
-            return sparsign(gm, budget=budget, seed=wseed).values
+            return spec.api(gm, budget=budget, seed=wseed).values
 
         votes = jax.vmap(msg)(g_workers, jnp.arange(m))   # [M, d] int8
         votes = jnp.where(mask[:, None], votes, jnp.int8(0))

@@ -24,7 +24,7 @@ import numpy as np
 from repro.core import engine, prng
 from repro.core.algorithm import (UPLINK_SALT, CompressionConfig,
                                   local_update_source)
-from repro.core.encoding import baseline_bits_per_round, ternary_stream_bits
+from repro.core.encoding import baseline_bits_per_round
 from repro.fl.models import accuracy, xent_loss
 
 
@@ -138,10 +138,9 @@ def run_fl(
             if log:
                 log(f"[fl] round {r+1}: acc={acc:.4f} nnz={nnz:.0f}")
     mean_nnz = float(np.mean(nnzs)) if nnzs else 0.0
-    if cfg.comp.is_ternary and cfg.comp.compressor != "sign":
-        bits = ternary_stream_bits(d, int(mean_nnz), coder="golomb") + 32.0
-    else:
-        bits = baseline_bits_per_round(d, cfg.comp.compressor, nnz=mean_nnz)
+    # spec-driven bit model: uplink_bits on the registry row picks golomb
+    # ternary coding vs dense sign vs level8 vs fp32 — no name branching
+    bits = baseline_bits_per_round(d, cfg.comp.compressor, nnz=mean_nnz)
     n_sel = max(1, int(round(cfg.participation * cfg.n_workers)))
     return {
         "acc": accs,

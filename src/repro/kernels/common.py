@@ -14,7 +14,6 @@ to this packing.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -99,43 +98,17 @@ def smem_scalar(x, dtype) -> jnp.ndarray:
 
 def hbm_elems(fn, *args, dtype=jnp.int8) -> int:
     """Element count of ``dtype`` arrays materialized *between* ops when
-    tracing ``fn(*args)`` — i.e. HBM-level traffic of that dtype. Walks the
-    jaxpr recursively but never descends into a pallas_call's kernel body
-    (whose values live in VMEM registers). Used by the wire tests/bench to pin
-    that the fused uplinks have no int8 ternary (2-bit wire) or int32 level
-    (pack8 wire) intermediate while the unfused chains necessarily do."""
-    try:
-        from jax.extend import core as jcore
-    except ImportError:  # pragma: no cover — very old jax
-        from jax import core as jcore
+    tracing ``fn(*args)`` — i.e. HBM-level traffic of that dtype. The walker
+    lives in ``repro.analysis.jaxpr_audit`` (recursive over every sub-jaxpr,
+    including custom_jvp/custom_vjp/closed_call bodies, but never descending
+    into a pallas_call's kernel body, whose values live in VMEM registers);
+    this shim keeps the kernels' historical entry point. Used by the wire
+    tests/bench to pin that the fused uplinks have no int8 ternary (2-bit
+    wire) or int32 level (pack8 wire) intermediate while the unfused chains
+    necessarily do."""
+    from repro.analysis import jaxpr_audit  # lazy: analysis imports kernels
 
-    closed = jax.make_jaxpr(fn)(*args)
-    total = 0
-    want = jnp.dtype(dtype)
-
-    def sub_jaxprs(params):
-        for v in params.values():
-            vs = v if isinstance(v, (list, tuple)) else (v,)
-            for x in vs:
-                if isinstance(x, jcore.ClosedJaxpr):
-                    yield x.jaxpr
-                elif isinstance(x, jcore.Jaxpr):
-                    yield x
-
-    def visit(jaxpr):
-        nonlocal total
-        for eqn in jaxpr.eqns:
-            for v in eqn.outvars:
-                aval = getattr(v, "aval", None)
-                if aval is not None and getattr(aval, "dtype", None) == want:
-                    total += math.prod(aval.shape)
-            if eqn.primitive.name == "pallas_call":
-                continue  # kernel-internal values are VMEM, not HBM
-            for sub in sub_jaxprs(eqn.params):
-                visit(sub)
-
-    visit(closed.jaxpr)
-    return total
+    return jaxpr_audit.hbm_elems(fn, *args, dtype=dtype)
 
 
 def int8_hbm_elems(fn, *args) -> int:

@@ -169,12 +169,15 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
 
         for i, (g, p, ef) in enumerate(zip(leaves, p_leaves, ef_flat)):
             seed_i = prng.fold_seed(wseed, i)
+            # ONE ledger definition for both train modes — pinned against the
+            # traced collective census by repro.analysis
+            wire_bytes += collectives.uplink_ledger(mode, wire, g.size,
+                                                    share_linf=share_linf)
             shared = None
             if share_linf:
                 # TernGrad's magnitude-sharing protocol / linf_share budgets:
                 # one f32 pmax over the sampled workers before compressing
                 shared = collectives.worker_shared_linf(g, axes, mask=mask)
-                wire_bytes += wire.scalar_bytes()
             if mode != "decoded":
                 # wire-native messages (packed uint8 / int8 votes, or int8
                 # pack8 levels): one exchange = upload + server sum, then
@@ -186,12 +189,10 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
                                            wire=wire, shared_linf=shared)
                 votes = wire.mask_message(msg.values, mask)
                 nnz_acc += wire.message_nnz(votes)
-                wire_bytes += wire.wire_bytes(g.size)
-                n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+                n_sel = collectives.scalar_psum(mask.astype(jnp.float32), axes)
                 if mode == "pack8":
                     dec_sum = wire.exchange(votes, g.size, g.shape,
                                             scale=msg.scale)
-                    wire_bytes += wire.scalar_bytes()
                     new_p, new_ef = engine.server_apply(
                         p, dec_sum, comp, lr=lr, ef=ef, n_sel=n_sel,
                         server="mean", backend=backend)
@@ -217,8 +218,7 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
                     msg.values, msg.scale, mask, axes,
                     is_ternary=comp.is_ternary)
                 nnz_acc += nnz
-                wire_bytes += collectives.decoded_wire_bytes(g.size, n_workers)
-                n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+                n_sel = collectives.scalar_psum(mask.astype(jnp.float32), axes)
                 new_p, new_ef = engine.server_apply(
                     p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel, server="mean",
                     backend=backend)
@@ -229,10 +229,10 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
         new_ef_tree = (jax.tree_util.tree_unflatten(treedef, ef_leaves)
                        if state.ef_residual is not None else None)
-        loss_mean = jax.lax.psum(loss, axes) / n_workers
-        nnz_mean = jax.lax.psum(nnz_acc, axes) / n_workers / jnp.float32(total)
+        loss_mean = collectives.scalar_psum(loss, axes) / n_workers
+        nnz_mean = collectives.scalar_psum(nnz_acc, axes) / n_workers / jnp.float32(total)
         metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
-                   "participated": jax.lax.psum(mask.astype(jnp.float32), axes),
+                   "participated": collectives.scalar_psum(mask.astype(jnp.float32), axes),
                    "wire_bytes_per_device": jnp.float32(wire_bytes)}
         new_state = TrainState(params=new_params, ef_residual=new_ef_tree,
                                step=state.step + 1, seed=state.seed)

@@ -201,17 +201,10 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     # per-round per-device uplink ledger: block leaves exchange once per layer
     # at their per-layer size (padding is per-exchange, so it multiplies out),
     # outer leaves once at full size
-    n_workers_static = wire.n_workers
-
     def exchange_bytes(n: int) -> float:
-        if mode == "decoded":
-            # fp32 psum of decoded messages — the wire object is bypassed
-            base = collectives.decoded_wire_bytes(n, n_workers_static)
-        else:
-            base = wire.wire_bytes(n)
-        if mode == "pack8":
-            return base + wire.scalar_bytes()   # per-worker decode scales
-        return base + (wire.scalar_bytes() if share_linf else 0.0)
+        # ONE ledger definition for both train modes (collectives.uplink_ledger)
+        # — pinned against the traced collective census by repro.analysis
+        return collectives.uplink_ledger(mode, wire, n, share_linf=share_linf)
 
     wire_ledger = sum(
         cfg.n_repeats * exchange_bytes(math.prod(s.shape[1:]))
@@ -221,7 +214,8 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                        for s in jax.tree_util.tree_leaves(shapes[k]))
 
     def _gather(leaf, ax):
-        return leaf if ax == REPLICATED else jax.lax.all_gather(leaf, fsdp_ax, axis=ax, tiled=True)
+        return leaf if ax == REPLICATED else collectives.fsdp_all_gather(
+            leaf, fsdp_ax, ax, tiled=True)
 
     def _slice(full, ax, shard_size):
         if ax == REPLICATED:
@@ -240,7 +234,7 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         wires, 4 B/coord fp32 for the decoded psum)."""
         shared = (collectives.worker_shared_linf(g_full, axes, mask=mask)
                   if share_linf else None)
-        n_sel = jax.lax.psum(mask.astype(jnp.float32), axes)
+        n_sel = collectives.scalar_psum(mask.astype(jnp.float32), axes)
         if mode == "decoded":
             # per-worker decode scales / float payloads: decode locally, psum
             # fp32 — the wire object is bypassed, exactly like simple mode
@@ -261,7 +255,7 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         vs = _slice(agg, shard_ax, shard_size)
         if mode == "votes":
             # shards partition the leaf, so the scaled-sign L1 reduces across them
-            l1_reduce = ((lambda part: jax.lax.psum(part, fsdp_ax))
+            l1_reduce = ((lambda part: collectives.scalar_psum(part, fsdp_ax))
                          if shard_ax != REPLICATED else None)
             new_shard, new_ef = engine.server_apply(
                 p_shard, vs, comp, lr=lr, ef=ef_shard, n_sel=n_sel,
@@ -388,10 +382,10 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
             if has_ef:
                 new_ef[k] = new_ef_k
 
-        loss_mean = jax.lax.psum(loss, axes) / n_workers
-        nnz_mean = jax.lax.psum(nnz_acc, axes) / n_workers / jnp.float32(total_coords)
+        loss_mean = collectives.scalar_psum(loss, axes) / n_workers
+        nnz_mean = collectives.scalar_psum(nnz_acc, axes) / n_workers / jnp.float32(total_coords)
         metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
-                   "participated": jax.lax.psum(mask.astype(jnp.float32), axes),
+                   "participated": collectives.scalar_psum(mask.astype(jnp.float32), axes),
                    "wire_bytes_per_device": jnp.float32(wire_ledger)}
         new_state = TrainState(params=new_params, ef_residual=new_ef,
                                step=state.step + 1, seed=state.seed)

@@ -44,11 +44,14 @@ def test_fused_uplink_matches_two_pass(shape, dtype):
 
 def test_fused_uplink_no_int8_hbm_intermediate():
     """The whole point of the fusion: gradient -> wire bytes with no int8
-    ternary tensor at the HBM level; the two-pass chain necessarily has one."""
+    ternary tensor at the HBM level; the two-pass chain necessarily has one.
+    The pin is the declarative per-spec rule (spec.hbm_limits), not a
+    hand-written count."""
+    from repro.analysis.jaxpr_audit import check_fused_uplink
+    from repro.core.compressors import get_spec
     g = jnp.asarray(np.random.RandomState(1).randn(4096), jnp.float32)
-    fused = common.int8_hbm_elems(lambda x: sparsign_pack2bit_op(x, 1.0, 7), g)
+    assert check_fused_uplink(get_spec("sparsign"), g, param=1.0) == []
     two_pass = common.int8_hbm_elems(lambda x: pack2bit_op(sparsign_op(x, 1.0, 7)), g)
-    assert fused == 0, f"fused uplink materializes {fused} int8 elements"
     assert two_pass >= g.size
 
 
@@ -71,13 +74,15 @@ def test_unpack_sum_fused_matches_ref(m, n):
 
 
 def test_packed_decode_sum_no_int8_hbm_intermediate():
+    from repro.analysis.jaxpr_audit import NoHbmIntermediate
     gathered = jnp.stack([pack2bit_op(jnp.asarray(
         np.random.RandomState(s).randint(-1, 2, 4096), jnp.int8)) for s in range(4)])
-    fused = common.int8_hbm_elems(
-        lambda p: unpack2bit_sum_op(p, 4096, (4096,)), gathered)
+    rule = NoHbmIntermediate(jnp.int8)
+    assert rule.check("unpack2bit_sum",
+                      lambda p: unpack2bit_sum_op(p, 4096, (4096,)),
+                      gathered) == []
     unfused = common.int8_hbm_elems(
         lambda p: common.from_2d(unpack2bit_sum_ref(p), 4096, (4096,)), gathered)
-    assert fused == 0
     assert unfused >= 4 * 4096
 
 
@@ -171,16 +176,15 @@ def test_new_fused_uplinks_no_int8_hbm_intermediate(compressor, param):
     """Acceptance pin: noisy_sign and terngrad reach the packed wire through a
     single-pass kernel — no int8 ternary tensor at the HBM level (the two-pass
     chain necessarily has one)."""
+    from repro.analysis.jaxpr_audit import check_fused_uplink
     from repro.core.compressors import get_spec
     g = jnp.asarray(np.random.RandomState(6).randn(4096), jnp.float32)
     spec = get_spec(compressor)
     p = param if param is not None else float(jnp.max(jnp.abs(g)))
-    fused = common.int8_hbm_elems(
-        lambda x: spec.fused_pack_op(x, p, 7, interpret=True), g)
+    assert check_fused_uplink(spec, g, param=p) == [], compressor
     two_pass = common.int8_hbm_elems(
         lambda x: pack2bit_op(spec.pallas_op(x, p, 7, interpret=True),
                               interpret=True), g)
-    assert fused == 0, f"{compressor}: fused uplink materializes {fused} int8 elems"
     assert two_pass >= g.size
     # and the fused bytes == pack2bit(reference compressor) byte-for-byte
     want_view, _ = common.to_2d(spec.values(g, p, 7, 0).reshape(-1))
@@ -399,19 +403,18 @@ def test_pack8_fused_no_int32_hbm_intermediate():
     """The fused uplink's structural guarantee: gradient -> int8 wire bytes
     with no int32 level tensor at the HBM level (the legacy generic-qsgd jnp
     chain necessarily materializes one)."""
-    from repro.core.compressors import _qsgd_level_values
+    from repro.analysis.jaxpr_audit import check_fused_uplink
+    from repro.core.compressors import _qsgd_level_values, get_spec
     g = jnp.asarray(np.random.RandomState(8).randn(4096), jnp.float32)
+    # the spec declares hbm_limits=(("int32", 1),): the single scatter-start
+    # index of the to_2d canonical-view pad is allowed (every canonical-view
+    # op carries it); the point is no O(n) level tensor.  check_fused_uplink
+    # supplies a uint32 seed, as the engine does (a python-int seed would add
+    # one i32->u32 scalar conversion to the jaxpr and muddy the pin)
+    assert check_fused_uplink(get_spec("qsgd8"), g) == []
     param = _qsgd8_param(g)
-    # uint32 seed, as the engine supplies it (a python-int seed would add one
-    # i32->u32 scalar conversion to the jaxpr and muddy the zero pin)
-    seed = jnp.uint32(7)
-    fused_i32 = common.int32_hbm_elems(
-        lambda x: qsgd8_pack8_op(x, param, seed, interpret=True), g)
     legacy_i32 = common.int32_hbm_elems(
-        lambda x: _qsgd_level_values(x, param, seed, 0), g)
-    # <= 1: the single scatter-start index of the to_2d canonical-view pad
-    # (every canonical-view op carries it); the point is no O(n) level tensor
-    assert fused_i32 <= 1, f"fused pack8 uplink materializes {fused_i32} int32 elems"
+        lambda x: _qsgd_level_values(x, param, jnp.uint32(7), 0), g)
     assert legacy_i32 >= g.size
 
 
