@@ -2,8 +2,9 @@
 nonzero on any error finding. This is the blocking CI gate.
 
 Order: AST repo-lint first (cheap, no tracing), then per-spec traceable-program
-rules, then the four wire-mode collective censuses, then the HLO agreement
-check (compiles one step).
+rules, then the wire-mode collective censuses (per-leaf AND bucketed), then the
+collective launch-count budgets (with the bucketed >= 5x launch-ratio floor on
+the stacked-block configs), then the HLO agreement check (compiles one step).
 """
 
 from __future__ import annotations
@@ -29,6 +30,11 @@ def main(argv=None) -> int:
     findings, checks = drivers.run_census_checks()
     reports.append(report(findings, checks))
     print(f"collective census: {checks} checks, {len(findings)} findings",
+          flush=True)
+
+    findings, checks = drivers.run_count_checks()
+    reports.append(report(findings, checks))
+    print(f"collective counts: {checks} checks, {len(findings)} findings",
           flush=True)
 
     findings, checks = drivers.hlo_check()

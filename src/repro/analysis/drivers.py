@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.hlo_audit import HloJaxprAgreement, hlo_collective_stats
-from repro.analysis.jaxpr_audit import (CollectiveCensus, DtypePromotionDrift,
+from repro.analysis.jaxpr_audit import (CollectiveCensus, CollectiveCountBudget,
+                                        DtypePromotionDrift,
                                         check_fused_uplink, collective_census)
 
 #: hypothetical worker count the census ring model is costed at: > 1 so every
@@ -66,20 +67,36 @@ def tiny_batch(vocab: int, b: int = 2, s: int = 8, seed: int = 0):
     }
 
 
-def build_mode_step(mode: str):
+def mode_comp(mode: str):
+    """The representative CompressionConfig of one wire mode."""
+    from repro.core.algorithm import CompressionConfig
+    from repro.core.budgets import BudgetConfig
+
+    compressor, server, vote_impl, budget = MODE_SETUPS[mode]
+    return CompressionConfig(compressor=compressor,
+                             budget=BudgetConfig(kind="fixed", value=budget),
+                             server=server)
+
+
+def mode_wire(mode: str, m: int):
+    """A costing-only VoteWire at hypothetical worker count ``m``."""
+    from repro.dist import collectives
+
+    if mode == "pack8":
+        return collectives.Pack8Wire(axes=("data",), n_workers=m)
+    return collectives.VoteWire(axes=("data",), n_workers=m)
+
+
+def build_mode_step(mode: str, *, bucketed: bool = False):
     """Build the 1-device `simple` train step whose wire negotiation resolves
     to ``mode``; returns (step, state, batch, model, mesh, comp)."""
     from repro.core import engine
-    from repro.core.algorithm import CompressionConfig
-    from repro.core.budgets import BudgetConfig
     from repro.launch.mesh import make_host_mesh
     from repro.train.state import LrSchedule, init_state
     from repro.train.step_simple import TrainStepConfig, build_train_step
 
-    compressor, server, vote_impl, budget = MODE_SETUPS[mode]
-    comp = CompressionConfig(compressor=compressor,
-                             budget=BudgetConfig(kind="fixed", value=budget),
-                             server=server)
+    _, server, vote_impl, _ = MODE_SETUPS[mode]
+    comp = mode_comp(mode)
     resolved = engine.wire_mode(comp, vote_impl=vote_impl)
     assert resolved == mode, (mode, resolved)
     model = tiny_model()
@@ -88,7 +105,8 @@ def build_mode_step(mode: str):
     batch = tiny_batch(model.cfg.vocab_size)
     scfg = TrainStepConfig(compression=comp, lr=LrSchedule(base=0.05),
                            worker_axes=("data",), vote_impl=vote_impl,
-                           donate=False, backend="interpret")
+                           donate=False, backend="interpret",
+                           bucketed=bucketed)
     step = build_train_step(model, scfg, mesh)
     state = init_state(params, server=server, seed=7)
     return step, state, batch, model, mesh, comp
@@ -100,19 +118,11 @@ def mode_ledger(mode: str, model, m: int):
     census splits (array payloads vs protocol scalars). The split re-sums to
     ``collectives.uplink_ledger`` exactly (asserted per leaf)."""
     from repro.core import engine
-    from repro.core.algorithm import CompressionConfig
-    from repro.core.budgets import BudgetConfig
     from repro.dist import collectives
 
-    compressor, server, vote_impl, budget = MODE_SETUPS[mode]
-    comp = CompressionConfig(compressor=compressor,
-                             budget=BudgetConfig(kind="fixed", value=budget),
-                             server=server)
+    comp = mode_comp(mode)
     share = engine.needs_shared_linf(comp)
-    if mode == "pack8":
-        wire = collectives.Pack8Wire(axes=("data",), n_workers=m)
-    else:
-        wire = collectives.VoteWire(axes=("data",), n_workers=m)
+    wire = mode_wire(mode, m)
     payload = scalar = 0.0
     for s in jax.tree_util.tree_leaves(model.param_shapes()):
         n = int(math.prod(s.shape))
@@ -127,25 +137,56 @@ def mode_ledger(mode: str, model, m: int):
     return payload, scalar
 
 
-def traced_step_census(mode: str):
+def mode_bucket_plan(mode: str, model, m: int, bucket_bytes=None):
+    """The BucketPlan the bucketed simple step builds for ``model``."""
+    from repro.dist import bucketing
+
+    wire = mode_wire(mode, m)
+    fmt = bucketing.wire_bucket_format(mode, wire)
+    return bucketing.build_bucket_plan(
+        jax.tree_util.tree_leaves(model.param_shapes()), fmt,
+        bucket_bytes=bucket_bytes)
+
+
+def mode_bucketed_ledger(mode: str, model, m: int, bucket_bytes=None):
+    """(payload_bytes, scalar_bytes, plan) the bucketed-wire ledger bills for
+    one round of ``model`` at ``m`` hypothetical workers — the bucketed twin
+    of ``mode_ledger``, split the same census way."""
+    from repro.core import engine
+    from repro.dist import bucketing
+
+    share = engine.needs_shared_linf(mode_comp(mode))
+    wire = mode_wire(mode, m)
+    plan = mode_bucket_plan(mode, model, m, bucket_bytes)
+    payload, scalar = bucketing.plan_ledger(mode, wire, plan, share_linf=share)
+    return payload, scalar, plan
+
+
+def traced_step_census(mode: str, *, bucketed: bool = False):
     """Trace the mode's built step and census its collectives. Returns
     (census, model)."""
     from repro.dist import compat
 
-    step, state, batch, model, mesh, _ = build_mode_step(mode)
+    step, state, batch, model, mesh, _ = build_mode_step(mode, bucketed=bucketed)
     with compat.set_mesh(mesh):
         closed = jax.make_jaxpr(step)(state, batch)
     return collective_census(closed), model
 
 
-def census_check(mode: str, m: int = HYPOTHETICAL_M):
+def census_check(mode: str, m: int = HYPOTHETICAL_M, *, bucketed: bool = False):
     """The acceptance pin: traced collective array-payload bytes == VoteWire
     ledger bytes at ``m`` hypothetical workers, scalar traffic covers the
-    protocol scalars. Returns (findings, census, ledger_payload, ledger_scalar)."""
-    census, model = traced_step_census(mode)
-    payload, scalar = mode_ledger(mode, model, m)
+    protocol scalars. ``bucketed=True`` pins the bucketed step against the
+    ``bucketing.plan_ledger`` twin instead. Returns
+    (findings, census, ledger_payload, ledger_scalar)."""
+    census, model = traced_step_census(mode, bucketed=bucketed)
+    if bucketed:
+        payload, scalar, _ = mode_bucketed_ledger(mode, model, m)
+    else:
+        payload, scalar = mode_ledger(mode, model, m)
     rule = CollectiveCensus(axis_sizes={"data": m})
-    findings = rule.check(f"step[{mode}]", census,
+    label = f"step[{mode}{'/bucketed' if bucketed else ''}]"
+    findings = rule.check(label, census,
                           ledger_payload=payload, ledger_scalar_min=scalar)
     return findings, census, payload, scalar
 
@@ -153,10 +194,92 @@ def census_check(mode: str, m: int = HYPOTHETICAL_M):
 def run_census_checks(m: int = HYPOTHETICAL_M):
     findings, checks = [], 0
     for mode in MODE_SETUPS:
-        f, _, _, _ = census_check(mode, m)
-        findings += f
-        checks += 1
+        for bucketed in (False, True):
+            f, _, _, _ = census_check(mode, m, bucketed=bucketed)
+            findings += f
+            checks += 1
     return findings, checks
+
+
+# ---------------------------------------------------------------------------
+# Collective LAUNCH counts — the bucketed wire's raison d'etre
+# ---------------------------------------------------------------------------
+
+def mode_count_budget(mode: str, model, *, bucketed: bool,
+                      m: int = HYPOTHETICAL_M):
+    """(expected_payload_launches, max_scalar_launches) for one simple-mode
+    round. Per-leaf: one payload exchange per leaf. Bucketed: one per bucket,
+    plus one (n_slots,) scale-vector gather on the pack8 wire and one (L,)
+    shared-linf pmax when the compressor shares its scale — both >= 2
+    elements, so they count as payload launches (and are billed as payload
+    bytes by the same rule in ``plan_ledger``)."""
+    from repro.core import engine
+
+    leaves = jax.tree_util.tree_leaves(model.param_shapes())
+    n_leaves = len(leaves)
+    share = engine.needs_shared_linf(mode_comp(mode))
+    if not bucketed:
+        # scalar budget: per-leaf n_sel (+ per-leaf scale protocol on the
+        # shared/pack8 wires) + a handful of metric reductions
+        return n_leaves, 2 * n_leaves + 8
+    plan = mode_bucket_plan(mode, model, m)
+    extra = (1 if mode == "pack8" else 0) + (1 if share else 0)
+    return len(plan.buckets) + extra, 8
+
+
+def count_check(mode: str, *, bucketed: bool):
+    """Blocking launch-count pin: traced payload-collective launches ==
+    the mode budget exactly; scalar launches under the protocol cap."""
+    census, model = traced_step_census(mode, bucketed=bucketed)
+    expected, max_scalar = mode_count_budget(mode, model, bucketed=bucketed)
+    rule = CollectiveCountBudget()
+    label = f"step[{mode}{'/bucketed' if bucketed else ''}]"
+    return rule.check(label, census, expected_payload=expected,
+                      max_scalar=max_scalar), census, expected
+
+
+#: stacked-block model configs the launch-ratio floor is asserted on
+RATIO_CONFIGS = ("qwen1.5-4b", "qwen2.5-32b", "qwen2-moe-a2.7b")
+
+#: per-leaf / bucketed payload-launch floor on every stacked-block config
+MIN_COUNT_RATIO = 5.0
+
+
+def count_ratio_checks(m: int = HYPOTHETICAL_M):
+    """Static acceptance floor: on every stacked-block model config, the
+    bucketed wire must launch >= MIN_COUNT_RATIO x fewer payload collectives
+    than the per-leaf wire, for every mode. Pure plan arithmetic — no big
+    model is traced, only its shape tree."""
+    from repro.configs.registry import get_config
+    from repro.models.model import Model
+
+    rule = CollectiveCountBudget()
+    findings, checks = [], 0
+    for name in RATIO_CONFIGS:
+        model = Model(get_config(name))
+        for mode in MODE_SETUPS:
+            per_leaf, _ = mode_count_budget(mode, model, bucketed=False)
+            bucketed, _ = mode_count_budget(mode, model, bucketed=True)
+            checks += 1
+            if per_leaf < MIN_COUNT_RATIO * bucketed:
+                findings.append(rule.finding(
+                    f"{name}[{mode}]",
+                    f"bucketed wire launches {bucketed} payload collectives "
+                    f"vs {per_leaf} per-leaf — ratio "
+                    f"{per_leaf / max(bucketed, 1):.1f}x is under the "
+                    f"{MIN_COUNT_RATIO:.0f}x floor"))
+    return findings, checks
+
+
+def run_count_checks():
+    findings, checks = [], 0
+    for mode in MODE_SETUPS:
+        for bucketed in (False, True):
+            f, _, _ = count_check(mode, bucketed=bucketed)
+            findings += f
+            checks += 1
+    f, c = count_ratio_checks()
+    return findings + f, checks + c
 
 
 def hlo_check(mode: str = "votes"):

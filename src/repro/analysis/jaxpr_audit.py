@@ -210,13 +210,22 @@ def _named_axes(eqn) -> tuple:
 
 @dataclasses.dataclass(frozen=True)
 class CollectiveRecord:
-    """One collective equation: what ships, over which named axes."""
+    """One collective equation: what ships, over which named axes.
+
+    ``trips`` is how many times the equation runs per step — the product of
+    the ``scan`` lengths enclosing it (a collective inside the streamed
+    backward scan launches once per superblock). ``tiled`` marks the
+    all_gather variant the FSDP parameter path uses (``tiled=True``); wire
+    exchanges gather with ``tiled=False``, so the flag separates parameter
+    movement from uplink payload."""
 
     primitive: str
     axes: tuple
     in_elems: int      # total operand elements (1 => scalar protocol traffic)
     in_bytes: int      # total operand payload bytes
     out_bytes: int
+    trips: int = 1
+    tiled: bool = False
 
     def group_size(self, axis_sizes: Mapping[str, int]) -> int:
         m = 1
@@ -249,41 +258,80 @@ class Census:
     records: tuple
 
     def counts(self) -> Counter:
-        return Counter(r.primitive for r in self.records)
+        return Counter({p: sum(r.trips for r in self.records if r.primitive == p)
+                        for p in {r.primitive for r in self.records}})
+
+    def _select(self, *, min_elems: int = 0, max_elems: Optional[int] = None,
+                include_tiled: bool = True):
+        return (r for r in self.records
+                if r.in_elems >= min_elems
+                and (max_elems is None or r.in_elems <= max_elems)
+                and (include_tiled or not r.tiled))
 
     def total_bytes(self, axis_sizes, *, min_elems: int = 0,
-                    max_elems: Optional[int] = None) -> float:
-        return sum(r.ring_bytes(axis_sizes) for r in self.records
-                   if r.in_elems >= min_elems
-                   and (max_elems is None or r.in_elems <= max_elems))
+                    max_elems: Optional[int] = None,
+                    include_tiled: bool = True) -> float:
+        return sum(r.trips * r.ring_bytes(axis_sizes)
+                   for r in self._select(min_elems=min_elems,
+                                         max_elems=max_elems,
+                                         include_tiled=include_tiled))
 
     def payload_bytes(self, axis_sizes) -> float:
-        """Array-payload traffic (>= 2 elements): the wire-ledger term."""
-        return self.total_bytes(axis_sizes, min_elems=2)
+        """Array-payload traffic (>= 2 elements): the wire-ledger term.
+        FSDP parameter gathers (``tiled=True``) are parameter movement, not
+        uplink — the VoteWire ledger does not bill them, so neither does the
+        payload view."""
+        return self.total_bytes(axis_sizes, min_elems=2, include_tiled=False)
 
     def scalar_bytes(self, axis_sizes) -> float:
         """Scalar protocol traffic: decode scales, n_sel/loss/nnz metrics."""
         return self.total_bytes(axis_sizes, max_elems=1)
 
+    def payload_count(self) -> int:
+        """Launches per step of array-payload (>= 2 element, untiled)
+        collectives — the uplink launch count the bucketed wire collapses."""
+        return sum(r.trips for r in self._select(min_elems=2,
+                                                 include_tiled=False))
+
+    def scalar_count(self) -> int:
+        """Launches per step of scalar (<= 1 element) collectives."""
+        return sum(r.trips for r in self._select(max_elems=1))
+
 
 def collective_census(fn, *args) -> Census:
     """Trace ``fn(*args)`` (or take a ready jaxpr) and record every
-    collective equation, descending like the HBM walker."""
+    collective equation, descending like the HBM walker. Descent through a
+    ``scan`` multiplies ``trips`` by the scan length, so a collective inside
+    the streamed backward scan is billed once per superblock; ``while`` trip
+    counts are unknowable statically and stay at 1 (documented under-count)."""
     records = []
-    for eqn in iter_eqns(_as_jaxpr(fn, args)):
-        if eqn.primitive.name not in COLLECTIVE_PRIMS:
-            continue
-        in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
-        out_avals = [v.aval for v in eqn.outvars if hasattr(v, "aval")]
-        records.append(CollectiveRecord(
-            primitive=eqn.primitive.name,
-            axes=_named_axes(eqn),
-            in_elems=sum(math.prod(a.shape) for a in in_avals),
-            in_bytes=sum(math.prod(a.shape) * jnp.dtype(a.dtype).itemsize
-                         for a in in_avals),
-            out_bytes=sum(math.prod(a.shape) * jnp.dtype(a.dtype).itemsize
-                          for a in out_avals),
-        ))
+
+    def walk(jaxpr, trips: int):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in COLLECTIVE_PRIMS:
+                in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+                out_avals = [v.aval for v in eqn.outvars if hasattr(v, "aval")]
+                records.append(CollectiveRecord(
+                    primitive=name,
+                    axes=_named_axes(eqn),
+                    in_elems=sum(math.prod(a.shape) for a in in_avals),
+                    in_bytes=sum(math.prod(a.shape) * jnp.dtype(a.dtype).itemsize
+                                 for a in in_avals),
+                    out_bytes=sum(math.prod(a.shape) * jnp.dtype(a.dtype).itemsize
+                                  for a in out_avals),
+                    trips=trips,
+                    tiled=bool(eqn.params.get("tiled", False)),
+                ))
+            if name == "pallas_call":
+                continue
+            sub_trips = trips
+            if name == "scan":
+                sub_trips = trips * int(eqn.params.get("length", 1))
+            for sub in sub_jaxprs(eqn):
+                walk(sub, sub_trips)
+
+    walk(_as_jaxpr(fn, args), 1)
     return Census(records=tuple(records))
 
 
@@ -322,6 +370,42 @@ class CollectiveCensus(Rule):
                 label,
                 f"scalar collective bytes {scal:.1f} do not cover the "
                 f"ledger's protocol scalars {ledger_scalar_min:.1f}"))
+        return findings
+
+
+class CollectiveCountBudget(Rule):
+    """Pin a traced step's collective LAUNCH counts, not just its bytes.
+
+    Launch count is the latency story the byte census cannot see: a hundred
+    tiny exchanges and one bucket of the same total bytes cost the same under
+    the ring byte model, but each launch pays fixed fabric latency. The rule
+    pins the array-payload launch count to the mode's exact budget (per-leaf:
+    one-ish per leaf; bucketed: one-ish per bucket — the builder's formula),
+    and caps the scalar protocol launches. Exceeding either is a regression
+    to chatty-wire behavior; a payload count BELOW budget means the ledger
+    formula itself drifted from the program — both block.
+    """
+
+    name = "collective-count"
+    description = "traced collective launch counts must match the mode budget"
+
+    def check(self, label: str, census: Census, *, expected_payload: int,
+              max_scalar: Optional[int] = None) -> list:
+        findings = []
+        got = census.payload_count()
+        if got != int(expected_payload):
+            findings.append(self.finding(
+                label,
+                f"{got} array-payload collective launches per step, budget "
+                f"says exactly {expected_payload} "
+                f"(census: {dict(census.counts())})"))
+        if max_scalar is not None:
+            scal = census.scalar_count()
+            if scal > int(max_scalar):
+                findings.append(self.finding(
+                    label,
+                    f"{scal} scalar collective launches per step exceed the "
+                    f"protocol budget {max_scalar}"))
         return findings
 
 

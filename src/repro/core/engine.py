@@ -275,6 +275,32 @@ def compress_leaf(
     return CompressedGrad(values=vals, scale=msg_scale)
 
 
+def compress_leaf_rows(
+    g: jnp.ndarray,
+    cfg: "CompressionConfig",
+    seed,
+    counter_base=0,
+    *,
+    rows: int,
+    shared_linf=None,
+    backend: Optional[str] = None,
+    wire=None,
+) -> CompressedGrad:
+    """``compress_leaf`` straight into a bucket slice: the wire-native message
+    reshaped/trimmed to exactly ``rows`` canonical payload rows (the leaf's
+    ``bucketing.LeafSlot`` slice). The compression itself — seeds,
+    counter_base, budget/scale resolution — is byte-identical to the per-leaf
+    path; only the buffer layout changes (packed canonical views drop their
+    per-leaf sublane zero-pad rows, leaf-shaped votes pad into rows), so a
+    slot's payload is bitwise the per-leaf wire message."""
+    from repro.dist import bucketing  # lazy: dist layers import this module
+    msg = compress_leaf(g, cfg, seed, counter_base, shared_linf=shared_linf,
+                        backend=backend, wire=wire)
+    return CompressedGrad(
+        values=bucketing.as_rows(msg.values, wire.native_format, rows),
+        scale=msg.scale)
+
+
 # ---------------------------------------------------------------------------
 # Server-side primitive
 # ---------------------------------------------------------------------------

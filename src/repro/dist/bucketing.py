@@ -1,0 +1,277 @@
+"""Bucketized uplink wire layout: many gradient leaves -> few big collectives.
+
+Both train modes historically exchanged one collective per gradient leaf; at
+model-config scale (27B-72B) that is hundreds of small launches per step, each
+paying launch overhead and its own canonical-view padding tax. A ``BucketPlan``
+is the static (step-build-time) answer: every leaf's wire-native payload is
+trimmed to whole canonical rows (LANES coordinates per row) and laid out
+contiguously into fixed-capacity *buckets*, so one bucket rides ONE collective
+and the sublane-tile padding is paid once per bucket instead of once per leaf.
+
+Row granularity is what keeps the packed formats exchange-legal:
+
+  * ``pack2`` packs each canonical row independently (block-interleaved within
+    the row), so any whole-row slice of the payload is itself a valid pack2
+    stream — leaves may start at ANY row (``align_rows=1``) and the bucket is
+    decoded in one fused pass, then split per leaf on the decoded stream.
+  * ``pack8`` payload slices are consumed by the fused ``unpack8_sum`` kernel,
+    whose grid needs sublane-aligned row counts — leaves align to
+    ``SUBLANE_PAD`` rows (``align_rows=32``), i.e. exactly their canonical
+    per-leaf row count, and decode per slot with that worker's gathered scale.
+  * ``int8`` votes and ``f32`` decoded messages are element-wise under
+    psum, so rows are just the shared layout unit (``align_rows=1``).
+
+The per-leaf compress (seeds, counter_base, budget/scale resolution) is
+UNCHANGED — a slot's payload is bitwise the per-leaf wire message, so bucketed
+and per-leaf exchanges agree bitwise and the counter-stream layout the
+cross-mode equivalence tests pin survives bucket granularity.
+
+``plan_ledger`` is the bucketed twin of ``collectives.uplink_ledger``; the
+``repro.analysis`` CollectiveCensus pins it against the traced step exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import collectives
+from repro.kernels import common as kcommon
+
+#: payload formats a bucket can carry (wire native formats + the decoded f32
+#: stream, which rides the fp32 psum outside any VoteWire)
+BUCKET_FORMATS = ("int8", "pack2", "pack8", "f32")
+
+#: bytes one canonical payload row occupies in each format's wire buffer
+ROW_BYTES = {"int8": kcommon.LANES, "pack2": kcommon.LANES // 4,
+             "pack8": kcommon.LANES, "f32": 4 * kcommon.LANES}
+
+#: numpy/jnp dtype of the payload buffer per format
+ROW_DTYPE = {"int8": jnp.int8, "pack2": jnp.uint8,
+             "pack8": jnp.int8, "f32": jnp.float32}
+
+#: row width (elements per row) of the payload buffer per format
+ROW_WIDTH = {"int8": kcommon.LANES, "pack2": kcommon.LANES // 4,
+             "pack8": kcommon.LANES, "f32": kcommon.LANES}
+
+
+def format_align_rows(fmt: str) -> int:
+    """Slot row-alignment per payload format: pack8 slices feed the fused
+    decode kernel (sublane-tiled grid), everything else is row-independent."""
+    if fmt not in BUCKET_FORMATS:
+        raise ValueError(f"unknown bucket format {fmt!r}; known: {BUCKET_FORMATS}")
+    return kcommon.SUBLANE_PAD if fmt == "pack8" else 1
+
+
+def wire_bucket_format(mode: str, wire) -> str:
+    """Payload format a wire mode's bucket carries: the wire's native message
+    format, or the decoded fp32 stream for the ``decoded`` mode."""
+    return "f32" if mode == "decoded" else wire.native_format
+
+
+def leaf_rows(n: int, align_rows: int) -> int:
+    """Payload rows an n-coordinate leaf occupies at the given alignment:
+    ceil to full LANES rows, then up to the alignment multiple. At
+    ``align_rows=SUBLANE_PAD`` this IS ``kcommon.canonical_rows(n)`` — the
+    slot slice equals the leaf's own canonical view."""
+    rows = -(-n // kcommon.LANES)
+    return -(-rows // align_rows) * align_rows
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One leaf's home inside a bucket. ``index`` is the leaf's position in
+    the group list the plan was built from (the canonical flat leaf order —
+    what seeds/quorum/EF are indexed by)."""
+
+    index: int
+    size: int
+    shape: Tuple[int, ...]
+    row_start: int
+    rows: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One wire buffer: ``rows`` canonical payload rows (slot rows plus tail
+    padding to the kernel tile for the packed formats)."""
+
+    slots: Tuple[LeafSlot, ...]
+    rows: int
+
+    @property
+    def n_coords(self) -> int:
+        return self.rows * kcommon.LANES
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static leaf->bucket layout for one exchange group (the whole tree in
+    simple mode; one superblock layer, or the outer leaves, in streamed
+    mode). Built once at step-build time; closed over by the jitted step."""
+
+    fmt: str
+    align_rows: int
+    buckets: Tuple[Bucket, ...]
+
+    @property
+    def n_slots(self) -> int:
+        return sum(len(b.slots) for b in self.buckets)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(b.rows for b in self.buckets)
+
+    def wire_nbytes(self) -> int:
+        """Bytes of all payload buffers (one worker's copy), padding included."""
+        return self.total_rows * ROW_BYTES[self.fmt]
+
+
+def _tail_pad(rows: int, fmt: str) -> int:
+    # the packed formats decode through sublane-tiled kernel grids; the psum
+    # formats ship exactly the slot rows
+    if fmt in ("pack2", "pack8"):
+        pad = kcommon.SUBLANE_PAD
+        return -(-rows // pad) * pad
+    return rows
+
+
+def build_bucket_plan(shapes: Sequence, fmt: str, *,
+                      bucket_bytes: Optional[int] = None) -> BucketPlan:
+    """Greedy in-order packing of ``shapes`` (leaf shapes, canonical flat
+    order) into buckets of at most ``bucket_bytes`` payload each
+    (``None`` = unbounded: one bucket for the whole group). A leaf larger
+    than the cap gets its own bucket — leaves are never split across
+    buckets (per-leaf quorum/EF/server math address one slot)."""
+    align = format_align_rows(fmt)
+    row_bytes = ROW_BYTES[fmt]
+    cap_rows = None
+    if bucket_bytes is not None:
+        cap_rows = max(align, (int(bucket_bytes) // row_bytes // align) * align)
+    buckets: List[Bucket] = []
+    slots: List[LeafSlot] = []
+    row = 0
+
+    def flush():
+        nonlocal slots, row
+        if slots:
+            buckets.append(Bucket(slots=tuple(slots), rows=_tail_pad(row, fmt)))
+        slots, row = [], 0
+
+    for i, s in enumerate(shapes):
+        shape = tuple(s.shape) if hasattr(s, "shape") else tuple(s)
+        n = int(math.prod(shape)) if shape else 1
+        rows = leaf_rows(n, align)
+        if cap_rows is not None and slots and row + rows > cap_rows:
+            flush()
+        slots.append(LeafSlot(index=i, size=n, shape=shape,
+                              row_start=row, rows=rows))
+        row += rows
+        if cap_rows is not None and row >= cap_rows:
+            flush()
+    flush()
+    return BucketPlan(fmt=fmt, align_rows=align, buckets=tuple(buckets))
+
+
+# ---------------------------------------------------------------------------
+# Payload assembly / splitting (traced)
+# ---------------------------------------------------------------------------
+
+def as_rows(values: jnp.ndarray, fmt: str, rows: int) -> jnp.ndarray:
+    """One leaf's wire message -> exactly ``rows`` payload rows (its bucket
+    slice). Packed messages arrive as canonical 2D views and are trimmed
+    (dropped tail rows are sublane zero-padding the per-leaf wire would have
+    shipped); leaf-shaped messages are flattened and zero-padded into rows.
+    The coordinate at (r, c) keeps flat index r*LANES + c, so the
+    counter-stream layout is untouched."""
+    width = ROW_WIDTH[fmt]
+    if fmt in ("pack2", "pack8"):
+        assert values.ndim == 2 and values.shape[1] == width, values.shape
+        assert values.shape[0] >= rows, (values.shape, rows)
+        return values[:rows]
+    flat = values.reshape(-1).astype(ROW_DTYPE[fmt])
+    assert flat.shape[0] <= rows * width, (flat.shape, rows)
+    padded = jnp.zeros((rows * width,), ROW_DTYPE[fmt]).at[:flat.shape[0]].set(flat)
+    return padded.reshape(rows, width)
+
+
+def assemble_bucket(payloads: Sequence[jnp.ndarray], bucket: Bucket,
+                    fmt: str) -> jnp.ndarray:
+    """Slot payload rows (aligned with ``bucket.slots``) -> one contiguous
+    (bucket.rows, width) wire buffer, tail rows zero."""
+    parts = list(payloads)
+    assert len(parts) == len(bucket.slots)
+    used = sum(s.rows for s in bucket.slots)
+    if bucket.rows > used:
+        parts.append(jnp.zeros((bucket.rows - used, ROW_WIDTH[fmt]),
+                               ROW_DTYPE[fmt]))
+    return jnp.concatenate(parts, axis=0)
+
+
+def split_bucket(agg: jnp.ndarray, bucket: Bucket) -> List[jnp.ndarray]:
+    """One bucket's aggregated (decoded/summed) payload -> per-leaf arrays in
+    the leaves' shapes, aligned with ``bucket.slots``. ``agg`` is row-shaped
+    (rows, LANES) or flat (rows*LANES,); slicing is static under jit."""
+    flat = agg.reshape(-1)
+    out = []
+    for s in bucket.slots:
+        start = s.row_start * kcommon.LANES
+        out.append(jax.lax.slice(flat, (start,), (start + s.size,)).reshape(s.shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Byte ledger — the bucketed twin of collectives.uplink_ledger
+# ---------------------------------------------------------------------------
+
+def plan_ledger(mode: str, wire, plan: BucketPlan, *,
+                share_linf: bool = False) -> Tuple[float, float]:
+    """(payload_bytes, scalar_bytes) one application of ``plan`` bills to the
+    per-device uplink — split the way the analysis census splits (array
+    payloads >= 2 elements vs scalar protocol traffic). Payload terms come
+    from ``collectives.uplink_ledger_bucket`` (one bucket = one exchange);
+    the shared-linf term is ONE vector pmax over all the plan's slots
+    (vs one scalar pmax per leaf in the per-leaf path)."""
+    payload = scalar = 0.0
+    for b in plan.buckets:
+        p, s = collectives.uplink_ledger_bucket(mode, wire, b.n_coords,
+                                                len(b.slots))
+        payload += p
+        scalar += s
+    if share_linf:
+        n = plan.n_slots
+        bytes_ = collectives.allreduce_scalar_bytes(wire.n_workers) * n
+        if n >= 2:
+            payload += bytes_
+        else:
+            scalar += bytes_
+    return payload, scalar
+
+
+def streamed_plan_ledger(mode: str, wire, block_plan: BucketPlan,
+                         outer_plan: BucketPlan, n_repeats: int, *,
+                         share_linf: bool = False) -> Tuple[float, float]:
+    """(payload, scalar) per-device uplink bytes for one bucketed streamed
+    step. The double-buffered backward scan exchanges the *pending* layer's
+    buckets each iteration: it primes with one zero bucket (first iteration)
+    and drains the last pending bucket after the scan, so each block bucket
+    rides the wire ``n_repeats + 1`` times per step — billed honestly, it is
+    the pipeline's fill/drain cost (one extra exchange out of n_repeats+1).
+    The shared-linf vector pmax runs at compress time — once per REAL layer
+    (``n_repeats``) plus once for the outer group."""
+    bp, bs = plan_ledger(mode, wire, block_plan)
+    op, osc = plan_ledger(mode, wire, outer_plan, share_linf=share_linf)
+    payload = (n_repeats + 1) * bp + op
+    scalar = (n_repeats + 1) * bs + osc
+    if share_linf:
+        n = block_plan.n_slots
+        bytes_ = collectives.allreduce_scalar_bytes(wire.n_workers) * n
+        if n >= 2:
+            payload += n_repeats * bytes_
+        else:
+            scalar += n_repeats * bytes_
+    return payload, scalar

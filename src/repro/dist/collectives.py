@@ -139,6 +139,18 @@ def worker_shared_linf(g: jnp.ndarray, axes: Sequence[str], mask=None) -> jnp.nd
     return jax.lax.pmax(local, tuple(axes))
 
 
+def worker_shared_linf_many(gs: Sequence[jnp.ndarray], axes: Sequence[str],
+                            mask=None) -> jnp.ndarray:
+    """Vectorized ``worker_shared_linf``: ONE (L,) f32 pmax for L leaves
+    instead of L scalar pmaxes — the bucketed path's magnitude-sharing
+    protocol. pmax is element-wise, so entry i is bitwise the per-leaf
+    ``worker_shared_linf(gs[i], ...)``."""
+    local = jnp.stack([jnp.max(jnp.abs(g.astype(jnp.float32))) for g in gs])
+    if mask is not None:
+        local = jnp.where(mask, local, 0.0)
+    return jax.lax.pmax(local, tuple(axes))
+
+
 def vote_psum_hier(votes: jnp.ndarray, inner_axis: str, outer_axis: str,
                    inner_size: int, outer_size: int) -> jnp.ndarray:
     """Two-level vote sum: int8-narrow within the fast inner domain ('data',
@@ -185,14 +197,13 @@ def _packed_decode_sum(gathered: jnp.ndarray, size: int, shape,
     return unpack2bit_sum_op(gathered, size, shape, interpret=interpret)
 
 
-def decoded_exchange(values: jnp.ndarray, scale, mask, axes: Sequence[str],
-                     *, is_ternary: bool):
-    """The ``decoded`` wire mode, shared verbatim by both train modes: decode
-    one worker's message locally (values * scale), zero non-participants, and
-    fp32-psum over the worker axes. Returns ``(float sum, this worker's
-    masked nnz)`` — ternary messages count |symbols|, float payloads count
-    nonzero decoded coordinates. One definition keeps the cross-mode bitwise
-    pin (check_wires.py) from depending on two hand-synchronized copies."""
+def decoded_message(values: jnp.ndarray, scale, mask, *, is_ternary: bool):
+    """One worker's ``decoded``-mode message: decode locally (values * scale),
+    zero non-participants. Returns ``(decoded fp32 message, masked nnz)`` —
+    ternary messages count |symbols|, float payloads count nonzero decoded
+    coordinates. Shared by the per-leaf psum (``decoded_exchange``) and the
+    bucketed path (which assembles many decoded messages into one psum), so
+    the bitwise pin between them depends on ONE decode definition."""
     dec = values.astype(jnp.float32) * scale
     dec = jnp.where(mask, dec, 0.0)
     if is_ternary:
@@ -200,7 +211,27 @@ def decoded_exchange(values: jnp.ndarray, scale, mask, axes: Sequence[str],
             jnp.where(mask, values, jnp.zeros((), values.dtype))).astype(jnp.float32))
     else:
         nnz = jnp.sum((dec != 0.0).astype(jnp.float32))
+    return dec, nnz
+
+
+def decoded_exchange(values: jnp.ndarray, scale, mask, axes: Sequence[str],
+                     *, is_ternary: bool):
+    """The ``decoded`` wire mode, shared verbatim by both train modes: decode
+    one worker's message locally (values * scale), zero non-participants, and
+    fp32-psum over the worker axes. Returns ``(float sum, this worker's
+    masked nnz)``. One definition keeps the cross-mode bitwise pin
+    (check_wires.py) from depending on two hand-synchronized copies."""
+    dec, nnz = decoded_message(values, scale, mask, is_ternary=is_ternary)
     return jax.lax.psum(dec, tuple(axes)), nnz
+
+
+def decoded_exchange_bucket(payload: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
+    """Bucketed ``decoded``-mode exchange: ONE fp32 psum of a whole bucket of
+    pre-decoded, pre-masked messages (``decoded_message`` per leaf, assembled
+    by ``dist.bucketing``). psum is element-wise per coordinate, so each
+    leaf's slice of the result is bitwise the per-leaf ``decoded_exchange``
+    sum; the caller splits with ``bucketing.split_bucket``."""
+    return jax.lax.psum(payload, tuple(axes))
 
 
 def decoded_wire_bytes(n_coords: int, n_workers: int) -> float:
@@ -239,6 +270,36 @@ def uplink_ledger(mode: str, wire: "VoteWire", n_coords: int, *,
     if share_linf:
         total += allreduce_scalar_bytes(wire.n_workers)
     return total
+
+
+def uplink_ledger_bucket(mode: str, wire: "VoteWire", n_coords: int,
+                         n_slots: int) -> Tuple[float, float]:
+    """Per-device uplink bytes for ONE bucketed exchange carrying ``n_slots``
+    leaves in ``n_coords`` padded coordinates — the bucketed variant of
+    ``uplink_ledger``, split census-style into (payload, scalar) bytes.
+
+    The payload term is the same wire byte model evaluated at the bucket's
+    padded coordinate count (``n_coords`` is a whole number of canonical rows,
+    so the packed ledgers are exact — padding is billed once per bucket).
+    The pack8 wire additionally gathers one f32 decode scale per SLOT in a
+    single (n_slots,) vector all-gather next to the payload; with >= 2 slots
+    that vector is array payload under the census's classification, with one
+    slot it is scalar protocol traffic — the split mirrors the census's
+    ``in_elems >= 2`` rule so the exact pin holds either way. The shared-linf
+    term is per exchange *group*, not per bucket — ``bucketing.plan_ledger``
+    bills it."""
+    if mode == "decoded":
+        payload = decoded_wire_bytes(n_coords, wire.n_workers)
+    else:
+        payload = wire.wire_bytes(n_coords)
+    scalar = 0.0
+    if mode == "pack8":
+        scales = float((wire.n_workers - 1) * 4 * n_slots)
+        if n_slots >= 2:
+            payload += scales
+        else:
+            scalar += scales
+    return payload, scalar
 
 
 def vote_allgather_packed8(payload: jnp.ndarray, scale, axes: Sequence[str],
@@ -322,6 +383,24 @@ class VoteWire:
                 f"a decode scale inside the exchange is a pack8-wire concept")
         return vote_psum(values, self.axes, self.n_workers)
 
+    def exchange_bucket(self, payload: jnp.ndarray, bucket, *, scale=None):
+        """One bucket of wire-native messages -> per-leaf aggregates, ONE
+        collective. ``payload`` is the assembled (rows, width) buffer
+        (``dist.bucketing.assemble_bucket``), ``bucket`` its static
+        ``bucketing.Bucket`` layout; returns a list of per-leaf sums in the
+        leaves' shapes, aligned with ``bucket.slots``. The exchange is
+        element-wise per coordinate, so every slice is bitwise the per-leaf
+        ``exchange`` of the same message — the cross-granularity pin
+        (tests/mdev) rides on that. ``scale`` is pack8-only, as in
+        ``exchange``."""
+        if scale is not None:
+            raise ValueError(
+                f"the {self.name!r} vote wire exchanges raw integer votes; "
+                f"a decode scale inside the exchange is a pack8-wire concept")
+        from repro.dist import bucketing  # lazy: bucketing imports this module
+        return bucketing.split_bucket(
+            vote_psum(payload, self.axes, self.n_workers), bucket)
+
     def wire_bytes(self, n_coords: int) -> float:
         """Per-device wire bytes to exchange one n-coordinate leaf's votes
         (ring-collective first principles, real payload sizes)."""
@@ -355,6 +434,16 @@ class HierVoteWire(VoteWire):
                 "scale inside the exchange is a pack8-wire concept")
         return vote_psum_hier(values, self.axes[1], self.axes[0],
                               self.inner_size, self.outer_size)
+
+    def exchange_bucket(self, payload, bucket, *, scale=None):
+        if scale is not None:
+            raise ValueError(
+                "the 'hier' vote wire exchanges raw integer votes; a decode "
+                "scale inside the exchange is a pack8-wire concept")
+        from repro.dist import bucketing  # lazy: bucketing imports this module
+        return bucketing.split_bucket(
+            vote_psum_hier(payload, self.axes[1], self.axes[0],
+                           self.inner_size, self.outer_size), bucket)
 
     def wire_bytes(self, n_coords):
         # both ring terms share one (symmetric) formula — make_vote_wire
@@ -393,6 +482,23 @@ class PackedVoteWire(VoteWire):
         total = _packed_decode_sum(gathered, size, shape, backend=self.backend)
         return total.astype(_sum_dtype(self.n_workers))
 
+    def exchange_bucket(self, payload, bucket, *, scale=None):
+        """ONE all-gather of the whole packed bucket + one fused decode-sum
+        over it, then split on the decoded stream. pack2 packs each canonical
+        row independently, so the bucket (a row-concatenation of per-leaf
+        payloads) is itself a valid pack2 stream and the whole-bucket decode
+        is bitwise the per-leaf decode at every coordinate."""
+        if scale is not None:
+            raise ValueError(
+                "the 2-bit packed vote wire exchanges raw ternary votes; a "
+                "decode scale inside the exchange is a pack8-wire concept")
+        from repro.dist import bucketing  # lazy: bucketing imports this module
+        n = bucket.n_coords
+        gathered = jax.lax.all_gather(payload, self.axes, axis=0, tiled=False)
+        total = _packed_decode_sum(gathered, n, (n,), backend=self.backend)
+        return bucketing.split_bucket(
+            total.astype(_sum_dtype(self.n_workers)), bucket)
+
     def wire_bytes(self, n_coords):
         # ring all-gather: each device transmits its (padded) packed payload
         # to M-1 peers — no reduction on the fabric
@@ -425,6 +531,44 @@ class Pack8Wire(VoteWire):
                 "this worker's decode scale (CompressedGrad.scale)")
         return vote_allgather_packed8(values, scale, self.axes, size, shape,
                                       backend=self.backend)
+
+    def exchange_bucket(self, payload, bucket, *, scale=None):
+        """ONE payload all-gather + ONE (n_slots,) scale-vector all-gather for
+        the whole bucket. Slots are sublane-aligned (``bucketing``'s pack8
+        ``align_rows``), so each leaf's gathered row slice IS its per-leaf
+        canonical view and decodes through the unmodified fused
+        ``unpack8_sum`` kernel with that slot's per-worker scales — worker
+        accumulation order and rounding points are bitwise the per-leaf wire.
+        ``scale`` is the (n_slots,) f32 vector of the slots' decode scales."""
+        if scale is None:
+            raise ValueError(
+                "the pack8 wire dequantizes during the exchange and needs "
+                "the bucket's per-slot decode scales (one f32 per leaf)")
+        from repro.dist import bucketing  # lazy: bucketing imports this module
+        from repro.kernels.pack8.ops import unpack8_sum_op
+        scale = jnp.asarray(scale, jnp.float32).reshape(-1)
+        assert scale.shape[0] == len(bucket.slots), (scale.shape, bucket)
+        if self.backend == "jnp":
+            # the psum oracle program, as in vote_allgather_packed8: decode
+            # our own payload (per-row slot scales), ONE fp32 psum, split
+            row_scales = jnp.concatenate(
+                [jnp.broadcast_to(scale[i], (s.rows,))
+                 for i, s in enumerate(bucket.slots)]
+                + ([jnp.zeros((bucket.rows - sum(s.rows for s in bucket.slots),),
+                              jnp.float32)] if bucket.rows > sum(
+                                  s.rows for s in bucket.slots) else []))
+            dec = payload.astype(jnp.float32) * row_scales[:, None]
+            return bucketing.split_bucket(jax.lax.psum(dec, self.axes), bucket)
+        gathered = jax.lax.all_gather(payload, self.axes, axis=0, tiled=False)
+        scales = jax.lax.all_gather(scale, self.axes, axis=0, tiled=False)
+        interpret = (self.backend == "interpret") if self.backend is not None else None
+        out = []
+        for i, s in enumerate(bucket.slots):
+            rows = jax.lax.slice_in_dim(gathered, s.row_start,
+                                        s.row_start + s.rows, axis=1)
+            out.append(unpack8_sum_op(rows, scales[:, i], s.size, s.shape,
+                                      interpret=interpret))
+        return out
 
     def wire_bytes(self, n_coords):
         # ring all-gather of the (padded) int8 payload to M-1 peers

@@ -50,12 +50,12 @@ def build_everything(args):
     if mode == "simple":
         step = build_train_step(model, TrainStepConfig(
             compression=comp, lr=lr, local_lr=args.local_lr, worker_axes=wa,
-            vote_impl=args.vote_impl), mesh)
+            vote_impl=args.vote_impl, bucketed=args.bucketed), mesh)
         params = model.init(jax.random.PRNGKey(args.seed))
     else:
         step = build_streamed_train_step(model, StreamedStepConfig(
             compression=comp, lr=lr, worker_axes=wa,
-            vote_impl=args.vote_impl), mesh)
+            vote_impl=args.vote_impl, bucketed=args.bucketed), mesh)
         params = model.init(jax.random.PRNGKey(args.seed))
         params = jax.tree_util.tree_map(jax.device_put, params,
                                         fsdp_param_shardings(model, mesh))
@@ -110,6 +110,9 @@ def main(argv=None):
     ap.add_argument("--local-budget", type=float, default=10.0)
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--bucketed", action="store_true",
+                    help="bucketized uplink (one collective per bucket; "
+                         "streamed mode double-buffers exchange vs compute)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)

@@ -41,7 +41,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import engine, prng
 from repro.core.algorithm import CompressionConfig
-from repro.dist import collectives, compat
+from repro.dist import bucketing, collectives, compat
 from repro.dist.sharding import ACT_RULES_TRAIN
 from repro.models.common import axis_rules
 from repro.train import sampling
@@ -60,6 +60,10 @@ class TrainStepConfig:
                                    # param tree with per-leaf ints
     donate: bool = True
     backend: Optional[str] = None  # kernel backend; None -> $REPRO_KERNEL_BACKEND
+    bucketed: bool = False         # bucketized uplink: one collective per wire
+                                   # bucket instead of one per gradient leaf
+    bucket_bytes: Optional[int] = None  # payload cap per bucket (None: one
+                                        # bucket for the whole tree)
 
 
 def _leaf_seeds(worker_seed, tree):
@@ -137,6 +141,15 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
             f"rides the {mode!r} wire where it would be silently ignored; "
             f"use a vote server ({engine.VOTE_SERVERS}) or quorum=1")
 
+    # static bucket layout (bucketed uplink): the whole tree's leaves packed
+    # into few wire buckets, offsets row-aligned per the wire's payload format
+    plan = None
+    if step_cfg.bucketed:
+        plan = bucketing.build_bucket_plan(
+            jax.tree_util.tree_leaves(model.param_shapes()),
+            bucketing.wire_bucket_format(mode, wire),
+            bucket_bytes=step_cfg.bucket_bytes)
+
     # activation hints may only target auto (non-worker) mesh axes; in pure-DP
     # mode every axis is a worker and no constraints are needed (all compute local)
     act_rules = {k: v for k, v in ACT_RULES_TRAIN.items()
@@ -145,6 +158,21 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
     def body(state: TrainState, batch):
         with axis_rules(act_rules, mesh):
             return _body_inner(state, batch)
+
+    def _finish(state, treedef, new_leaves, ef_leaves, loss, lr, nnz_acc,
+                total, mask, wire_bytes):
+        n_workers = collectives.worker_count(axes)
+        new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        new_ef_tree = (jax.tree_util.tree_unflatten(treedef, ef_leaves)
+                       if state.ef_residual is not None else None)
+        loss_mean = collectives.scalar_psum(loss, axes) / n_workers
+        nnz_mean = collectives.scalar_psum(nnz_acc, axes) / n_workers / jnp.float32(total)
+        metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
+                   "participated": collectives.scalar_psum(mask.astype(jnp.float32), axes),
+                   "wire_bytes_per_device": jnp.float32(wire_bytes)}
+        new_state = TrainState(params=new_params, ef_residual=new_ef_tree,
+                               step=state.step + 1, seed=state.seed)
+        return new_state, metrics
 
     def _body_inner(state: TrainState, batch):
         params = state.params
@@ -166,6 +194,75 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         nnz_acc = jnp.float32(0.0)
         total = 0
         wire_bytes = 0.0   # per-device uplink ledger (static sizes under jit)
+
+        if plan is not None:
+            # ---- bucketized uplink: few big collectives -------------------
+            # per-leaf compress (seeds/counter_base/budget unchanged — slot
+            # payloads are bitwise the per-leaf wire messages), then ONE
+            # exchange per bucket; protocol scalars are deduplicated (one
+            # n_sel psum, one shared-linf vector pmax for the whole tree)
+            n_sel = collectives.scalar_psum(mask.astype(jnp.float32), axes)
+            shared_vec = (collectives.worker_shared_linf_many(leaves, axes, mask=mask)
+                          if share_linf else None)
+            payloads = [None] * len(leaves)
+            scales = [None] * len(leaves)
+            for b in plan.buckets:
+                for s in b.slots:
+                    i, g = s.index, leaves[s.index]
+                    seed_i = prng.fold_seed(wseed, i)
+                    shared = shared_vec[i] if share_linf else None
+                    if mode == "decoded":
+                        msg = engine.compress_leaf(g, comp, seed_i,
+                                                   backend=backend,
+                                                   shared_linf=shared)
+                        dec, nnz = collectives.decoded_message(
+                            msg.values, msg.scale, mask,
+                            is_ternary=comp.is_ternary)
+                        payloads[i] = bucketing.as_rows(dec, plan.fmt, s.rows)
+                        nnz_acc += nnz
+                    else:
+                        msg = engine.compress_leaf_rows(
+                            g, comp, seed_i, rows=s.rows, backend=backend,
+                            wire=wire, shared_linf=shared)
+                        payloads[i] = wire.mask_message(msg.values, mask)
+                        nnz_acc += wire.message_nnz(payloads[i])
+                        scales[i] = msg.scale
+                    total += g.size
+            new_leaves = [None] * len(leaves)
+            ef_leaves = [None] * len(leaves)
+            for b in plan.buckets:
+                buf = bucketing.assemble_bucket(
+                    [payloads[s.index] for s in b.slots], b, plan.fmt)
+                if mode == "decoded":
+                    parts = bucketing.split_bucket(
+                        collectives.decoded_exchange_bucket(buf, axes), b)
+                elif mode == "pack8":
+                    parts = wire.exchange_bucket(
+                        buf, b, scale=jnp.stack([scales[s.index]
+                                                 for s in b.slots]))
+                else:
+                    parts = wire.exchange_bucket(buf, b)
+                for s, agg in zip(b.slots, parts):
+                    i = s.index
+                    if mode == "votes":
+                        new_p, new_ef = engine.server_apply(
+                            p_leaves[i], agg, comp, lr=lr, ef=ef_flat[i],
+                            n_sel=n_sel, quorum=quorum_leaves[i],
+                            backend=backend)
+                    else:
+                        # mean servers: scaled_votes decodes with the ONE
+                        # shared scale; pack8/decoded sums arrive dequantized
+                        new_p, new_ef = engine.server_apply(
+                            p_leaves[i], agg, comp, lr=lr, ef=ef_flat[i],
+                            n_sel=n_sel, server="mean",
+                            scale=(scales[i] if mode == "scaled_votes" else None),
+                            backend=backend)
+                    new_leaves[i], ef_leaves[i] = new_p, new_ef
+            pay, scal = bucketing.plan_ledger(mode, wire, plan,
+                                              share_linf=share_linf)
+            wire_bytes = pay + scal
+            return _finish(state, treedef, new_leaves, ef_leaves, loss, lr,
+                           nnz_acc, total, mask, wire_bytes)
 
         for i, (g, p, ef) in enumerate(zip(leaves, p_leaves, ef_flat)):
             seed_i = prng.fold_seed(wseed, i)
@@ -226,17 +323,8 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
             new_leaves.append(new_p)
             ef_leaves.append(new_ef)
 
-        new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
-        new_ef_tree = (jax.tree_util.tree_unflatten(treedef, ef_leaves)
-                       if state.ef_residual is not None else None)
-        loss_mean = collectives.scalar_psum(loss, axes) / n_workers
-        nnz_mean = collectives.scalar_psum(nnz_acc, axes) / n_workers / jnp.float32(total)
-        metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
-                   "participated": collectives.scalar_psum(mask.astype(jnp.float32), axes),
-                   "wire_bytes_per_device": jnp.float32(wire_bytes)}
-        new_state = TrainState(params=new_params, ef_residual=new_ef_tree,
-                               step=state.step + 1, seed=state.seed)
-        return new_state, metrics
+        return _finish(state, treedef, new_leaves, ef_leaves, loss, lr,
+                       nnz_acc, total, mask, wire_bytes)
 
     state_spec = P()   # replicated w.r.t. the manual worker axes
     batch_axis = 1 if comp.local_steps > 1 else 0

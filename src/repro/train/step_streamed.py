@@ -35,7 +35,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import engine, prng
 from repro.core.algorithm import CompressionConfig
-from repro.dist import collectives, compat
+from repro.dist import bucketing, collectives, compat
 from repro.dist.sharding import ACT_RULES_TRAIN
 from repro.models.common import axis_rules, rms_norm
 from repro.train import sampling
@@ -56,6 +56,11 @@ class StreamedStepConfig:
                                    # param tree with per-leaf ints
     donate: bool = True
     backend: Optional[str] = None  # kernel backend; None -> $REPRO_KERNEL_BACKEND
+    bucketed: bool = False         # bucketized uplink + double-buffered
+                                   # backward scan (exchange of superblock i
+                                   # overlaps vjp/compress of superblock i-1)
+    bucket_bytes: Optional[int] = None  # payload cap per bucket (None: one
+                                        # bucket per superblock / outer group)
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +218,28 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                        for k in outer_keys
                        for s in jax.tree_util.tree_leaves(shapes[k]))
 
+    # static bucket layouts (bucketed uplink): one plan for a superblock
+    # layer's leaves (applied every scan iteration), one for the outer leaves
+    block_plan = outer_plan = None
+    blocks_treedef = jax.tree_util.tree_structure(shapes["blocks"])
+    if step_cfg.bucketed:
+        fmt = bucketing.wire_bucket_format(mode, wire)
+        block_plan = bucketing.build_bucket_plan(
+            [jax.ShapeDtypeStruct(s.shape[1:], s.dtype)
+             for s in jax.tree_util.tree_leaves(shapes["blocks"])],
+            fmt, bucket_bytes=step_cfg.bucket_bytes)
+        outer_plan = bucketing.build_bucket_plan(
+            [shapes[k] for k in outer_keys], fmt,
+            bucket_bytes=step_cfg.bucket_bytes)
+        # the double-buffered scan primes with one zero bucket and drains the
+        # last pending bucket after the scan -> n_repeats + 1 block-bucket
+        # exchanges per step; the shared-linf vector pmax runs at compress
+        # time, once per REAL layer (n_repeats)
+        pay, scal = bucketing.streamed_plan_ledger(
+            mode, wire, block_plan, outer_plan, cfg.n_repeats,
+            share_linf=share_linf)
+        wire_ledger = pay + scal
+
     def _gather(leaf, ax):
         return leaf if ax == REPLICATED else collectives.fsdp_all_gather(
             leaf, fsdp_ax, ax, tiled=True)
@@ -271,6 +298,87 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                 backend=backend)
         return new_shard, new_ef, nnz
 
+    # ------------------------------------------------------------------
+    # bucketed uplink: group-level compress / exchange+apply
+    # ------------------------------------------------------------------
+    # static per-leaf metadata in group order (blocks: per-layer flat leaves,
+    # outer: outer_keys order) — quorum/shard-axis lookups resolved at build
+    block_shard_axes = [a - 1 if a != REPLICATED else REPLICATED for a in ax_flat]
+    block_quorums = [quorum_flat[i] for i in blocks_idx_flat]
+    outer_shard_axes = [axes_all[k] for k in outer_keys]
+    outer_quorums = [quorum_flat[idx_tree[k]] for k in outer_keys]
+
+    def _group_compress(plan_, g_leaves, seeds, bases, mask):
+        """Per-leaf compress into bucket slices (seeds/counter_base unchanged
+        vs the per-leaf path — slot payloads are bitwise the per-leaf wire
+        messages), assembled into the plan's wire buffers. Returns
+        (bufs, svecs, nnz): one payload buffer and one (n_slots,) f32
+        decode-scale vector per bucket (1.0 where the mode carries none)."""
+        slots = {s.index: s for b in plan_.buckets for s in b.slots}
+        shared_vec = (collectives.worker_shared_linf_many(g_leaves, axes, mask=mask)
+                      if share_linf else None)
+        payloads = [None] * len(g_leaves)
+        scales = [jnp.float32(1.0)] * len(g_leaves)
+        nnz = jnp.float32(0.0)
+        for j, g in enumerate(g_leaves):
+            shared = shared_vec[j] if share_linf else None
+            if mode == "decoded":
+                msg = engine.compress_leaf(g, comp, seeds[j], bases[j],
+                                           backend=backend, shared_linf=shared)
+                dec, z = collectives.decoded_message(
+                    msg.values, msg.scale, mask, is_ternary=comp.is_ternary)
+                payloads[j] = bucketing.as_rows(dec, plan_.fmt, slots[j].rows)
+                nnz += z
+            else:
+                msg = engine.compress_leaf_rows(
+                    g, comp, seeds[j], bases[j], rows=slots[j].rows,
+                    backend=backend, wire=wire, shared_linf=shared)
+                payloads[j] = wire.mask_message(msg.values, mask)
+                nnz += wire.message_nnz(payloads[j])
+                scales[j] = msg.scale
+        bufs = tuple(bucketing.assemble_bucket(
+            [payloads[s.index] for s in b.slots], b, plan_.fmt)
+            for b in plan_.buckets)
+        svecs = tuple(jnp.stack([scales[s.index] for s in b.slots])
+                      for b in plan_.buckets)
+        return bufs, svecs, nnz
+
+    def _group_apply(plan_, bufs, svecs, ps_leaves, ef_leaves, shard_axes,
+                     quorums, *, n_sel, lr):
+        """ONE exchange per bucket, then the per-leaf server math + SGD on
+        this rank's shards — identical server semantics (per-leaf quorum, EF
+        residuals, shared-scale decode, l1_reduce) at bucket granularity."""
+        new_ps = [None] * len(ps_leaves)
+        new_efs = [None] * len(ps_leaves)
+        for b, buf, sv in zip(plan_.buckets, bufs, svecs):
+            if mode == "decoded":
+                parts = bucketing.split_bucket(
+                    collectives.decoded_exchange_bucket(buf, axes), b)
+            elif mode == "pack8":
+                parts = wire.exchange_bucket(buf, b, scale=sv)
+            else:
+                parts = wire.exchange_bucket(buf, b)
+            for pos, (s, agg) in enumerate(zip(b.slots, parts)):
+                j = s.index
+                sh_ax = shard_axes[j]
+                shard_size = (ps_leaves[j].shape[sh_ax]
+                              if sh_ax != REPLICATED else None)
+                vs = _slice(agg, sh_ax, shard_size)
+                if mode == "votes":
+                    l1_reduce = ((lambda part: collectives.scalar_psum(part, fsdp_ax))
+                                 if sh_ax != REPLICATED else None)
+                    new_ps[j], new_efs[j] = engine.server_apply(
+                        ps_leaves[j], vs, comp, lr=lr, ef=ef_leaves[j],
+                        n_sel=n_sel, leaf_size=s.size, l1_reduce=l1_reduce,
+                        quorum=quorums[j], backend=backend)
+                else:
+                    new_ps[j], new_efs[j] = engine.server_apply(
+                        ps_leaves[j], vs, comp, lr=lr, ef=ef_leaves[j],
+                        n_sel=n_sel, server="mean",
+                        scale=(sv[pos] if mode == "scaled_votes" else None),
+                        backend=backend)
+        return new_ps, new_efs
+
     def body(state: TrainState, batch):
         with axis_rules(ACT_RULES_TRAIN, mesh):
             return _body_inner(state, batch)
@@ -312,6 +420,129 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         g_outer, g_h = head_vjp(jnp.float32(1.0))
 
         # ---------------- backward over superblocks ----------------
+        if block_plan is not None:
+            # bucketed + double-buffered: iteration for superblock l first
+            # applies the PENDING buckets (superblock l+1's compressed
+            # gradient, carried from the previous iteration), then runs this
+            # block's vjp + compress. The pending exchange has no data
+            # dependency on the vjp, so the collective flies while the
+            # recompute/compress math runs. A zero bucket primes the pipe
+            # (first iteration, results dropped) and the last pending bucket
+            # drains after the scan -> n_repeats + 1 exchanges per bucket.
+            n_sel_b = collectives.scalar_psum(mask.astype(jnp.float32), axes)
+            seeds_b = [prng.fold_seed(wseed, i) for i in blocks_idx_flat]
+            block_leaves = jax.tree_util.tree_leaves(params["blocks"])
+            ps0 = tuple(jnp.zeros(l.shape[1:], l.dtype) for l in block_leaves)
+            if has_ef:
+                ef0 = tuple(jnp.zeros(l.shape[1:], l.dtype)
+                            for l in jax.tree_util.tree_leaves(state.ef_residual["blocks"]))
+            else:
+                ef0 = tuple(jnp.float32(0.0) for _ in block_leaves)
+            bufs0 = tuple(jnp.zeros((b.rows, bucketing.ROW_WIDTH[block_plan.fmt]),
+                                    bucketing.ROW_DTYPE[block_plan.fmt])
+                          for b in block_plan.buckets)
+            svecs0 = tuple(jnp.ones((len(b.slots),), jnp.float32)
+                           for b in block_plan.buckets)
+
+            def bwd_body_b(carry, xs):
+                g_h, nnz_acc, pbufs, psvecs, pps, pefs = carry
+                if has_ef:
+                    block_shard, h_in, layer, ef_slice = xs
+                else:
+                    block_shard, h_in, layer = xs
+                # drain the pending (upper) superblock FIRST — its exchange
+                # overlaps this block's recompute below
+                new_shards, new_efs = _group_apply(
+                    block_plan, pbufs, psvecs, list(pps), list(pefs),
+                    block_shard_axes, block_quorums, n_sel=n_sel_b, lr=lr)
+                full = gather_block(block_shard)
+
+                def fwd(bp, h):
+                    return model.superblock_apply(bp, h, positions, positions3)
+
+                _, vjp = jax.vjp(fwd, full, h_in)
+                g_block, g_h_prev = vjp(g_h)
+                g_leaves, g_def = jax.tree_util.tree_flatten(g_block)
+                ps_leaves = g_def.flatten_up_to(block_shard)
+                ef_leaves = (g_def.flatten_up_to(ef_slice) if has_ef
+                             else [jnp.float32(0.0)] * len(g_leaves))
+                bases = [layer.astype(jnp.uint32) * jnp.uint32(g.size)
+                         for g in g_leaves]
+                bufs, svecs, nnz = _group_compress(
+                    block_plan, g_leaves, seeds_b, bases, mask)
+                outs = (jax.tree_util.tree_unflatten(g_def, new_shards),)
+                if has_ef:
+                    outs = outs + (jax.tree_util.tree_unflatten(g_def, new_efs),)
+                carry = (g_h_prev, nnz_acc + nnz, bufs, svecs,
+                         tuple(ps_leaves), tuple(ef_leaves))
+                return carry, outs
+
+            xs = (params["blocks"], h_inputs, jnp.arange(cfg.n_repeats))
+            if has_ef:
+                xs = xs + (state.ef_residual["blocks"],)
+            carry0 = (g_h, jnp.float32(0.0), bufs0, svecs0, ps0, ef0)
+            (g_h0, nnz_acc, pbufs, psvecs, pps, pefs), ys = jax.lax.scan(
+                bwd_body_b, carry0, xs, reverse=True)
+            # drain: the final pending buckets hold superblock 0's update.
+            # ys[l] holds superblock l+1's (iteration l applied the PENDING
+            # layer); ys[n_repeats-1] is the priming dummy — dropped.
+            fin_shards, fin_efs = _group_apply(
+                block_plan, pbufs, psvecs, list(pps), list(pefs),
+                block_shard_axes, block_quorums, n_sel=n_sel_b, lr=lr)
+
+            def _shift(stacked, first):
+                return jnp.concatenate([first[None], stacked[:-1]], axis=0)
+
+            new_blocks = jax.tree_util.tree_map(
+                _shift, ys[0],
+                jax.tree_util.tree_unflatten(blocks_treedef, fin_shards))
+            new_ef_blocks = (jax.tree_util.tree_map(
+                _shift, ys[1],
+                jax.tree_util.tree_unflatten(blocks_treedef, fin_efs))
+                if has_ef else None)
+
+            # ---- embed backward + bucketed outer group ----
+            g_embed = None
+            if cfg.input_kind == "tokens":
+                def embed_fn(emb):
+                    return model.embed_stage({"embed": emb}, batch)
+                _, embed_vjp = jax.vjp(embed_fn, outer_full["embed"])
+                (g_embed,) = embed_vjp(g_h0)
+
+            g_outer_leaves = []
+            for k in outer_keys:
+                g_k = g_outer[k]
+                if k == "embed" and g_embed is not None:
+                    g_k = g_k + g_embed
+                g_outer_leaves.append(g_k)
+            seeds_o = [prng.fold_seed(wseed, idx_tree[k]) for k in outer_keys]
+            bases_o = [jnp.uint32(0)] * len(outer_keys)
+            o_bufs, o_svecs, o_nnz = _group_compress(
+                outer_plan, g_outer_leaves, seeds_o, bases_o, mask)
+            nnz_acc = nnz_acc + o_nnz
+            o_efs = ([state.ef_residual[k] for k in outer_keys] if has_ef
+                     else [jnp.float32(0.0)] * len(outer_keys))
+            o_new, o_new_efs = _group_apply(
+                outer_plan, o_bufs, o_svecs, [params[k] for k in outer_keys],
+                o_efs, outer_shard_axes, outer_quorums, n_sel=n_sel_b, lr=lr)
+
+            new_params = {"blocks": new_blocks}
+            new_ef = {"blocks": new_ef_blocks} if has_ef else None
+            for k, np_, ne in zip(outer_keys, o_new, o_new_efs):
+                new_params[k] = np_
+                if has_ef:
+                    new_ef[k] = ne
+
+            loss_mean = collectives.scalar_psum(loss, axes) / n_workers
+            nnz_mean = (collectives.scalar_psum(nnz_acc, axes) / n_workers
+                        / jnp.float32(total_coords))
+            metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
+                       "participated": n_sel_b,
+                       "wire_bytes_per_device": jnp.float32(wire_ledger)}
+            new_state = TrainState(params=new_params, ef_residual=new_ef,
+                                   step=state.step + 1, seed=state.seed)
+            return new_state, metrics
+
         def bwd_body(carry, xs):
             g_h, nnz_acc = carry
             if has_ef:

@@ -3,6 +3,9 @@
    (identical seeds/counters), modulo float-assoc grad differences.
 2. FSDP layout: params actually sharded (per-device bytes < full size).
 3. EF server variant runs.
+4. bucketed + double-buffered streamed step == per-leaf streamed step bitwise,
+   all four wire modes x {jnp, interpret} backends (the comm/compute-overlap
+   pipeline must be a pure re-scheduling of the same arithmetic).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -94,6 +97,32 @@ def main():
     efn = sum(float(jnp.sum(x.astype(jnp.float32)**2)) for x in jax.tree_util.tree_leaves(o2.ef_residual))
     assert np.isfinite(efn) and efn > 0
     print("OK streamed EF 2 rounds, loss:", float(m2["loss"]), "resid sq:", efn)
+
+    # --- bucketed + double-buffered == per-leaf, 4 wire modes x 2 backends ---
+    from repro.analysis.drivers import MODE_SETUPS
+    for wmode, (comp_name, server, vote_impl, value) in MODE_SETUPS.items():
+        comp_w = CompressionConfig(compressor=comp_name,
+                                   budget=BudgetConfig(kind="fixed", value=value),
+                                   server=server)
+        for backend in ("jnp", "interpret"):
+            ref = None
+            for bucketed in (False, True):
+                step = build_streamed_train_step(model, StreamedStepConfig(
+                    compression=comp_w, lr=lr, worker_axes=("data",),
+                    fsdp_axis="data", vote_impl=vote_impl, donate=False,
+                    backend=backend, bucketed=bucketed), mesh)
+                st = init_state(params_sh, server=comp_w.server, seed=42)
+                with compat.set_mesh(mesh):
+                    out, m = step(st, batch)
+                got = jax.tree_util.tree_leaves(
+                    jax.tree_util.tree_map(np.asarray, out.params))
+                got.append(np.asarray(m["nnz_frac"]))
+                if ref is None:
+                    ref = got
+                    continue
+                nd = sum(int((a != b).sum()) for a, b in zip(got, ref))
+                assert nd == 0, f"{wmode}/{backend}: {nd} coords differ"
+            print(f"OK streamed bucketed == per-leaf bitwise: {wmode}/{backend}")
 
 if __name__ == "__main__":
     main()
