@@ -29,6 +29,8 @@ from repro.analysis.jaxpr_audit import NoHbmIntermediate
 from repro.kernels import common as kcommon
 from repro.kernels.ef_server.ops import ef_server_op
 from repro.kernels.ef_server.ref import ef_scale, ef_server_ref
+from repro.kernels.golomb.ops import golomb_pack_op, sparsign_golomb_op
+from repro.kernels.golomb.ref import golomb_encode_ref, golomb_nbytes
 from repro.kernels.pack2bit.ops import pack2bit_op
 from repro.kernels.pack2bit.ref import pack2bit_ref
 from repro.kernels.pack8.ops import qsgd8_op, qsgd8_pack8_op
@@ -79,6 +81,13 @@ BYTES_PER_COORD = {
     ("uplink_fused_terngrad", "pallas"): 4 + 0.25,
     ("uplink_two_pass_noisy_sign", "pallas"): (4 + 1) + (1 + 0.25),
     ("uplink_two_pass_terngrad", "pallas"): (4 + 1) + (1 + 0.25),
+    # the entropy-coded (golomb) uplink at plan p=0.05: fused reads the f32
+    # gradient and writes the coded byte stream in ONE pass (~0.05 B/coord of
+    # capacity rows on the wire — sub-2-bit); two-pass pays the int8 ternary
+    # write + re-read before coding
+    ("uplink_fused_golomb", "pallas"): 4 + 0.05,
+    ("uplink_two_pass_golomb", "pallas"): (4 + 1) + (1 + 0.05),
+    ("uplink_two_pass_golomb", "jnp"): (4 + 4 + 4 + 1) + (1 + 0.05),
     # the 8-bit QSGD (pack8) uplink: fused reads the f32 gradient and writes
     # the int8 sign*level wire payload in ONE pass (1 B/coord on the wire);
     # the decoded-psum chain it replaces quantizes, re-reads the levels and
@@ -146,6 +155,23 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
              lambda rule=rule, param=param: jax.block_until_ready(
                  pack2bit_op(ternary_compress_op(g, param, 7, rule=rule)))),
         ]
+    # the entropy-coded golomb uplink (sparsign at ~5% realized density vs a
+    # plan capacity of p=0.05): fused gradient->coded-bytes kernel vs the
+    # two-pass compress-then-encode chain, plus the engine's all-jnp reference
+    # (sparsign_ref + the format-defining reference coder)
+    p_g, budget_g = 0.05, 0.06
+    golomb_jnp = jax.jit(lambda x: golomb_encode_ref(
+        sparsign_ref(x, budget_g, 7), p=p_g))
+    cases += [
+        ("uplink_fused_golomb", "pallas",
+         lambda: jax.block_until_ready(
+             sparsign_golomb_op(g, budget_g, 7, p=p_g))),
+        ("uplink_two_pass_golomb", "pallas",
+         lambda: jax.block_until_ready(
+             golomb_pack_op(sparsign_op(g, budget_g, 7), p=p_g))),
+        ("uplink_two_pass_golomb", "jnp",
+         lambda: jax.block_until_ready(golomb_jnp(g))),
+    ]
     # the 8-bit QSGD (pack8) uplink vs the decoded-psum chain it replaces
     # (1 B/coord wire payload vs 4 B/coord fp32); seed passed as uint32 like
     # the engine supplies it, so the no-int32 jaxpr pin below stays exact
@@ -190,6 +216,22 @@ def _bench_shape(name: str, shape, records: list, pallas_label: str):
         assert t_i8 >= n
         int8_hbm[(f"uplink_fused_{label}", "pallas")] = 0
         int8_hbm[(f"uplink_two_pass_{label}", "pallas")] = t_i8
+    # golomb structural pin: the fused coded uplink never materializes the
+    # int8 ternary tensor (both two-pass chains do, >= n elements) — and its
+    # payload really is the sub-2-bit capacity buffer the ledger bills
+    findings = no_i8.check(
+        "uplink_fused_golomb",
+        lambda x: sparsign_golomb_op(x, budget_g, 7, p=p_g), g)
+    assert findings == [], "\n".join(f.render() for f in findings)
+    gp_i8 = kcommon.int8_hbm_elems(
+        lambda x: golomb_pack_op(sparsign_op(x, budget_g, 7), p=p_g), g)
+    gj_i8 = kcommon.int8_hbm_elems(golomb_jnp, g)
+    assert gp_i8 >= n and gj_i8 >= n
+    assert sparsign_golomb_op(g, budget_g, 7, p=p_g).nbytes \
+        == golomb_nbytes(n, p_g) < pack2bit_op(t).nbytes
+    int8_hbm[("uplink_fused_golomb", "pallas")] = 0
+    int8_hbm[("uplink_two_pass_golomb", "pallas")] = gp_i8
+    int8_hbm[("uplink_two_pass_golomb", "jnp")] = gj_i8
     # pack8 structural pin: the fused qsgd8 uplink has no int32 level tensor
     # at the HBM level (limit=1 allows the to_2d pad's scatter-start index,
     # exactly qsgd8's declared hbm_limits); the decoded chain necessarily

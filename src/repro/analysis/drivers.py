@@ -29,21 +29,39 @@ import jax.numpy as jnp
 
 from repro.analysis.hlo_audit import HloJaxprAgreement, hlo_collective_stats
 from repro.analysis.jaxpr_audit import (CollectiveCensus, CollectiveCountBudget,
-                                        DtypePromotionDrift,
+                                        DtypePromotionDrift, EntropyWireBudget,
                                         check_fused_uplink, collective_census)
 
 #: hypothetical worker count the census ring model is costed at: > 1 so every
 #: ring term is non-vacuous, <= 127 so the int8 _sum_dtype bucket still holds
 HYPOTHETICAL_M = 16
 
-#: wire mode -> (compressor, server, vote_impl, budget): one representative
-#: registry row per mode (engine.wire_mode must resolve to the key)
+#: plan-time nonzero fraction of the golomb setup: the paper-regime 5%
+#: sparsity — doubles as the setup's target_sparsity budget, so
+#: ``engine.resolve_golomb_p`` sizes the wire capacity from the SAME number
+GOLOMB_P = 0.05
+
+#: wire setup -> (compressor, server, vote_impl, budget): one representative
+#: registry row per setup (engine.wire_mode must resolve to
+#: ``wire_mode_of(key)``). "golomb" is the entropy-coded PAYLOAD format of
+#: the votes mode (engine.wire_payload_format), not a wire mode of its own —
+#: it gets its own setup row because its wire object, ledger arithmetic and
+#: bucket plan all differ from the flat 2-bit votes wire.
 MODE_SETUPS = {
     "votes": ("sparsign", "majority_vote", "psum", 2.0),
     "scaled_votes": ("terngrad", "mean", "psum", 1.0),
     "pack8": ("qsgd8", "mean", "allgather_packed", 1.0),
     "decoded": ("qsgd8", "mean", "psum", 1.0),
+    "golomb": ("sparsign_golomb", "majority_vote", "allgather_packed",
+               GOLOMB_P),
 }
+
+
+def wire_mode_of(mode: str) -> str:
+    """The engine wire mode one setup's negotiation resolves to — identity
+    except for the golomb setup, which rides the votes mode on an
+    entropy-coded payload."""
+    return "votes" if mode == "golomb" else mode
 
 
 def tiny_model():
@@ -73,8 +91,11 @@ def mode_comp(mode: str):
     from repro.core.budgets import BudgetConfig
 
     compressor, server, vote_impl, budget = MODE_SETUPS[mode]
+    # the golomb setup's budget IS its plan sparsity: a target_sparsity
+    # budget both drives the compressor and resolves the wire capacity p
+    kind = "target_sparsity" if mode == "golomb" else "fixed"
     return CompressionConfig(compressor=compressor,
-                             budget=BudgetConfig(kind="fixed", value=budget),
+                             budget=BudgetConfig(kind=kind, value=budget),
                              server=server)
 
 
@@ -84,6 +105,8 @@ def mode_wire(mode: str, m: int):
 
     if mode == "pack8":
         return collectives.Pack8Wire(axes=("data",), n_workers=m)
+    if mode == "golomb":
+        return collectives.GolombWire(axes=("data",), n_workers=m, p=GOLOMB_P)
     return collectives.VoteWire(axes=("data",), n_workers=m)
 
 
@@ -98,7 +121,12 @@ def build_mode_step(mode: str, *, bucketed: bool = False):
     _, server, vote_impl, _ = MODE_SETUPS[mode]
     comp = mode_comp(mode)
     resolved = engine.wire_mode(comp, vote_impl=vote_impl)
-    assert resolved == mode, (mode, resolved)
+    assert resolved == wire_mode_of(mode), (mode, resolved)
+    if mode == "golomb":
+        # the golomb setup is only itself if the payload negotiation picks
+        # the entropy-coded stream (votes mode + the gather impl)
+        assert engine.wire_payload_format(
+            comp, resolved, vote_impl=vote_impl) == "golomb"
     model = tiny_model()
     mesh = make_host_mesh(1, 1)
     params = model.init(jax.random.PRNGKey(0))
@@ -123,6 +151,7 @@ def mode_ledger(mode: str, model, m: int):
     comp = mode_comp(mode)
     share = engine.needs_shared_linf(comp)
     wire = mode_wire(mode, m)
+    emode = wire_mode_of(mode)
     payload = scalar = 0.0
     for s in jax.tree_util.tree_leaves(model.param_shapes()):
         n = int(math.prod(s.shape))
@@ -131,7 +160,7 @@ def mode_ledger(mode: str, model, m: int):
         sc = (wire.scalar_bytes() if mode == "pack8" else 0.0) \
             + (collectives.allreduce_scalar_bytes(m) if share else 0.0)
         assert abs((p + sc) - collectives.uplink_ledger(
-            mode, wire, n, share_linf=share)) < 1e-6, (mode, n)
+            emode, wire, n, share_linf=share)) < 1e-6, (mode, n)
         payload += p
         scalar += sc
     return payload, scalar
@@ -142,10 +171,11 @@ def mode_bucket_plan(mode: str, model, m: int, bucket_bytes=None):
     from repro.dist import bucketing
 
     wire = mode_wire(mode, m)
-    fmt = bucketing.wire_bucket_format(mode, wire)
+    fmt = bucketing.wire_bucket_format(wire_mode_of(mode), wire)
     return bucketing.build_bucket_plan(
         jax.tree_util.tree_leaves(model.param_shapes()), fmt,
-        bucket_bytes=bucket_bytes)
+        bucket_bytes=bucket_bytes,
+        rows_fn=(wire.payload_rows if fmt == "golomb" else None))
 
 
 def mode_bucketed_ledger(mode: str, model, m: int, bucket_bytes=None):
@@ -158,7 +188,8 @@ def mode_bucketed_ledger(mode: str, model, m: int, bucket_bytes=None):
     share = engine.needs_shared_linf(mode_comp(mode))
     wire = mode_wire(mode, m)
     plan = mode_bucket_plan(mode, model, m, bucket_bytes)
-    payload, scalar = bucketing.plan_ledger(mode, wire, plan, share_linf=share)
+    payload, scalar = bucketing.plan_ledger(wire_mode_of(mode), wire, plan,
+                                            share_linf=share)
     return payload, scalar, plan
 
 
@@ -280,6 +311,55 @@ def run_count_checks():
             checks += 1
     f, c = count_ratio_checks()
     return findings + f, checks + c
+
+
+#: billed-byte floor of the entropy-coded wire vs the flat 2-bit wire at the
+#: paper-regime plan sparsity (the PR's acceptance threshold)
+MIN_ENTROPY_RATIO = 2.0
+
+
+def entropy_wire_ledgers(model, m: int = HYPOTHETICAL_M):
+    """((golomb_per_leaf, pack2_per_leaf), (golomb_bucketed, pack2_bucketed))
+    payload bytes one round of ``model`` bills on the entropy-coded wire vs
+    the flat 2-bit gather wire at ``m`` hypothetical workers. Pure ledger/plan
+    arithmetic — no tracing; the same formulas the census pins bytes against,
+    so a floor asserted here is a floor on the traced wire."""
+    from repro.dist import bucketing, collectives
+
+    gw = mode_wire("golomb", m)
+    pw = collectives.PackedVoteWire(axes=("data",), n_workers=m)
+    leaves = jax.tree_util.tree_leaves(model.param_shapes())
+    g_leaf = sum(gw.wire_bytes(int(math.prod(s.shape))) for s in leaves)
+    p_leaf = sum(pw.wire_bytes(int(math.prod(s.shape))) for s in leaves)
+    g_plan = bucketing.build_bucket_plan(leaves, "golomb",
+                                         rows_fn=gw.payload_rows)
+    p_plan = bucketing.build_bucket_plan(leaves, "pack2")
+    g_bucket, _ = bucketing.plan_ledger("votes", gw, g_plan)
+    p_bucket, _ = bucketing.plan_ledger("votes", pw, p_plan)
+    return (g_leaf, p_leaf), (g_bucket, p_bucket)
+
+
+def entropy_wire_checks(m: int = HYPOTHETICAL_M):
+    """Blocking byte-ratio floor: on every stacked-block model config, the
+    golomb wire's billed payload bytes — capacity padding tax included — must
+    undercut the flat 2-bit wire by >= MIN_ENTROPY_RATIO x at the paper-regime
+    plan sparsity (GOLOMB_P), per-leaf AND bucketed. The byte twin of
+    ``count_ratio_checks``: pure plan arithmetic over the real model shape
+    trees, no tracing."""
+    from repro.configs.registry import get_config
+    from repro.models.model import Model
+
+    rule = EntropyWireBudget(MIN_ENTROPY_RATIO)
+    findings, checks = [], 0
+    for name in RATIO_CONFIGS:
+        model = Model(get_config(name))
+        (g_leaf, p_leaf), (g_bucket, p_bucket) = entropy_wire_ledgers(model, m)
+        findings += rule.check(f"{name}[per-leaf]",
+                               golomb_bytes=g_leaf, pack2_bytes=p_leaf)
+        findings += rule.check(f"{name}[bucketed]",
+                               golomb_bytes=g_bucket, pack2_bytes=p_bucket)
+        checks += 2
+    return findings, checks
 
 
 def hlo_check(mode: str = "votes"):

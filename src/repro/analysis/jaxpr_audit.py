@@ -409,6 +409,38 @@ class CollectiveCountBudget(Rule):
         return findings
 
 
+class EntropyWireBudget(Rule):
+    """Blocking compression-ratio floor for the entropy-coded uplink.
+
+    The golomb wire only earns its place if its HONEST billed bytes — static
+    capacity rows including the percentile padding tax, exactly what the
+    fixed-shape gather ships and the ledger/census pin — undercut the flat
+    2-bit wire by at least ``min_ratio`` at the paper-regime plan sparsity.
+    A capacity formula drifting loose (over-padded rows), a row-alignment
+    regression, or a bucket plan billing coordinate-count fiction would all
+    silently eat the sub-2-bit win; this rule blocks on it, the byte twin of
+    ``CollectiveCountBudget``'s launch-ratio floor.
+    """
+
+    name = "entropy-wire-budget"
+    description = ("golomb wire bytes (capacity padding included) must beat "
+                   "the flat 2-bit wire by the configured floor")
+
+    def __init__(self, min_ratio: float = 2.0):
+        self.min_ratio = float(min_ratio)
+
+    def check(self, label: str, *, golomb_bytes: float,
+              pack2_bytes: float) -> list:
+        if golomb_bytes * self.min_ratio > pack2_bytes:
+            ratio = pack2_bytes / max(golomb_bytes, 1e-9)
+            return [self.finding(
+                label,
+                f"golomb wire bills {golomb_bytes:.0f} B vs {pack2_bytes:.0f} "
+                f"B on the flat 2-bit wire — ratio {ratio:.2f}x is under the "
+                f"{self.min_ratio:.1f}x floor")]
+        return []
+
+
 # ---------------------------------------------------------------------------
 # DtypePromotionDrift — f32 leaks on declared-narrow leaf paths
 # ---------------------------------------------------------------------------

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import prng
+from repro.kernels.golomb.ops import sparsign_golomb_op
 from repro.kernels.pack8.ops import qsgd8_op, qsgd8_pack8_op
 from repro.kernels.pack8.ref import QSGD8_LEVELS, qsgd8_levels_ref
 from repro.kernels.sparsign.ops import sparsign_op
@@ -244,10 +245,13 @@ SERVER_DECODES = ("sign", "scaled_sign", "dequant")
 #: densest lossless wire encoding of one worker message — what the message
 #: payload looks like on the byte-exchange wires (``engine.wire_mode`` and the
 #: ``VoteWire`` negotiation key on this, with no name branching):
-#:   pack2 — ternary symbols, 2-bit packed canonical view (0.25 B/coord)
-#:   pack8 — int8 sign*level canonical view + one f32 scale (1 B/coord + 4 B)
-#:   float — no sub-float encoding; decoded fp32 psum only (4 B/coord)
-WIRE_FORMATS = ("pack2", "pack8", "float")
+#:   pack2  — ternary symbols, 2-bit packed canonical view (0.25 B/coord)
+#:   golomb — ternary symbols, Golomb/RLE entropy-coded byte stream at a
+#:            plan-time capacity (~(2+b)*p bits/coord; kernels/golomb) —
+#:            needs the gather wire, falls back to int8 psum votes elsewhere
+#:   pack8  — int8 sign*level canonical view + one f32 scale (1 B/coord + 4 B)
+#:   float  — no sub-float encoding; decoded fp32 psum only (4 B/coord)
+WIRE_FORMATS = ("pack2", "golomb", "pack8", "float")
 
 #: information-theoretic uplink bit model of one worker message (paper §6 /
 #: Eq. 12 accounting — ``core.encoding.baseline_bits_per_round`` keys on this,
@@ -296,8 +300,10 @@ class CompressorSpec:
         assert self.wire_format in WIRE_FORMATS, self.wire_format
         assert self.uplink_bits in UPLINK_BIT_MODELS, self.uplink_bits
         assert (self.scale_protocol == "none") == (self.local_scale is None), self.name
-        # ternary <=> the 2-bit codebook; pack8/float are the non-ternary rows
-        assert (self.wire_format == "pack2") == self.is_ternary, self.name
+        # ternary <=> a ternary-symbol wire codebook (flat 2-bit or the
+        # entropy-coded stream); pack8/float are the non-ternary rows
+        assert (self.wire_format in ("pack2", "golomb")) == self.is_ternary, \
+            self.name
         if self.fused_pack_op is not None:
             assert self.wire_format != "float", \
                 f"{self.name}: a fused pack op needs a packed wire format"
@@ -340,6 +346,16 @@ SPECS: dict[str, CompressorSpec] = {spec.name: spec for spec in (
         is_ternary=True, scale_protocol="none",
         pallas_op=sparsign_op, fused_pack_op=sparsign_pack2bit_op,
         server_decode="sign", chunkable=True,
+        hbm_limits=_TERNARY_FUSED_HBM, uplink_bits="golomb_ternary"),
+    CompressorSpec(
+        # the same Def. 1 compressor as 'sparsign' (identical ternary stream,
+        # seeds, budget semantics) on the entropy-coded wire: Golomb/RLE-coded
+        # zero runs + sign bits at plan-time capacity instead of the flat
+        # 2-bit codebook — sub-0.5 bits/coord at paper-regime sparsity
+        name="sparsign_golomb", api=sparsign, values=_sparsign_values,
+        is_ternary=True, scale_protocol="none",
+        pallas_op=sparsign_op, fused_pack_op=sparsign_golomb_op,
+        server_decode="sign", chunkable=True, wire_format="golomb",
         hbm_limits=_TERNARY_FUSED_HBM, uplink_bits="golomb_ternary"),
     CompressorSpec(
         name="sign", api=sign_compressor, values=_sign_values,

@@ -35,14 +35,25 @@ def golomb_bstar(p: float) -> int:
     if not 0.0 < p < 1.0:
         raise ValueError(f"sparsity ratio p must be in (0,1), got {p}")
     num = math.log(GOLDEN_RATIO - 1.0)  # log(0.618...) < 0
-    den = math.log(1.0 - p)             # < 0
-    return max(0, 1 + int(math.floor(math.log2(num / den))))
+    # log1p, not log(1-p): at p ~< 1e-17, 1.0-p rounds to 1.0 and log(1.0-p)
+    # underflows to -0.0 -> ZeroDivisionError in the ratio below
+    den = math.log1p(-p)                # < 0
+    ratio = num / den
+    if ratio <= 1.0:
+        # p -> 1: run lengths are almost all zero; log2(ratio) -> -inf (and
+        # int(floor(-inf)) raises), but the optimal parameter is simply b*=0
+        return 0
+    return max(0, 1 + int(math.floor(math.log2(ratio))))
 
 
 def golomb_bits_per_index(p: float) -> float:
     """Average bits per nonzero index, Eq. 12."""
     bstar = golomb_bstar(p)
-    return bstar + 1.0 / (1.0 - (1.0 - p) ** (2.0 ** bstar))
+    # 1 - (1-p)^k via expm1(k*log1p(-p)): the direct form rounds to 1.0 - 1.0
+    # = 0.0 at tiny p (ZeroDivisionError); the log-space form keeps the ~k*p
+    # leading term exactly
+    denom = -math.expm1((2.0 ** bstar) * math.log1p(-p))
+    return bstar + 1.0 / denom
 
 
 def ternary_stream_bits(d: int, nnz: int, *, coder: str = "golomb") -> float:
@@ -52,19 +63,24 @@ def ternary_stream_bits(d: int, nnz: int, *, coder: str = "golomb") -> float:
     dense:  log2(3) bits per coordinate (Wen et al. 2017).
     naive_index: log2(d) bits per nonzero index + 1 sign bit (Remark 8).
     packed2bit: the TPU wire format - 2 bits per coordinate.
+
+    nnz <= 0 is a valid message (an all-zero round): the sparse coders
+    (golomb, naive_index) ship nothing, but the dense coders still pay their
+    d-proportional flat cost — the old blanket ``return 0.0`` short-circuit
+    silently zeroed dense/packed2bit streams too.
     """
+    if coder not in ("golomb", "dense", "naive_index", "packed2bit"):
+        raise ValueError(f"unknown coder {coder!r}")
+    if coder == "dense":
+        return d * math.log2(3.0)
+    if coder == "packed2bit":
+        return d * 2.0
     if nnz <= 0:
         return 0.0
     p = min(max(nnz / d, 1e-12), 1.0 - 1e-12)
     if coder == "golomb":
         return nnz * (golomb_bits_per_index(p) + 1.0)
-    if coder == "dense":
-        return d * math.log2(3.0)
-    if coder == "naive_index":
-        return nnz * (math.log2(max(d, 2)) + 1.0)
-    if coder == "packed2bit":
-        return d * 2.0
-    raise ValueError(f"unknown coder {coder!r}")
+    return nnz * (math.log2(max(d, 2)) + 1.0)
 
 
 def round_bits(

@@ -50,6 +50,8 @@ from repro.dist import compat
 from repro.kernels import common as kcommon
 from repro.kernels.ef_server.ops import ef_server_op
 from repro.kernels.ef_server.ref import ef_server_ref
+from repro.kernels.golomb.ops import golomb_pack_op
+from repro.kernels.golomb.ref import golomb_encode_ref
 from repro.kernels.pack2bit.ops import pack2bit_op
 from repro.kernels.pack2bit.ref import pack2bit_ref
 from repro.kernels.vote_update.ops import vote_update_op
@@ -107,6 +109,11 @@ def wire_mode(cfg: "CompressionConfig", vote_impl: Optional[str] = None) -> str:
                      so the psum/hier impls fall back to the decoded wire.
       decoded      — decoded float32 messages, psum + mean server (per-worker
                      scales on ternary wires, and the float wire format).
+
+    The mode says what the symbols MEAN on the wire; how ternary symbols are
+    *encoded* (flat 2-bit vs the Golomb entropy-coded stream) is the
+    orthogonal ``wire_payload_format`` lookup — golomb-format specs ride the
+    votes/scaled_votes modes unchanged.
     """
     spec = get_spec(cfg.compressor)
     if spec.wire_format == "float":
@@ -116,6 +123,48 @@ def wire_mode(cfg: "CompressionConfig", vote_impl: Optional[str] = None) -> str:
     if is_vote_server(cfg):
         return "votes"
     return "scaled_votes" if spec.scale_shared else "decoded"
+
+
+def wire_payload_format(cfg: "CompressionConfig", mode: str,
+                        vote_impl: Optional[str] = None) -> str:
+    """Which payload format the wire object should speak for this
+    (compressor, wire mode, vote_impl) triple — the ``make_vote_wire``
+    ``wire_format=`` argument, as a pure ``CompressorSpec`` table lookup.
+
+    The entropy-coded stream needs the gather wire (a fabric psum cannot sum
+    variable-length byte streams), so a golomb-format spec on the psum/hier
+    impls rides plain int8 votes instead — the golomb twin of pack8's
+    fall-back-to-decoded rule, and bitwise-identical votes either way."""
+    if mode == "pack8":
+        return "pack8"
+    spec = get_spec(cfg.compressor)
+    if (spec.wire_format == "golomb" and vote_impl == "allgather_packed"
+            and mode in ("votes", "scaled_votes")):
+        return "golomb"
+    return "pack2"
+
+
+def resolve_golomb_p(cfg: "CompressionConfig",
+                     golomb_p: Optional[float] = None) -> float:
+    """The plan-time nonzero fraction that sizes the golomb wire's static
+    capacity: an explicit setting wins, else a ``target_sparsity`` budget's
+    target IS the plan fraction. Anything else is a loud build-time error —
+    guessing p would silently mis-size the capacity (overflow truncation or
+    a padded wire that loses to pack2)."""
+    if golomb_p is not None:
+        p = float(golomb_p)
+    elif cfg.budget.kind == "target_sparsity":
+        p = float(cfg.budget.value)
+    else:
+        raise ValueError(
+            f"the golomb wire needs a plan-time nonzero fraction to size its "
+            f"static capacity: set the step config's golomb_p, or use a "
+            f"budget of kind 'target_sparsity' (whose target is the plan "
+            f"fraction). Budget kind {cfg.budget.kind!r} carries no nnz "
+            f"fraction to plan against.")
+    if not 0.0 < p < 1.0:
+        raise ValueError(f"golomb plan fraction must be in (0,1), got {p}")
+    return p
 
 
 def needs_shared_linf(cfg: "CompressionConfig") -> bool:
@@ -211,7 +260,8 @@ def compress_leaf(
     ``wire`` (a ``repro.dist.collectives.VoteWire``, or None) selects the
     message's *wire-native* format (``wire.native_format``, validated against
     the spec's declared ``wire_format``). When the wire wants a packed format
-    — 2-bit codes for ternary compressors, int8 sign*level for pack8 —
+    — 2-bit codes or the Golomb entropy-coded stream for ternary
+    compressors, int8 sign*level for pack8 —
     ``values`` is the packed canonical view, produced in one fused pass
     (gradient -> wire bytes, no int8 ternary / int32 level tensor in HBM)
     when the spec registers a ``fused_pack_op``, else compressed then packed.
@@ -241,18 +291,22 @@ def compress_leaf(
     param = budget if scale is None else scale
     msg_scale = jnp.float32(1.0) if scale is None else scale.astype(jnp.float32)
     wire_fmt = wire.native_format if wire is not None else None
-    want_packed = wire_fmt in ("pack2", "pack8")
+    want_packed = wire_fmt in ("pack2", "golomb", "pack8")
     if want_packed and spec.wire_format != wire_fmt:
         raise ValueError(
             f"the {wire_fmt!r} wire carries "
-            f"{'ternary' if wire_fmt == 'pack2' else 'int8 sign*level'} "
+            f"{'int8 sign*level' if wire_fmt == 'pack8' else 'ternary'} "
             f"messages only; compressor {cfg.compressor!r} declares wire "
             f"format {spec.wire_format!r}")
     interpret = backend == "interpret"
+    # the golomb wire's static capacity is sized by its plan-time nonzero
+    # fraction — the fused/two-pass encoders must use the SAME p or the
+    # payload shape disagrees with the wire ledger at trace time (loudly)
+    fused_kwargs = {"p": wire.p} if wire_fmt == "golomb" else {}
     if backend != "jnp" and spec.pallas_op is not None:
         if want_packed and spec.fused_pack_op is not None:
             packed = spec.fused_pack_op(g, param, seed, counter_base,
-                                        interpret=interpret)
+                                        interpret=interpret, **fused_kwargs)
             return CompressedGrad(values=packed, scale=msg_scale)
         vals = spec.pallas_op(g, param, seed, counter_base, interpret=interpret)
     elif spec.chunkable:
@@ -266,6 +320,12 @@ def compress_leaf(
             # the pack8 payload IS the canonical int8 view of the levels
             view, _ = kcommon.to_2d(vals.reshape(-1))
             return CompressedGrad(values=view, scale=msg_scale)
+        if wire_fmt == "golomb":
+            if backend == "jnp":
+                packed = golomb_encode_ref(vals, p=wire.p)
+            else:
+                packed = golomb_pack_op(vals, p=wire.p, interpret=interpret)
+            return CompressedGrad(values=packed, scale=msg_scale)
         if backend == "jnp":
             view, _ = kcommon.to_2d(vals.reshape(-1))
             packed = pack2bit_ref(view)

@@ -18,6 +18,12 @@ Row granularity is what keeps the packed formats exchange-legal:
     whose grid needs sublane-aligned row counts — leaves align to
     ``SUBLANE_PAD`` rows (``align_rows=32``), i.e. exactly their canonical
     per-leaf row count, and decode per slot with that worker's gathered scale.
+  * ``golomb`` slots are whole self-describing entropy-coded streams (their
+    own in-band headers) at plan-time CAPACITY rows — the variable-length
+    payload protocol: per-slot encoded lengths become static capacity via
+    the wire's ``payload_rows`` (``build_bucket_plan``'s ``rows_fn``), the
+    length prefix rides in-band, and each gathered slice decodes exactly as
+    the per-leaf wire message (``align_rows=1``).
   * ``int8`` votes and ``f32`` decoded messages are element-wise under
     psum, so rows are just the shared layout unit (``align_rows=1``).
 
@@ -43,25 +49,32 @@ from repro.dist import collectives
 from repro.kernels import common as kcommon
 
 #: payload formats a bucket can carry (wire native formats + the decoded f32
-#: stream, which rides the fp32 psum outside any VoteWire)
-BUCKET_FORMATS = ("int8", "pack2", "pack8", "f32")
+#: stream, which rides the fp32 psum outside any VoteWire). ``golomb`` rows
+#: are capacity rows of the entropy-coded stream, NOT coordinate rows — each
+#: slot is one self-describing coded message (kernels/golomb), so slot sizing
+#: comes from the wire's capacity model (``build_bucket_plan``'s ``rows_fn``)
+#: rather than ``leaf_rows``.
+BUCKET_FORMATS = ("int8", "pack2", "golomb", "pack8", "f32")
 
 #: bytes one canonical payload row occupies in each format's wire buffer
 ROW_BYTES = {"int8": kcommon.LANES, "pack2": kcommon.LANES // 4,
+             "golomb": kcommon.LANES // 4,
              "pack8": kcommon.LANES, "f32": 4 * kcommon.LANES}
 
 #: numpy/jnp dtype of the payload buffer per format
-ROW_DTYPE = {"int8": jnp.int8, "pack2": jnp.uint8,
+ROW_DTYPE = {"int8": jnp.int8, "pack2": jnp.uint8, "golomb": jnp.uint8,
              "pack8": jnp.int8, "f32": jnp.float32}
 
 #: row width (elements per row) of the payload buffer per format
 ROW_WIDTH = {"int8": kcommon.LANES, "pack2": kcommon.LANES // 4,
+             "golomb": kcommon.LANES // 4,
              "pack8": kcommon.LANES, "f32": kcommon.LANES}
 
 
 def format_align_rows(fmt: str) -> int:
     """Slot row-alignment per payload format: pack8 slices feed the fused
-    decode kernel (sublane-tiled grid), everything else is row-independent."""
+    decode kernel (sublane-tiled grid), everything else is row-independent
+    (golomb slots are whole self-describing streams — any row start works)."""
     if fmt not in BUCKET_FORMATS:
         raise ValueError(f"unknown bucket format {fmt!r}; known: {BUCKET_FORMATS}")
     return kcommon.SUBLANE_PAD if fmt == "pack8" else 1
@@ -141,12 +154,23 @@ def _tail_pad(rows: int, fmt: str) -> int:
 
 
 def build_bucket_plan(shapes: Sequence, fmt: str, *,
-                      bucket_bytes: Optional[int] = None) -> BucketPlan:
+                      bucket_bytes: Optional[int] = None,
+                      rows_fn=None) -> BucketPlan:
     """Greedy in-order packing of ``shapes`` (leaf shapes, canonical flat
     order) into buckets of at most ``bucket_bytes`` payload each
     (``None`` = unbounded: one bucket for the whole group). A leaf larger
     than the cap gets its own bucket — leaves are never split across
-    buckets (per-leaf quorum/EF/server math address one slot)."""
+    buckets (per-leaf quorum/EF/server math address one slot).
+
+    ``rows_fn`` (n_coords -> payload rows) overrides the coordinate-count
+    row rule for variable-length formats: the golomb wire's slot rows are
+    plan-time CAPACITY rows (``GolombWire.payload_rows``), not
+    ``leaf_rows``. Required for fmt='golomb', meaningless elsewhere."""
+    if (fmt == "golomb") != (rows_fn is not None):
+        raise ValueError(
+            "rows_fn is how the variable-length golomb format sizes its "
+            "capacity slots: required for fmt='golomb' (pass the wire's "
+            "payload_rows), invalid for the fixed-rate formats")
     align = format_align_rows(fmt)
     row_bytes = ROW_BYTES[fmt]
     cap_rows = None
@@ -165,7 +189,7 @@ def build_bucket_plan(shapes: Sequence, fmt: str, *,
     for i, s in enumerate(shapes):
         shape = tuple(s.shape) if hasattr(s, "shape") else tuple(s)
         n = int(math.prod(shape)) if shape else 1
-        rows = leaf_rows(n, align)
+        rows = rows_fn(n) if rows_fn is not None else leaf_rows(n, align)
         if cap_rows is not None and slots and row + rows > cap_rows:
             flush()
         slots.append(LeafSlot(index=i, size=n, shape=shape,
@@ -189,6 +213,13 @@ def as_rows(values: jnp.ndarray, fmt: str, rows: int) -> jnp.ndarray:
     The coordinate at (r, c) keeps flat index r*LANES + c, so the
     counter-stream layout is untouched."""
     width = ROW_WIDTH[fmt]
+    if fmt == "golomb":
+        # coded messages are emitted at EXACTLY their capacity rows (the
+        # same golomb_rows(n, p) rule that sized the slot) — a mismatch
+        # means encoder and plan disagree on p or n: refuse loudly
+        assert values.ndim == 2 and values.shape == (rows, width), \
+            (values.shape, rows, width)
+        return values
     if fmt in ("pack2", "pack8"):
         assert values.ndim == 2 and values.shape[1] == width, values.shape
         assert values.shape[0] >= rows, (values.shape, rows)
@@ -239,7 +270,7 @@ def plan_ledger(mode: str, wire, plan: BucketPlan, *,
     payload = scalar = 0.0
     for b in plan.buckets:
         p, s = collectives.uplink_ledger_bucket(mode, wire, b.n_coords,
-                                                len(b.slots))
+                                                len(b.slots), rows=b.rows)
         payload += p
         scalar += s
     if share_linf:

@@ -20,6 +20,12 @@ All three return the same per-coordinate vote total; the equivalence is
 pinned by tests/mdev/check_collectives.py on a forced 8-device host mesh and
 by tests/mdev/check_wires.py at the train-step level.
 
+Sparse ternary messages can also ride the sub-2-bit entropy-coded gather
+(``GolombWire``, wire format ``golomb``): Golomb/RLE-coded zero runs + sign
+bits at a static plan-time capacity (kernels/golomb), ~(2+b)*p bits/coord at
+plan nonzero fraction p vs pack2's flat 2 — same integer vote totals, a
+fraction of the bytes at paper-regime sparsity.
+
 Non-ternary 8-bit payloads (qsgd8's sign*level stream, wire format ``pack8``)
 get their own gather-wire twin, ``vote_allgather_packed8``/``Pack8Wire``:
 1 B/coord plus each worker's 4-B decode scale, dequantized into the mean
@@ -100,6 +106,15 @@ def packed8_nbytes(n_coords: int) -> int:
     sizes (vs the idealized d)."""
     from repro.kernels import common as kcommon
     return kcommon.canonical_rows(n_coords) * kcommon.LANES
+
+
+def golomb_payload_nbytes(n_coords: int, p: float) -> int:
+    """Actual bytes of the entropy-coded golomb wire for an n-coordinate leaf
+    at plan-time nonzero fraction p: the static capacity rows (header +
+    six-sigma coded-bit bound, ``kernels.golomb.ref.golomb_rows``) — capacity
+    padding billed honestly, exactly what the fixed-shape gather ships."""
+    from repro.kernels.golomb import ref as golomb_ref
+    return golomb_ref.golomb_nbytes(n_coords, p)
 
 
 def vote_psum(votes: jnp.ndarray, axes: Sequence[str], n_workers: int) -> jnp.ndarray:
@@ -197,6 +212,20 @@ def _packed_decode_sum(gathered: jnp.ndarray, size: int, shape,
     return unpack2bit_sum_op(gathered, size, shape, interpret=interpret)
 
 
+def _golomb_decode_sum(gathered: jnp.ndarray, size: int, shape, *, p: float,
+                       backend: Optional[str]) -> jnp.ndarray:
+    """(M, rows, 128) gathered entropy-coded payloads -> int32 vote sum in
+    ``shape``, dispatched like the engine: jnp -> the reference decoder
+    (bitwise the kernel — shared helpers), else the fused decode-sum kernel."""
+    from repro.kernels.golomb.ops import ungolomb_sum_op
+    from repro.kernels.golomb.ref import ungolomb_sum_ref
+
+    if backend == "jnp":
+        return ungolomb_sum_ref(gathered, size, shape, p=p)
+    interpret = (backend == "interpret") if backend is not None else None
+    return ungolomb_sum_op(gathered, size, shape, p=p, interpret=interpret)
+
+
 def decoded_message(values: jnp.ndarray, scale, mask, *, is_ternary: bool):
     """One worker's ``decoded``-mode message: decode locally (values * scale),
     zero non-participants. Returns ``(decoded fp32 message, masked nnz)`` —
@@ -273,14 +302,19 @@ def uplink_ledger(mode: str, wire: "VoteWire", n_coords: int, *,
 
 
 def uplink_ledger_bucket(mode: str, wire: "VoteWire", n_coords: int,
-                         n_slots: int) -> Tuple[float, float]:
+                         n_slots: int, *,
+                         rows: Optional[int] = None) -> Tuple[float, float]:
     """Per-device uplink bytes for ONE bucketed exchange carrying ``n_slots``
     leaves in ``n_coords`` padded coordinates — the bucketed variant of
     ``uplink_ledger``, split census-style into (payload, scalar) bytes.
 
-    The payload term is the same wire byte model evaluated at the bucket's
-    padded coordinate count (``n_coords`` is a whole number of canonical rows,
-    so the packed ledgers are exact — padding is billed once per bucket).
+    The payload term is the wire's bucket byte model: for the fixed-rate
+    formats it is ``wire_bytes`` evaluated at the bucket's padded coordinate
+    count (``n_coords`` is a whole number of canonical rows, so the packed
+    ledgers are exact — padding is billed once per bucket); the
+    variable-length golomb wire instead bills its payload ROWS directly
+    (``rows``, the bucket's row count — slot rows are plan-time capacity,
+    not coordinate rows, so a coordinate-count model would be fiction).
     The pack8 wire additionally gathers one f32 decode scale per SLOT in a
     single (n_slots,) vector all-gather next to the payload; with >= 2 slots
     that vector is array payload under the census's classification, with one
@@ -291,7 +325,7 @@ def uplink_ledger_bucket(mode: str, wire: "VoteWire", n_coords: int,
     if mode == "decoded":
         payload = decoded_wire_bytes(n_coords, wire.n_workers)
     else:
-        payload = wire.wire_bytes(n_coords)
+        payload = wire.bucket_payload_bytes(n_coords, rows=rows)
     scalar = 0.0
     if mode == "pack8":
         scales = float((wire.n_workers - 1) * 4 * n_slots)
@@ -415,6 +449,14 @@ class VoteWire:
         per-worker scale gather."""
         m = self.n_workers
         return 2.0 * (m - 1) / m * 4.0
+
+    def bucket_payload_bytes(self, n_coords: int,
+                             rows: Optional[int] = None) -> float:
+        """Payload ledger for ONE bucket of this wire: the fixed-rate wires
+        bill by padded coordinate count (rows carry LANES coordinates each,
+        so ``wire_bytes(n_coords)`` is exact); the variable-length golomb
+        wire overrides this to bill its capacity rows directly."""
+        return self.wire_bytes(n_coords)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -581,19 +623,105 @@ class Pack8Wire(VoteWire):
         return float((self.n_workers - 1) * 4.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class GolombWire(VoteWire):
+    """All-gather of Golomb/RLE entropy-coded ternary payloads + fused
+    decode-sum — the sub-2-bit variable-length wire (``kernels/golomb``).
+
+    The message is a fixed-capacity uint8 byte stream sized at step-build
+    time from the plan nonzero fraction ``p`` (``ref.golomb_rows``): coded
+    zero-run gaps + sign bits behind an in-band header carrying the shipped/
+    dropped nonzero counts (the length prefix — a gathered buffer is
+    self-describing). Static capacity keeps the exchange a fixed-shape
+    all-gather, so the byte ledger (capacity padding included) equals the
+    traced collective exactly; messages denser than plan truncate at
+    capacity with the dropped count in the header, and configurations where
+    the capacity loses to pack2 already failed loudly at build time."""
+
+    backend: Optional[str] = None
+    p: float = 0.05
+
+    name = "allgather_golomb"
+    native_format = "golomb"
+
+    def message_nnz(self, values):
+        # the in-band header IS the count: bytes 0-3, uint32 little-endian
+        # (shipped nonzeros — what the server's vote sum will see)
+        h = values.reshape(-1)[:4].astype(jnp.float32)
+        return h[0] + h[1] * 256.0 + h[2] * 65536.0 + h[3] * 16777216.0
+
+    def message_dropped(self, values):
+        """Nonzeros truncated at capacity (header bytes 4-7) — the overflow
+        telemetry a caller can surface when realized nnz outruns plan p."""
+        h = values.reshape(-1)[4:8].astype(jnp.float32)
+        return h[0] + h[1] * 256.0 + h[2] * 65536.0 + h[3] * 16777216.0
+
+    def exchange(self, values, size, shape, *, scale=None):
+        if scale is not None:
+            raise ValueError(
+                "the golomb vote wire exchanges entropy-coded ternary votes; "
+                "a decode scale inside the exchange is a pack8-wire concept")
+        gathered = jax.lax.all_gather(values, self.axes, axis=0, tiled=False)
+        total = _golomb_decode_sum(gathered, size, shape, p=self.p,
+                                   backend=self.backend)
+        return total.astype(_sum_dtype(self.n_workers))
+
+    def exchange_bucket(self, payload, bucket, *, scale=None):
+        """ONE all-gather of the whole coded bucket, then per-slot fused
+        decode-sums on the gathered row slices. Slots are whole capacity
+        streams (their own headers), so each slice decodes exactly as the
+        per-leaf wire message — there is no whole-bucket decode to split:
+        the coded stream, unlike pack2 rows, is not coordinate-addressable."""
+        if scale is not None:
+            raise ValueError(
+                "the golomb vote wire exchanges entropy-coded ternary votes; "
+                "a decode scale inside the exchange is a pack8-wire concept")
+        gathered = jax.lax.all_gather(payload, self.axes, axis=0, tiled=False)
+        out = []
+        for s in bucket.slots:
+            rows = jax.lax.slice_in_dim(gathered, s.row_start,
+                                        s.row_start + s.rows, axis=1)
+            total = _golomb_decode_sum(rows, s.size, s.shape, p=self.p,
+                                       backend=self.backend)
+            out.append(total.astype(_sum_dtype(self.n_workers)))
+        return out
+
+    def wire_bytes(self, n_coords):
+        # ring all-gather of the capacity-padded coded payload to M-1 peers
+        return float((self.n_workers - 1)
+                     * golomb_payload_nbytes(n_coords, self.p))
+
+    def bucket_payload_bytes(self, n_coords, rows=None):
+        # bucket rows are capacity rows (plan-time, per slot), NOT coordinate
+        # rows — bill exactly the (rows, 128) uint8 buffer the gather ships
+        assert rows is not None, \
+            "golomb bucket ledger needs the bucket's payload row count"
+        from repro.kernels.golomb.ref import ROW_BYTES
+        return float((self.n_workers - 1) * rows * ROW_BYTES)
+
+    def payload_rows(self, n_coords: int) -> int:
+        """Static capacity rows of one n-coordinate leaf at the wire's plan
+        fraction — the bucket plan's ``rows_fn`` for this wire."""
+        from repro.kernels.golomb.ref import golomb_rows
+        return golomb_rows(n_coords, self.p)
+
+
 def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
                    backend: Optional[str] = None,
-                   wire_format: str = "pack2") -> VoteWire:
+                   wire_format: str = "pack2",
+                   golomb_p: Optional[float] = None) -> VoteWire:
     """Build the wire for ``impl`` over the worker ``axes`` at step-build time.
 
     Axis sizes come from ``mesh.shape`` when a mesh is given (the builders'
     path — errors surface before tracing), else from the ambient axis env
     (valid inside shard_map). ``backend`` steers the packed wires' decode-sum
     dispatch exactly like the engine's kernel backends. ``wire_format`` is the
-    compressor's declared payload format (``CompressorSpec.wire_format``):
-    ``pack2`` selects the ternary wires, ``pack8`` the 8-bit level gather
-    (``allgather_packed`` impl only — levels quantized against per-worker
-    norms cannot be reduced on the fabric).
+    negotiated payload format (``engine.wire_payload_format``): ``pack2``
+    selects the ternary wires, ``golomb`` the entropy-coded ternary gather
+    (``allgather_packed`` impl only — a fabric psum cannot sum byte streams;
+    ``golomb_p`` is its plan-time nonzero fraction, required), ``pack8`` the
+    8-bit level gather (``allgather_packed`` only — levels quantized against
+    per-worker norms cannot be reduced on the fabric).
     """
     axes = tuple(axes)
     if impl not in VOTE_IMPLS:
@@ -604,17 +732,32 @@ def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
             f"— e.g. ('pod', 'data') — got {axes!r}. Use vote_impl='psum' "
             f"for a flat worker domain; silently substituting the flat wire "
             f"here would misreport the hierarchical byte ledger.")
-    if wire_format not in ("pack2", "pack8"):
+    if wire_format not in ("pack2", "golomb", "pack8"):
         raise ValueError(
             f"unknown wire payload format {wire_format!r}; the vote wires "
-            f"speak 'pack2' (ternary) or 'pack8' (8-bit levels) — the float "
-            f"format rides the decoded psum, not a VoteWire")
+            f"speak 'pack2'/'golomb' (ternary) or 'pack8' (8-bit levels) — "
+            f"the float format rides the decoded psum, not a VoteWire")
     if wire_format == "pack8" and impl != "allgather_packed":
         raise ValueError(
             f"the pack8 wire needs vote_impl='allgather_packed' (per-worker "
             f"decode scales ride the gather; a fabric psum cannot sum levels "
             f"quantized against different norms), got {impl!r} — "
             f"engine.wire_mode falls back to the decoded wire there")
+    if wire_format == "golomb":
+        if impl != "allgather_packed":
+            raise ValueError(
+                f"the golomb wire needs vote_impl='allgather_packed' (a "
+                f"fabric psum cannot reduce variable-length byte streams), "
+                f"got {impl!r} — engine.wire_payload_format falls back to "
+                f"int8 psum votes there")
+        if golomb_p is None:
+            raise ValueError(
+                "the golomb wire needs golomb_p (the plan-time nonzero "
+                "fraction that sizes its static capacity) — see "
+                "engine.resolve_golomb_p")
+        if not 0.0 < float(golomb_p) < 1.0:
+            raise ValueError(
+                f"golomb plan fraction must be in (0,1), got {golomb_p}")
     sizes = tuple(int(mesh.shape[a]) for a in axes) if mesh is not None \
         else tuple(compat.axis_size(a) for a in axes)
     # one build-time validation point: every per-size /n in the byte ledgers
@@ -627,6 +770,9 @@ def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
         n *= s
     if wire_format == "pack8":
         return Pack8Wire(axes=axes, n_workers=n, backend=backend)
+    if wire_format == "golomb":
+        return GolombWire(axes=axes, n_workers=n, backend=backend,
+                          p=float(golomb_p))
     if impl == "hier":
         return HierVoteWire(axes=axes, n_workers=n,
                             inner_size=sizes[1], outer_size=sizes[0])

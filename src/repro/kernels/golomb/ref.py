@@ -1,0 +1,236 @@
+"""Pure-jnp reference for the Golomb/RLE entropy-coded ternary wire — THE
+format definition every other party is pinned against bitwise: the fused
+Pallas encoder (kernels/golomb/kernel.py calls the same emission helper), the
+fused decode-sum, the ``GolombWire`` exchange, and the byte ledger.
+
+Wire format of one worker message (one leaf, n true coordinates, plan-time
+nonzero fraction p):
+
+  * payload buffer: ``(rows, ROW_BYTES)`` uint8, ``rows`` fixed at plan/build
+    time by ``golomb_rows(n, p)`` — flattened row-major it IS the byte stream.
+  * bytes 0-3:  uint32 little-endian count of *shipped* nonzeros.
+  * bytes 4-7:  uint32 little-endian count of *dropped* nonzeros (capacity
+    overflow — see below). The in-band length prefix: a gathered buffer is
+    self-describing, no side-channel size exchange.
+  * bits from byte 8, LSB-first within each byte. Per shipped nonzero, in
+    ascending flat-coordinate order, a Rice code of the zero-run gap
+    (gap_0 = pos_0; gap_k = pos_k - pos_{k-1} - 1) with the static parameter
+    b = ``rice_b(p)`` (Eq. 12's b*): ``gap >> b`` one-bits, a terminating
+    zero bit, b remainder bits LSB-first, then 1 sign bit (1 = negative).
+
+Capacity is STATIC (python, plan-time): a six-sigma percentile bound on the
+nonzero count at the configured p plus the worst-case unary spill given that
+count (sum of gaps <= n - 1, so sum(gap >> b) <= n / 2^b). Messages whose
+realized nnz still overflows are truncated at capacity — the dropped count
+rides the header, loudly testable — while configurations where the capacity
+cannot beat the flat 2-bit wire fail at BUILD time (``golomb_rows`` raises,
+directing to the pack2 wire). Static capacity is what keeps the exchange a
+fixed-shape all-gather (jit-able, ledger == traced bytes exactly); the
+padding tax is billed honestly by ``dist.collectives.GolombWire``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common as kcommon
+
+#: in-band header: two uint32 LE counters (shipped nonzeros, dropped nonzeros)
+HEADER_BYTES = 8
+
+#: bytes per payload row — same 128-B row the pack2 wire ships, so a golomb
+#: bucket row is directly comparable to (and competes with) a pack2 row
+ROW_BYTES = kcommon.LANES // 4
+
+
+def rice_b(p: float) -> int:
+    """The static Rice/Golomb parameter: Eq. 12's b* at the plan-time nonzero
+    fraction p (``core.encoding.golomb_bstar``)."""
+    # deferred: a module-level import would cycle (core package init ->
+    # algorithm -> engine -> this module); rice_b only runs at plan time
+    from repro.core.encoding import golomb_bstar
+    return golomb_bstar(p)
+
+
+def golomb_capacity_nnz(n: int, p: float) -> int:
+    """Plan-time bound on the nonzeros one n-coordinate message may ship:
+    mean + six sigma of Binomial(n, p), plus a small-n floor. Six sigma keeps
+    the truncation probability negligible (~1e-9 per message) while staying
+    within a few percent of n*p for large leaves."""
+    mean = n * p
+    sdev = math.sqrt(n * p * (1.0 - p))
+    return min(n, int(math.ceil(mean + 6.0 * sdev + 8.0)))
+
+
+def golomb_capacity_bits(n: int, p: float) -> int:
+    """Worst-case encoded bits for a message with <= capacity_nnz nonzeros:
+    every code pays 2 + b bits (stop + remainder + sign) and the unary parts
+    sum to at most n / 2^b (the gaps sum to < n)."""
+    b = rice_b(p)
+    cap = golomb_capacity_nnz(n, p)
+    return cap * (2 + b) + int(math.ceil(n / float(1 << b)))
+
+
+def golomb_rows(n: int, p: float) -> int:
+    """Payload rows of one n-coordinate message at plan-time fraction p — the
+    single capacity rule shared by the encoder output shape, the bucket plan
+    slot sizing and the wire byte ledger. Raises (loud build-time fallback)
+    when the capacity cannot beat the flat 2-bit wire: at that density the
+    entropy coding is pure overhead and the caller should use the pack2 wire
+    (compressor 'sparsign' instead of 'sparsign_golomb')."""
+    cap_bytes = HEADER_BYTES + (golomb_capacity_bits(n, p) + 7) // 8
+    rows = -(-cap_bytes // ROW_BYTES)
+    pack2_bytes = kcommon.canonical_rows(n) * ROW_BYTES
+    if rows * ROW_BYTES >= pack2_bytes:
+        raise ValueError(
+            f"golomb wire capacity ({rows * ROW_BYTES} B) does not beat the "
+            f"flat 2-bit wire ({pack2_bytes} B) for n={n} at nonzero fraction "
+            f"p={p} — entropy coding loses above ~35% density. Use the pack2 "
+            f"wire (e.g. compressor 'sparsign') for this regime.")
+    return rows
+
+
+def golomb_nbytes(n: int, p: float) -> int:
+    """One worker's payload bytes for an n-coordinate leaf (capacity padding
+    included) — the golomb twin of ``collectives.packed_nbytes``."""
+    return golomb_rows(n, p) * ROW_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Encoder — vectorized emission, shared verbatim by this reference and the
+# Pallas kernel bodies (kernels/golomb/kernel.py), so kernel == ref bitwise
+# is true by construction.
+# ---------------------------------------------------------------------------
+
+def _le32(x) -> jnp.ndarray:
+    """uint32 scalar -> 4 little-endian uint8 header bytes."""
+    x = jnp.asarray(x, jnp.uint32)
+    return jnp.stack([(x >> (8 * i)).astype(jnp.uint8) for i in range(4)])
+
+
+def emit_stream(t_flat: jnp.ndarray, *, b: int, rows: int) -> jnp.ndarray:
+    """Ternary flat stream -> (rows, ROW_BYTES) uint8 wire payload.
+
+    Fully vectorized (no data-dependent shapes, jit/kernel-safe): code start
+    offsets are an exclusive prefix sum of per-nonzero code lengths, unary
+    runs are written with a +1/-1 delta buffer and a prefix sum, remainder
+    and sign bits with static-b scatter-adds. Codes that do not fit the
+    static capacity are truncated as a suffix (offsets are monotone, so
+    ``fits`` is a prefix of the nonzeros) and counted in the header's dropped
+    field. Trailing zero-padding of a canonical view emits no codes, so
+    padded and unpadded inputs encode identically.
+    """
+    n_bits = (rows * ROW_BYTES - HEADER_BYTES) * 8
+    t_flat = t_flat.reshape(-1)
+    nz = t_flat != 0
+    ar = jnp.arange(t_flat.shape[0], dtype=jnp.int32)
+    # previous nonzero position (exclusive running max; -1 before the first)
+    marked = jnp.where(nz, ar, -1)
+    prev = jnp.concatenate(
+        [jnp.full((1,), -1, jnp.int32), jax.lax.cummax(marked, axis=0)[:-1]])
+    gap = jnp.where(nz, ar - prev - 1, 0)
+    q = gap >> b
+    code_len = q + 2 + b                      # unary + stop + remainder + sign
+    clen = jnp.where(nz, code_len, 0)
+    end = jnp.cumsum(clen)
+    off = end - clen                          # exclusive cumsum: bit offsets
+    fits = nz & (end <= n_bits)
+    nnz_shipped = jnp.sum(fits.astype(jnp.uint32))
+    nnz_dropped = jnp.sum(nz.astype(jnp.uint32)) - nnz_shipped
+    # unary runs: +1 at off, -1 at off+q, prefix-sum > 0 (runs are disjoint);
+    # dropped codes scatter to the sentinel slot n_bits, trimmed below
+    delta = jnp.zeros((n_bits + 1,), jnp.int32)
+    delta = delta.at[jnp.where(fits, off, n_bits)].add(1, mode="drop")
+    delta = delta.at[jnp.where(fits, off + q, n_bits)].add(-1, mode="drop")
+    bitbuf = (jnp.cumsum(delta)[:n_bits] > 0).astype(jnp.uint8)
+    base = off + q + 1                        # first bit after the unary stop
+    for j in range(b):
+        pos = jnp.where(fits, base + j, n_bits)
+        bitbuf = bitbuf.at[pos].add(((gap >> j) & 1).astype(jnp.uint8),
+                                    mode="drop")
+    sign_pos = jnp.where(fits, base + b, n_bits)
+    bitbuf = bitbuf.at[sign_pos].add((t_flat < 0).astype(jnp.uint8),
+                                     mode="drop")
+    # pack LSB-first into bytes, prepend the header
+    byts = (bitbuf.reshape(-1, 8).astype(jnp.uint32)
+            << jnp.arange(8, dtype=jnp.uint32)[None, :]).sum(axis=1)
+    stream = jnp.concatenate(
+        [_le32(nnz_shipped), _le32(nnz_dropped), byts.astype(jnp.uint8)])
+    return stream.reshape(rows, ROW_BYTES)
+
+
+def golomb_encode_ref(t: jnp.ndarray, *, p: float) -> jnp.ndarray:
+    """Ternary message (any shape, true coordinates) -> (golomb_rows(n, p),
+    ROW_BYTES) uint8 wire payload. The reference encoder the fused kernel is
+    pinned against, and the engine's jnp-backend two-pass path."""
+    n = int(t.size)
+    return emit_stream(t.reshape(-1), b=rice_b(p), rows=golomb_rows(n, p))
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def decode_stream(stream: jnp.ndarray, n: int, *, b: int) -> jnp.ndarray:
+    """One worker's payload -> int32 ternary votes, flat (n,).
+
+    Sequential bit reader (lax.while_loop over the header's shipped-code
+    count): unary quotient, b remainder bits, sign bit per code. Reads of a
+    malformed stream clamp at the buffer edge and scatter with mode='drop' —
+    an all-zero buffer (a masked-out worker) has a zero header and decodes to
+    zero votes.
+    """
+    flat = stream.reshape(-1)
+    payload_bits = (int(flat.shape[0]) - HEADER_BYTES) * 8
+    h = flat[:4].astype(jnp.int32)
+    nnz = h[0] | (h[1] << 8) | (h[2] << 16) | (h[3] << 24)
+    body = flat[HEADER_BYTES:]
+    bits = ((body[:, None] >> jnp.arange(8, dtype=jnp.uint8)[None, :]) & 1
+            ).astype(jnp.int32).reshape(-1)
+
+    def one_code(carry):
+        k, ptr, prev, out = carry
+        q_end = jax.lax.while_loop(
+            lambda i: (i < payload_bits) & (bits[i] == 1),
+            lambda i: i + 1, ptr)
+        q = q_end - ptr
+        rem = jnp.int32(0)
+        for j in range(b):
+            rem = rem | (bits[q_end + 1 + j] << j)
+        gap = (q << b) | rem
+        pos = prev + 1 + gap
+        sign = bits[q_end + 1 + b]
+        out = out.at[pos].add(jnp.int32(1) - 2 * sign, mode="drop")
+        return k + 1, q_end + 2 + b, pos, out
+
+    init = (jnp.int32(0), jnp.int32(0), jnp.int32(-1), jnp.zeros((n,), jnp.int32))
+    _, _, _, out = jax.lax.while_loop(lambda c: c[0] < nnz, one_code, init)
+    return out
+
+
+def golomb_decode_ref(stream: jnp.ndarray, n: int, shape, *, p: float) -> jnp.ndarray:
+    """One worker's payload -> its int8 ternary message in ``shape`` (the
+    roundtrip inverse of ``golomb_encode_ref`` for messages within capacity)."""
+    return decode_stream(stream, n, b=rice_b(p)).astype(jnp.int8).reshape(shape)
+
+
+def decode_sum_workers(gathered: jnp.ndarray, n: int, *, b: int) -> jnp.ndarray:
+    """(M, rows, ROW_BYTES) gathered payloads -> int32 vote sum, flat (n,).
+
+    Workers accumulate strictly in worker-index (gather) order — deliberate,
+    mirroring ``unpack8_sum_ref``; integer adds make the order moot for the
+    result but the association is part of the wire contract. Shared by the
+    reference and the Pallas decode kernel body."""
+    total = jnp.zeros((n,), jnp.int32)
+    for w in range(int(gathered.shape[0])):
+        total = total + decode_stream(gathered[w], n, b=b)
+    return total
+
+
+def ungolomb_sum_ref(gathered: jnp.ndarray, n: int, shape, *, p: float) -> jnp.ndarray:
+    """Reference decode-sum: gathered worker payloads -> int32 vote sum in
+    ``shape`` — the oracle the fused ``ungolomb_sum_op`` is pinned against."""
+    return decode_sum_workers(gathered, n, b=rice_b(p)).reshape(shape)

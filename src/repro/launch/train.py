@@ -39,7 +39,7 @@ def build_everything(args):
     wa = worker_axes_of(mesh)
     comp = CompressionConfig(
         compressor=args.compressor,
-        budget=BudgetConfig(kind="fixed", value=args.budget),
+        budget=BudgetConfig(kind=args.budget_kind, value=args.budget),
         server=args.server,
         local_steps=args.tau,
         local_budget=args.local_budget,
@@ -107,6 +107,11 @@ def main(argv=None):
                     help="vote wire; allgather_packed engages the packed "
                          "uplinks (2-bit ternary, or pack8 for qsgd8)")
     ap.add_argument("--budget", type=float, default=1.0)
+    ap.add_argument("--budget-kind", default="fixed",
+                    choices=["fixed", "linf_share", "l2_norm",
+                             "target_sparsity"],
+                    help="budget semantics; target_sparsity doubles as the "
+                         "golomb wire's plan-time nonzero fraction")
     ap.add_argument("--local-budget", type=float, default=10.0)
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--participation", type=float, default=1.0)

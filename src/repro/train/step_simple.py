@@ -64,6 +64,9 @@ class TrainStepConfig:
                                    # bucket instead of one per gradient leaf
     bucket_bytes: Optional[int] = None  # payload cap per bucket (None: one
                                         # bucket for the whole tree)
+    golomb_p: Optional[float] = None    # plan-time nnz fraction sizing the
+                                        # golomb wire's static capacity (None:
+                                        # a target_sparsity budget's target)
 
 
 def _leaf_seeds(worker_seed, tree):
@@ -119,10 +122,16 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
     # (and validated) before tracing
     mode = engine.wire_mode(comp, vote_impl=step_cfg.vote_impl)
     # built (and validated — hier demands two worker axes, sizes >= 1) at
-    # step-build time, in the compressor's declared payload format
+    # step-build time, in the compressor's declared payload format; golomb
+    # specs additionally resolve the plan-time nnz fraction that sizes the
+    # entropy-coded wire's static capacity
+    wire_fmt = engine.wire_payload_format(comp, mode,
+                                          vote_impl=step_cfg.vote_impl)
     wire = collectives.make_vote_wire(
         step_cfg.vote_impl, axes, mesh, backend=backend,
-        wire_format=("pack8" if mode == "pack8" else "pack2"))
+        wire_format=wire_fmt,
+        golomb_p=(engine.resolve_golomb_p(comp, step_cfg.golomb_p)
+                  if wire_fmt == "golomb" else None))
     share_linf = engine.needs_shared_linf(comp)
     if mode != "votes" and engine.needs_server_ef(comp.server):
         raise ValueError(
@@ -145,10 +154,14 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
     # into few wire buckets, offsets row-aligned per the wire's payload format
     plan = None
     if step_cfg.bucketed:
+        bucket_fmt = bucketing.wire_bucket_format(mode, wire)
         plan = bucketing.build_bucket_plan(
             jax.tree_util.tree_leaves(model.param_shapes()),
-            bucketing.wire_bucket_format(mode, wire),
-            bucket_bytes=step_cfg.bucket_bytes)
+            bucket_fmt,
+            bucket_bytes=step_cfg.bucket_bytes,
+            # golomb slots are CAPACITY rows — a pure (n, p) function owned
+            # by the wire, not a coordinate-count row formula
+            rows_fn=(wire.payload_rows if bucket_fmt == "golomb" else None))
 
     # activation hints may only target auto (non-worker) mesh axes; in pure-DP
     # mode every axis is a worker and no constraints are needed (all compute local)

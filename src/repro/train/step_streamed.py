@@ -61,6 +61,9 @@ class StreamedStepConfig:
                                    # overlaps vjp/compress of superblock i-1)
     bucket_bytes: Optional[int] = None  # payload cap per bucket (None: one
                                         # bucket per superblock / outer group)
+    golomb_p: Optional[float] = None    # plan-time nnz fraction sizing the
+                                        # golomb wire's static capacity (None:
+                                        # a target_sparsity budget's target)
 
 
 # ---------------------------------------------------------------------------
@@ -165,10 +168,16 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     # every mode — votes, scaled_votes, pack8, decoded — runs streamed
     mode = engine.wire_mode(comp, vote_impl=step_cfg.vote_impl)
     # built (and validated — hier demands two worker axes, sizes >= 1) at
-    # step-build time, in the compressor's declared payload format
+    # step-build time, in the compressor's declared payload format; golomb
+    # specs additionally resolve the plan-time nnz fraction that sizes the
+    # entropy-coded wire's static capacity
+    wire_fmt = engine.wire_payload_format(comp, mode,
+                                          vote_impl=step_cfg.vote_impl)
     wire = collectives.make_vote_wire(
         step_cfg.vote_impl, axes, mesh, backend=backend,
-        wire_format=("pack8" if mode == "pack8" else "pack2"))
+        wire_format=wire_fmt,
+        golomb_p=(engine.resolve_golomb_p(comp, step_cfg.golomb_p)
+                  if wire_fmt == "golomb" else None))
     share_linf = engine.needs_shared_linf(comp)
     if mode != "votes" and engine.needs_server_ef(comp.server):
         raise ValueError(
@@ -224,13 +233,16 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     blocks_treedef = jax.tree_util.tree_structure(shapes["blocks"])
     if step_cfg.bucketed:
         fmt = bucketing.wire_bucket_format(mode, wire)
+        # golomb slots are CAPACITY rows — a pure (n, p) function owned by
+        # the wire, not a coordinate-count row formula
+        rows_fn = wire.payload_rows if fmt == "golomb" else None
         block_plan = bucketing.build_bucket_plan(
             [jax.ShapeDtypeStruct(s.shape[1:], s.dtype)
              for s in jax.tree_util.tree_leaves(shapes["blocks"])],
-            fmt, bucket_bytes=step_cfg.bucket_bytes)
+            fmt, bucket_bytes=step_cfg.bucket_bytes, rows_fn=rows_fn)
         outer_plan = bucketing.build_bucket_plan(
             [shapes[k] for k in outer_keys], fmt,
-            bucket_bytes=step_cfg.bucket_bytes)
+            bucket_bytes=step_cfg.bucket_bytes, rows_fn=rows_fn)
         # the double-buffered scan primes with one zero bucket and drains the
         # last pending bucket after the scan -> n_repeats + 1 block-bucket
         # exchanges per step; the shared-linf vector pmax runs at compress

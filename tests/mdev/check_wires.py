@@ -29,6 +29,12 @@ rounds each decoded product through a VMEM scratch to pin the same rounding
 points (see kernels/pack8). On a real TPU pod the psum association is the
 runtime's choice, so there this check pins the gather wires against each
 other rather than against psum.
+
+sparsign_golomb sweeps the entropy-coded wire in BOTH modes: the int8 psum
+(its fall-back wire, and the oracle stream) vs the Golomb/RLE coded gather
+(vote_impl=allgather_packed: fused sparsign->coded-byte-stream uplink,
+in-kernel decode-sum in strict worker order) — the acceptance check that the
+sub-2-bit wire carries the exact same votes.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -135,6 +141,22 @@ def main():
                comp_q, lr, wires=("psum", "allgather_packed"))
     print("OK qsgd8 pack8 wire bitwise-equal to the decoded psum (2 backends)")
 
+    # sparsign_golomb: same Def. 1 compressor, entropy-coded uplink. The psum
+    # wire negotiates plain int8 votes (a fabric psum cannot reduce
+    # variable-length byte streams — engine.wire_payload_format's fallback)
+    # and is the oracle stream; allgather_packed rides the Golomb/RLE coded
+    # byte wire (fused sparsign->coded-stream kernel + in-kernel decode-sum
+    # on the interpret backend). Bitwise equality across them is the
+    # acceptance check that the sub-2-bit wire is lossless end-to-end.
+    comp_g = CompressionConfig(
+        compressor="sparsign_golomb",
+        budget=BudgetConfig(kind="target_sparsity", value=0.05),
+        server="majority_vote")
+    print("simple mode (sparsign_golomb — int8-psum oracle vs golomb gather):")
+    check_mode("simple", mesh, model_s, params_s, make_batch(cfg_s, 8, 16),
+               comp_g, lr, wires=("psum", "hier", "allgather_packed"))
+    print("OK sparsign_golomb wires bitwise-equal (3 wires x 2 backends)")
+
     cfg_t = get_config("qwen2-moe-a2.7b", smoke=True)
     model_t = Model(cfg_t)
     params_t = model_t.init(jax.random.PRNGKey(0))
@@ -161,6 +183,12 @@ def main():
                comp_q, lr, wires=("psum", "allgather_packed"))
     print("OK streamed qsgd8 pack8 wire bitwise-equal to the decoded psum "
           "(2 backends)")
+
+    print("streamed mode (sparsign_golomb — int8-psum oracle vs golomb gather):")
+    check_mode("streamed", mesh, model_t, params_t, make_batch(cfg_t, 8, 16),
+               comp_g, lr, wires=("psum", "allgather_packed"))
+    print("OK streamed sparsign_golomb golomb wire bitwise-equal to the int8 "
+          "psum (2 backends)")
 
 
 if __name__ == "__main__":

@@ -32,7 +32,14 @@ ODD_SHAPES = [
 
 @pytest.mark.parametrize("fmt", bucketing.BUCKET_FORMATS)
 def test_plan_offsets_and_alignment(fmt):
-    plan = bucketing.build_bucket_plan(ODD_SHAPES, fmt)
+    kw = {}
+    wire = None
+    if fmt == "golomb":
+        # the variable-length format sizes slots by plan-time CAPACITY rows,
+        # so the plan needs the wire's rows rule (not a coordinate count)
+        wire = collectives.GolombWire(axes=("data",), n_workers=4, p=0.05)
+        kw["rows_fn"] = wire.payload_rows
+    plan = bucketing.build_bucket_plan(ODD_SHAPES, fmt, **kw)
     align = bucketing.format_align_rows(fmt)
     assert plan.align_rows == align
     seen = []
@@ -41,8 +48,12 @@ def test_plan_offsets_and_alignment(fmt):
         for s in b.slots:
             assert s.row_start == row, "slots must be contiguous"
             assert s.row_start % align == 0
-            assert s.rows == bucketing.leaf_rows(s.size, align)
-            assert s.rows * kcommon.LANES >= s.size
+            if fmt == "golomb":
+                # each slot is one whole self-describing capacity stream
+                assert s.rows == wire.payload_rows(s.size)
+            else:
+                assert s.rows == bucketing.leaf_rows(s.size, align)
+                assert s.rows * kcommon.LANES >= s.size
             assert s.size == math.prod(s.shape)
             row += s.rows
             seen.append(s.index)
@@ -53,6 +64,14 @@ def test_plan_offsets_and_alignment(fmt):
         else:
             assert b.rows == row
     assert sorted(seen) == list(range(len(ODD_SHAPES)))
+
+
+def test_plan_golomb_requires_rows_fn():
+    with pytest.raises(ValueError, match="rows_fn"):
+        bucketing.build_bucket_plan(ODD_SHAPES, "golomb")
+    with pytest.raises(ValueError, match="rows_fn"):
+        bucketing.build_bucket_plan(ODD_SHAPES, "int8",
+                                    rows_fn=lambda n: n)
 
 
 def test_pack8_slots_are_canonical_views():
@@ -215,13 +234,14 @@ def test_uplink_ledger_bucket_vs_plan_ledger():
     for mode in drivers.MODE_SETUPS:
         wire = drivers.mode_wire(mode, m)
         fmt = bucketing.wire_bucket_format(mode, wire)
+        kw = {"rows_fn": wire.payload_rows} if fmt == "golomb" else {}
         plan = bucketing.build_bucket_plan(ODD_SHAPES, fmt,
-                                           bucket_bytes=4096)
+                                           bucket_bytes=4096, **kw)
         pay, scal = bucketing.plan_ledger(mode, wire, plan)
         want_p = want_s = 0.0
         for b in plan.buckets:
             p, s = collectives.uplink_ledger_bucket(mode, wire, b.n_coords,
-                                                    len(b.slots))
+                                                    len(b.slots), rows=b.rows)
             want_p += p
             want_s += s
         assert pay == pytest.approx(want_p)

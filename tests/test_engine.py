@@ -60,15 +60,17 @@ def test_spec_registry_is_total_and_wellformed():
         assert spec.server_decode in SERVER_DECODES
         assert spec.wire_format in WIRE_FORMATS
         assert (spec.local_scale is None) == (spec.scale_protocol == "none")
-        # wire_format is the declarative negotiation key: pack2 <=> ternary,
-        # and only packed formats may register a fused pack op
-        assert (spec.wire_format == "pack2") == spec.is_ternary
+        # wire_format is the declarative negotiation key: the ternary
+        # compressors ride the 2-bit packed wire or its entropy-coded golomb
+        # sibling; everything else is pack8/float
+        assert (spec.wire_format in ("pack2", "golomb")) == spec.is_ternary
         if spec.fused_pack_op is not None:
             assert spec.wire_format != "float" and spec.pallas_op is not None
         # ternary <-> CompressionConfig.is_ternary agrees with the table
         assert _cfg(name).is_ternary == spec.is_ternary
     assert SPECS["qsgd8"].wire_format == "pack8"
     assert SPECS["identity"].wire_format == "float"
+    assert SPECS["sparsign_golomb"].wire_format == "golomb"
     with pytest.raises(KeyError, match="unknown compressor"):
         get_spec("bogus")
 

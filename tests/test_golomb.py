@@ -1,0 +1,385 @@
+"""The Golomb/RLE entropy-coded uplink wire: byte-format roundtrip, fused
+kernel == reference bitwise, decode-sum oracle, capacity overflow semantics,
+GolombWire ledger pins, and the Eq. 12 coder edge cases.
+
+Blocking tier-1 coverage (single device); the multi-worker bitwise wire
+equivalence (int8-psum oracle vs golomb gather, both train modes) runs in
+tests/mdev/check_wires.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import budgets, encoding, engine
+from repro.core.algorithm import CompressionConfig
+from repro.core.budgets import BudgetConfig
+from repro.dist import collectives
+from repro.kernels import common
+from repro.kernels.golomb import ref as golomb_ref
+from repro.kernels.golomb.ops import (golomb_pack_op, sparsign_golomb_op,
+                                      ungolomb_sum_op)
+from repro.kernels.golomb.ref import (HEADER_BYTES, ROW_BYTES,
+                                      golomb_decode_ref, golomb_encode_ref,
+                                      golomb_nbytes, golomb_rows, rice_b,
+                                      ungolomb_sum_ref)
+from repro.kernels.sparsign.ops import sparsign_op
+
+SHAPES = [(63,), (1000,), (7, 333), (513, 511)]
+OTHER = "interpret" if jax.default_backend() != "tpu" else "pallas"
+
+
+def _ternary(shape, density, seed):
+    """Random ternary message at ~``density`` nonzero fraction."""
+    rng = np.random.RandomState(seed)
+    t = rng.choice(np.array([-1, 0, 1], np.int8), size=shape,
+                   p=[density / 2, 1.0 - density, density / 2])
+    return jnp.asarray(t, jnp.int8)
+
+
+def _headers(payload):
+    """(shipped, dropped) uint32 LE counters off the raw payload bytes."""
+    flat = np.asarray(payload).reshape(-1)
+    return (int.from_bytes(flat[:4].tobytes(), "little"),
+            int.from_bytes(flat[4:8].tobytes(), "little"))
+
+
+# ---------------------------------------------------------------------------
+# byte-format roundtrip (the reference coder IS the format definition)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("p", [0.01, 0.05, 0.2])
+def test_roundtrip_property(shape, p):
+    t = _ternary(shape, p, seed=hash((shape, p)) % (1 << 31))
+    payload = golomb_encode_ref(t, p=p)
+    n = int(t.size)
+    assert payload.dtype == jnp.uint8
+    assert payload.shape == (golomb_rows(n, p), ROW_BYTES)
+    shipped, dropped = _headers(payload)
+    assert shipped == int(jnp.sum(jnp.abs(t.astype(jnp.int32))))
+    assert dropped == 0, "six-sigma capacity must not truncate at plan density"
+    back = golomb_decode_ref(payload, n, t.shape, p=p)
+    assert np.array_equal(np.asarray(back), np.asarray(t))
+
+
+def test_roundtrip_extremes():
+    p, n = 0.05, 1000
+    # all-zero message: zero headers, zero decode (a masked worker's stream)
+    zero = golomb_encode_ref(jnp.zeros((n,), jnp.int8), p=p)
+    assert _headers(zero) == (0, 0)
+    assert not np.asarray(zero).any()
+    assert not np.asarray(golomb_decode_ref(zero, n, (n,), p=p)).any()
+    # single maximal run: one nonzero at the last coordinate (gap = n-1, the
+    # largest unary spill a single code can pay)
+    t = jnp.zeros((n,), jnp.int8).at[n - 1].set(-1)
+    payload = golomb_encode_ref(t, p=p)
+    assert _headers(payload) == (1, 0)
+    assert np.array_equal(np.asarray(golomb_decode_ref(payload, n, (n,), p=p)),
+                          np.asarray(t))
+    # padded vs unpadded inputs code identically (trailing zeros emit nothing):
+    # the canonical-view encode of the same stream carries the same codes in a
+    # wider capacity buffer, and roundtrips to the padded view
+    view, _ = common.to_2d(t)
+    wide = golomb_encode_ref(view, p=p)
+    assert _headers(wide) == (1, 0)
+    assert np.array_equal(
+        np.asarray(golomb_decode_ref(wide, int(view.size), view.shape, p=p)),
+        np.asarray(view))
+
+
+def test_overflow_truncates_prefix_and_counts_dropped():
+    """A message denser than plan truncates at bit capacity: the header says
+    how many codes shipped and how many dropped, and the shipped codes are a
+    PREFIX of the nonzeros in ascending coordinate order — a decoder never
+    sees a torn code."""
+    p, n = 0.05, 1000
+    t = jnp.ones((n,), jnp.int8)   # every coordinate nonzero: gap 0 per code
+    payload = golomb_encode_ref(t, p=p)
+    shipped, dropped = _headers(payload)
+    assert shipped + dropped == n and dropped > 0
+    # all-ones stream: every code is exactly 2 + b bits, so the bit capacity
+    # pins the shipped count from first principles
+    bits = (golomb_rows(n, p) * ROW_BYTES - HEADER_BYTES) * 8
+    assert shipped == bits // (2 + rice_b(p))
+    # prefix decode: the first ``shipped`` coordinates, nothing else
+    want = np.zeros(n, np.int8)
+    want[:shipped] = 1
+    assert np.array_equal(
+        np.asarray(golomb_decode_ref(payload, n, (n,), p=p)), want)
+
+
+def test_capacity_loses_to_pack2_is_a_build_error():
+    """Above ~35% density the coded capacity cannot beat the flat 2-bit wire:
+    golomb_rows must refuse at BUILD time (directing to pack2), never emit a
+    payload that silently costs more than the format it claims to beat."""
+    with pytest.raises(ValueError, match="does not beat"):
+        golomb_rows(1 << 16, 0.5)
+    # and the viable regime's ledger really is sub-pack2
+    n = 1 << 16
+    assert golomb_nbytes(n, 0.05) < collectives.packed_nbytes(n)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel == two-pass chain == reference, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_fused_golomb_uplink_matches_two_pass(shape, dtype):
+    g = jnp.asarray(np.random.RandomState(0).randn(*shape), dtype)
+    p = 0.05
+    # budget ~0.06 keeps realized nnz near the 5% plan; budget 1.5 overflows
+    # capacity on purpose — truncation must be bitwise-identical across paths
+    for budget, seed, base in [(0.06, 1, 0), (0.06, 99, 12345), (1.5, 7, 2**20)]:
+        fused = sparsign_golomb_op(g, budget, seed, base, p=p, interpret=True)
+        t = sparsign_op(g, budget, seed, base)
+        two_pass = golomb_pack_op(t, p=p, interpret=True)
+        ref = golomb_encode_ref(t, p=p)
+        assert fused.dtype == jnp.uint8
+        assert fused.shape == (golomb_rows(int(g.size), p), ROW_BYTES)
+        assert np.array_equal(np.asarray(fused), np.asarray(two_pass)), \
+            (shape, dtype, budget)
+        assert np.array_equal(np.asarray(fused), np.asarray(ref)), \
+            (shape, dtype, budget)
+
+
+def test_fused_golomb_no_int8_hbm_intermediate():
+    """The point of the fusion: gradient -> coded wire bytes with no int8
+    ternary tensor at the HBM level; the two-pass chain necessarily has one.
+    The pin is the spec's declarative hbm_limits rule, not a hand count."""
+    from repro.analysis.jaxpr_audit import check_fused_uplink
+    from repro.core.compressors import get_spec
+    g = jnp.asarray(np.random.RandomState(1).randn(4096), jnp.float32)
+    assert check_fused_uplink(get_spec("sparsign_golomb"), g, param=0.06) == []
+    two_pass = common.int8_hbm_elems(
+        lambda x: golomb_pack_op(sparsign_op(x, 0.06, 7), p=0.05,
+                                 interpret=True), g)
+    assert two_pass >= g.size
+
+
+# ---------------------------------------------------------------------------
+# fused decode-sum (the gather wire's downlink side)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 3, 8])
+@pytest.mark.parametrize("n", [63, 1000])
+def test_ungolomb_sum_matches_sequential_oracle(m, n):
+    """Fused decode-sum == reference == eager numpy accumulation in strict
+    worker (gather) order — the association the wire contract pins."""
+    p = 0.05
+    votes = [_ternary((n,), p, seed=100 + i) for i in range(m)]
+    gathered = jnp.stack([golomb_encode_ref(v, p=p) for v in votes])
+    got = ungolomb_sum_op(gathered, n, (n,), p=p, interpret=True)
+    want = ungolomb_sum_ref(gathered, n, (n,), p=p)
+    oracle = sum(np.asarray(v, np.int32) for v in votes)
+    assert got.dtype == jnp.int32
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.array_equal(np.asarray(got), oracle)
+
+
+# ---------------------------------------------------------------------------
+# GolombWire: headers, masking, ledger, validation
+# ---------------------------------------------------------------------------
+
+def test_golomb_wire_nnz_dropped_and_mask():
+    p, n = 0.05, 1000
+    wire = collectives.GolombWire(axes=("data",), n_workers=4, p=p)
+    assert wire.native_format == "golomb" and wire.wants_packed
+    t = _ternary((n,), p, seed=3)
+    payload = golomb_encode_ref(t, p=p)
+    assert float(wire.message_nnz(payload)) == float(jnp.sum(jnp.abs(
+        t.astype(jnp.int32))))
+    assert float(wire.message_dropped(payload)) == 0.0
+    # overflow telemetry reads the second header counter
+    dense = golomb_encode_ref(jnp.ones((n,), jnp.int8), p=p)
+    shipped, dropped = _headers(dense)
+    assert float(wire.message_nnz(dense)) == shipped
+    assert float(wire.message_dropped(dense)) == dropped
+    # masking zeroes the whole stream; a zero stream decodes to zero votes
+    masked = wire.mask_message(payload, jnp.bool_(False))
+    assert float(wire.message_nnz(masked)) == 0.0
+    assert not np.asarray(golomb_decode_ref(masked, n, (n,), p=p)).any()
+    assert np.array_equal(np.asarray(wire.mask_message(payload, jnp.bool_(True))),
+                          np.asarray(payload))
+    # integer vote streams reject an in-exchange decode scale loudly
+    with pytest.raises(ValueError, match="pack8-wire concept"):
+        wire.exchange(payload, n, (n,), scale=jnp.float32(1.0))
+    with pytest.raises(ValueError, match="pack8-wire concept"):
+        wire.exchange_bucket(payload, None, scale=jnp.float32(1.0))
+
+
+def test_golomb_wire_ledger_matches_real_payload_nbytes():
+    """The ledger bills exactly the capacity-padded buffer the fixed-shape
+    gather ships — (M-1) x real payload nbytes, padding tax included."""
+    p, m = 0.05, 16
+    wire = collectives.GolombWire(axes=("data",), n_workers=m, p=p)
+    for n in (63, 1000, 1 << 18):
+        payload = golomb_pack_op(_ternary((n,), p, seed=n), p=p, interpret=True)
+        assert wire.wire_bytes(n) == (m - 1) * payload.nbytes
+        assert wire.payload_rows(n) == golomb_rows(n, p) == payload.shape[0]
+    # bucket slots are capacity ROWS, not coordinate rows: the bucket ledger
+    # takes the plan's row count directly
+    assert wire.bucket_payload_bytes(12345, rows=7) == (m - 1) * 7 * ROW_BYTES
+    with pytest.raises(AssertionError, match="row count"):
+        wire.bucket_payload_bytes(12345)
+    # uplink_ledger routes through the same accounting (votes mode, no scale)
+    assert collectives.uplink_ledger("votes", wire, 1000) == wire.wire_bytes(1000)
+
+
+def test_make_vote_wire_golomb_validation():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    wire = collectives.make_vote_wire("allgather_packed", ("data",), mesh,
+                                      wire_format="golomb", golomb_p=0.03)
+    assert isinstance(wire, collectives.GolombWire) and wire.p == 0.03
+    # the coded stream cannot ride a fabric reduction
+    for impl in ("psum", "hier"):
+        with pytest.raises(ValueError, match="allgather_packed"):
+            collectives.make_vote_wire(impl, ("pod", "data"), mesh,
+                                       wire_format="golomb", golomb_p=0.03)
+    # capacity needs a plan fraction, and a sane one
+    with pytest.raises(ValueError, match="golomb_p"):
+        collectives.make_vote_wire("allgather_packed", ("data",), mesh,
+                                   wire_format="golomb")
+    with pytest.raises(ValueError, match=r"in \(0,1\)"):
+        collectives.make_vote_wire("allgather_packed", ("data",), mesh,
+                                   wire_format="golomb", golomb_p=1.5)
+
+
+# ---------------------------------------------------------------------------
+# engine negotiation + wire-native messages
+# ---------------------------------------------------------------------------
+
+def _cfg_golomb(value=0.05):
+    return CompressionConfig(compressor="sparsign_golomb",
+                             budget=BudgetConfig(kind="target_sparsity",
+                                                 value=value),
+                             server="majority_vote")
+
+
+def test_wire_payload_format_negotiation():
+    """golomb is a payload FORMAT, not a wire mode: the spec rides the votes
+    mode, and only the gather impl speaks the coded stream — psum/hier fall
+    back to plain int8 votes (bitwise-identical votes, flat bytes)."""
+    cfg = _cfg_golomb()
+    assert engine.wire_mode(cfg) == "votes"
+    assert engine.wire_payload_format(cfg, "votes",
+                                      vote_impl="allgather_packed") == "golomb"
+    for impl in ("psum", "hier", None):
+        assert engine.wire_payload_format(cfg, "votes", vote_impl=impl) == "pack2"
+    plain = CompressionConfig(compressor="sparsign",
+                              budget=BudgetConfig(kind="fixed", value=2.0),
+                              server="majority_vote")
+    assert engine.wire_payload_format(plain, "votes",
+                                      vote_impl="allgather_packed") == "pack2"
+
+
+def test_resolve_golomb_p():
+    assert engine.resolve_golomb_p(_cfg_golomb(0.07)) == 0.07
+    # an explicit step-config setting wins over the budget's target
+    assert engine.resolve_golomb_p(_cfg_golomb(0.07), 0.02) == 0.02
+    fixed = CompressionConfig(compressor="sparsign_golomb",
+                              budget=BudgetConfig(kind="fixed", value=1.0),
+                              server="majority_vote")
+    with pytest.raises(ValueError, match="plan-time nonzero fraction"):
+        engine.resolve_golomb_p(fixed)
+    with pytest.raises(ValueError, match=r"in \(0,1\)"):
+        engine.resolve_golomb_p(fixed, 0.0)
+
+
+@pytest.mark.parametrize("backend", ["jnp", OTHER])
+def test_compress_leaf_golomb_wire_native(backend):
+    """compress_leaf(wire=GolombWire) ships the coded byte stream of the SAME
+    ternary message the plain path emits, on every backend (fused kernel vs
+    two-pass vs jnp reference)."""
+    wire = collectives.GolombWire(axes=("data",), n_workers=4, p=0.05)
+    g = jnp.asarray(np.random.RandomState(4).randn(7, 333), jnp.float32)
+    msg_int8 = engine.compress_leaf(g, _cfg_golomb(), 9, 123, backend=backend)
+    msg_coded = engine.compress_leaf(g, _cfg_golomb(), 9, 123, backend=backend,
+                                     wire=wire)
+    assert msg_int8.values.dtype == jnp.int8
+    assert msg_coded.values.dtype == jnp.uint8
+    want = golomb_encode_ref(msg_int8.values, p=wire.p)
+    assert np.array_equal(np.asarray(msg_coded.values), np.asarray(want))
+    assert np.array_equal(np.asarray(msg_coded.scale), np.asarray(msg_int8.scale))
+
+
+def test_compress_leaf_golomb_wire_format_mismatch_is_loud():
+    g = jnp.zeros((8,), jnp.float32)
+    pack2 = collectives.PackedVoteWire(axes=("data",), n_workers=4)
+    with pytest.raises(ValueError, match="wire format"):
+        engine.compress_leaf(g, _cfg_golomb(), 0, wire=pack2)
+    gw = collectives.GolombWire(axes=("data",), n_workers=4, p=0.05)
+    plain = CompressionConfig(compressor="sparsign",
+                              budget=BudgetConfig(kind="fixed", value=1.0),
+                              server="majority_vote")
+    with pytest.raises(ValueError, match="wire format"):
+        engine.compress_leaf(g, plain, 0, wire=gw)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 12 coder edge cases (satellite bugfixes) + the capacity budget solver
+# ---------------------------------------------------------------------------
+
+def test_golomb_bstar_extreme_p():
+    """p ~< 1e-17 used to ZeroDivisionError (log(1-p) underflow) and p -> 1
+    used to raise on floor(-inf); both are valid regimes with well-defined
+    parameters."""
+    assert encoding.golomb_bstar(1e-18) >= 1
+    assert encoding.golomb_bstar(0.999) == 0
+    # b* is monotone non-increasing in p across the whole range
+    bs = [encoding.golomb_bstar(p) for p in
+          (1e-18, 1e-9, 1e-4, 0.01, 0.05, 0.2, 0.5, 0.9, 0.999)]
+    assert bs == sorted(bs, reverse=True)
+    for bad in (0.0, 1.0, -0.1, 2.0):
+        with pytest.raises(ValueError, match=r"in \(0,1\)"):
+            encoding.golomb_bstar(bad)
+
+
+def test_golomb_bits_per_index_extreme_p():
+    """The Eq. 12 average is finite and sane at both ends (the direct
+    1-(1-p)^k form rounds to 0 at tiny p -> ZeroDivisionError)."""
+    import math
+    tiny = encoding.golomb_bits_per_index(1e-18)
+    assert math.isfinite(tiny) and tiny > 1.0
+    # near-dense: b*=0 so the average approaches 1/p(stop) + 0 remainder ~ 1
+    assert encoding.golomb_bits_per_index(0.999) == pytest.approx(1.001, rel=1e-2)
+    # and the paper-regime value stays below the flat 2-bit format's 2 b/coord
+    # budget per coordinate when multiplied out: p*(bbar+1) < 2 at p=0.05
+    bbar = encoding.golomb_bits_per_index(0.05)
+    assert 0.05 * (bbar + 1.0) < 2.0
+
+
+def test_ternary_stream_bits_zero_nnz_consistency():
+    """nnz=0 is a real message (an all-zero round): sparse coders ship nothing
+    but dense coders still pay their flat d-proportional cost — the old
+    blanket ``return 0.0`` zeroed those too."""
+    import math
+    d = 4096
+    assert encoding.ternary_stream_bits(d, 0, coder="golomb") == 0.0
+    assert encoding.ternary_stream_bits(d, 0, coder="naive_index") == 0.0
+    assert encoding.ternary_stream_bits(d, 0, coder="dense") == d * math.log2(3.0)
+    assert encoding.ternary_stream_bits(d, 0, coder="packed2bit") == 2.0 * d
+    with pytest.raises(ValueError, match="unknown coder"):
+        encoding.ternary_stream_bits(d, 10, coder="huffman")
+
+
+def test_budget_bisection_heavy_tail_hits_target():
+    """Regression: with a heavy-tailed gradient (min nonzero |g| ~ 1e-11 so
+    the bracket top is ~1e10), the old LINEAR bisection left a final interval
+    of width ~26 around a solution of order 1 and overshot a 5% target to
+    ~17% realized sparsity — which overflowed the golomb wire's plan capacity.
+    Geometric bisection resolves the whole bracket."""
+    rng = np.random.RandomState(11)
+    g = np.abs(rng.randn(1 << 16)).astype(np.float32)
+    g[:8] = 3.5e-11
+    target = 0.05
+    b = budgets.solve_budget_for_sparsity(jnp.asarray(g), target)
+    realized = float(budgets.expected_sparsity(jnp.asarray(g), b))
+    assert abs(realized - target) < 5e-4, (realized, float(b))
+    # benign gradients still resolve (the pre-existing contract)
+    g2 = np.abs(np.random.RandomState(12).randn(1 << 14)).astype(np.float32)
+    b2 = budgets.solve_budget_for_sparsity(jnp.asarray(g2), 0.25)
+    assert abs(float(budgets.expected_sparsity(jnp.asarray(g2), b2)) - 0.25) < 5e-4
