@@ -18,11 +18,18 @@ idealized model hides. ``bucketed_real`` is the bucketized-uplink twin
 (``repro.dist.bucketing`` plans): one collective per bucket, padding amortized
 per bucket, launch counts collapsed (the ``launch_ratio`` column).
 
+Ring columns (``mono_peak_hbm`` / ``ring_peak_hbm`` / ``ring_launches``) cost
+the ring-pipelined gather at the production chunk size: peak gathered-payload
+residency of the monolithic all_gather (M x payload) vs the chunked ppermute
+ring (send + recv chunk, O(1) in M), plus the ring's launch count (one
+(M-1)-hop ring per chunk). A third traced census (``ring_census_bytes``)
+asserts the ring program bills the SAME fabric bytes as the monolithic ledger.
+
 The step-time section times real train steps (per-leaf vs bucketed wire, both
-trainers) on forced host devices and writes the tracked
-``BENCH_collectives.json`` at the repo root (``--quick`` writes
-``BENCH_collectives.quick.json`` — the CI smoke artifact — so it can't clobber
-the baseline).
+trainers, plus ``ring_*`` chunked-ppermute configs) on forced host devices and
+writes the tracked ``BENCH_collectives.json`` at the repo root (``--quick``
+writes ``BENCH_collectives.quick.json`` — the CI smoke artifact — so it can't
+clobber the baseline).
 
   python -m benchmarks.bench_collectives            # full table + step times
   python -m benchmarks.bench_collectives --quick    # CI smoke
@@ -214,6 +221,68 @@ def launch_counts(cfg, trainer: str, n_data: int = 16, n_pod: int = 1):
 
 
 # ---------------------------------------------------------------------------
+# ring-pipelined gather: peak payload residency + hop counts
+# ---------------------------------------------------------------------------
+
+def ring_stats(cfg, trainer: str, n_data: int = 16, n_pod: int = 1) -> dict:
+    """Ring-gather columns at the documented production chunk size
+    (``collectives.DEFAULT_RING_CHUNK_ROWS``): peak gathered-payload HBM of
+    the monolithic all_gather (M x the largest exchange payload) vs the ring
+    (send + recv chunk only), and the ring's payload launch count — one
+    (M-1)-hop ppermute ring per chunk, where the monolithic wire launches one
+    all_gather per exchange."""
+    from repro.dist.collectives import DEFAULT_RING_CHUNK_ROWS, PackedVoteWire
+
+    m = n_data * n_pod
+    mono = PackedVoteWire(axes=("data",), n_workers=m)
+    ring = PackedVoteWire(axes=("data",), n_workers=m,
+                          ring_chunk_rows=DEFAULT_RING_CHUNK_ROWS)
+    sizes = exchange_sizes(cfg, trainer)
+    mono_hbm = max(mono.gather_hbm_bytes(n) for n in sizes)
+    ring_hbm = max(ring.gather_hbm_bytes(n) for n in sizes)
+    launches = sum(count * ring.ring_chunks(n) for n, count in sizes.items())
+    return {"mono_peak_hbm": mono_hbm, "ring_peak_hbm": ring_hbm,
+            "hbm_ratio": mono_hbm / ring_hbm,
+            "ring_launches": launches, "ring_hops": launches * (m - 1)}
+
+
+def ring_census_bytes(cfg, trainer: str, n_data: int = 16,
+                      n_pod: int = 1) -> float:
+    """Traced cross-check of the RING wire against the SAME ``packed_real``
+    ledger: census the chunked-ppermute exchange program per distinct
+    exchange size. The ring moves exactly the bytes the monolithic gather
+    moves — (M-1) x payload, chunk by chunk — it just never holds them all,
+    so this must equal ``packed_real_bytes`` to the byte. The chunk size is
+    picked per exchange to give a genuinely multi-chunk (~3 chunk) program
+    while keeping the trace small; byte-invariance holds for any chunk size."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import collective_census
+    from repro.dist import compat
+    from repro.dist.collectives import PackedVoteWire
+    from repro.kernels import common as kcommon
+    from repro.launch.mesh import make_host_mesh
+
+    m = n_data * n_pod
+    mesh = make_host_mesh(1, 1)
+    P = jax.sharding.PartitionSpec
+    total = 0.0
+    for n, count in exchange_sizes(cfg, trainer).items():
+        rows = kcommon.canonical_rows(n)
+        chunk = max(32, math.ceil(rows / 3 / 32) * 32)
+        wire = PackedVoteWire(axes=("data",), n_workers=m,
+                              backend="interpret", ring_chunk_rows=chunk)
+        packed = jax.ShapeDtypeStruct((rows, kcommon.LANES // 4), jnp.uint8)
+        fn = compat.shard_map(lambda p, n=n, w=wire: w.exchange(p, n, (n,)),
+                              mesh=mesh, in_specs=P(), out_specs=P(),
+                              check_vma=False)
+        census = collective_census(jax.make_jaxpr(fn)(packed))
+        total += census.total_bytes({"data": m}) * count
+    return total
+
+
+# ---------------------------------------------------------------------------
 # closed-form byte models
 # ---------------------------------------------------------------------------
 
@@ -263,9 +332,11 @@ def _time_simple_steps(modes, records, repeats: int):
                 "trainer": "simple", "wire_mode": mode, "bucketed": bucketed,
                 "ms_per_step": dt * 1e3,
                 "wire_bytes_per_device": float(metrics["wire_bytes_per_device"]),
+                "gather_hbm_bytes": float(metrics["gather_hbm_bytes"]),
             })
             csv_row([records[-1]["case"], f"{dt*1e3:.2f}",
-                     f"{records[-1]['wire_bytes_per_device']:.0f}"])
+                     f"{records[-1]['wire_bytes_per_device']:.0f}",
+                     f"{records[-1]['gather_hbm_bytes']:.0f}"])
 
 
 def _time_streamed_steps(modes, records, repeats: int):
@@ -273,7 +344,7 @@ def _time_streamed_steps(modes, records, repeats: int):
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.analysis.drivers import MODE_SETUPS
+    from repro.analysis import drivers
     from repro.core.algorithm import CompressionConfig
     from repro.core.budgets import BudgetConfig
     from repro.dist import compat
@@ -304,15 +375,19 @@ def _time_streamed_steps(modes, records, repeats: int):
     }
     lr = LrSchedule(base=0.01)
     for mode in modes:
-        comp_name, server, vote_impl, value = MODE_SETUPS[mode]
+        comp_name, server, vote_impl, value = drivers._setup_of(mode)
+        kind = "target_sparsity" if mode.endswith("golomb") else "fixed"
         comp = CompressionConfig(compressor=comp_name,
-                                 budget=BudgetConfig(kind="fixed", value=value),
+                                 budget=BudgetConfig(kind=kind, value=value),
                                  server=server)
+        ring_rows = (drivers.RING_SWEEP_CHUNK_ROWS
+                     if mode in drivers.RING_SETUPS else None)
         for bucketed in (False, True):
             step = build_streamed_train_step(model, StreamedStepConfig(
                 compression=comp, lr=lr, worker_axes=("data",),
                 fsdp_axis="data", vote_impl=vote_impl, donate=False,
-                backend="jnp", bucketed=bucketed), mesh)
+                backend="jnp", bucketed=bucketed,
+                ring_chunk_rows=ring_rows), mesh)
             state = init_state(params, server=server, seed=42)
             with compat.set_mesh(mesh):
                 (_, metrics), dt = timed(
@@ -324,9 +399,11 @@ def _time_streamed_steps(modes, records, repeats: int):
                 "trainer": "streamed", "wire_mode": mode, "bucketed": bucketed,
                 "ms_per_step": dt * 1e3,
                 "wire_bytes_per_device": float(metrics["wire_bytes_per_device"]),
+                "gather_hbm_bytes": float(metrics["gather_hbm_bytes"]),
             })
             csv_row([records[-1]["case"], f"{dt*1e3:.2f}",
-                     f"{records[-1]['wire_bytes_per_device']:.0f}"])
+                     f"{records[-1]['wire_bytes_per_device']:.0f}",
+                     f"{records[-1]['gather_hbm_bytes']:.0f}"])
 
 
 # ---------------------------------------------------------------------------
@@ -341,7 +418,8 @@ def main(fast: bool = False, out: Path | None = None):
                 "vs_fp32", "fsdp_gather", "hier_2pod", "packed_model",
                 "packed_real", "packed_census", "pad_tax", "bucketed_real",
                 "bucket_pad_tax", "launches", "launches_bucketed",
-                "launch_ratio"])
+                "launch_ratio", "mono_peak_hbm", "ring_peak_hbm",
+                "hbm_ratio", "ring_launches"])
     table = []
     for arch in ARCH_IDS:
         cfg = get_config(arch)
@@ -359,8 +437,14 @@ def main(fast: bool = False, out: Path | None = None):
         bcensus = bucketed_census_bytes(cfg, mode)
         assert bcensus == breal, (
             f"{arch}: bucketed census {bcensus:.6g} != ledger {breal:.6g}")
+        # the ring wire moves the SAME bytes over the fabric — assert its
+        # traced census against the monolithic ledger, to the byte
+        rcensus = ring_census_bytes(cfg, mode)
+        assert rcensus == real, (
+            f"{arch}: ring census {rcensus:.6g} != ledger {real:.6g}")
         per_leaf, bucketed = launch_counts(cfg, mode)
         ratio = per_leaf / max(bucketed, 1)
+        rs = ring_stats(cfg, mode)
         csv_row([arch, mode, f"{n/1e9:.2f}e9",
                  f"{base['grad_exchange']:.3e}", f"{ours['grad_exchange']:.3e}",
                  f"{base['grad_exchange']/ours['grad_exchange']:.1f}x",
@@ -370,18 +454,28 @@ def main(fast: bool = False, out: Path | None = None):
                  f"{real / packed['grad_exchange'] - 1:+.1%}",
                  f"{breal:.3e}",
                  f"{breal / packed['grad_exchange'] - 1:+.1%}",
-                 per_leaf, bucketed, f"{ratio:.1f}x"])
+                 per_leaf, bucketed, f"{ratio:.1f}x",
+                 f"{rs['mono_peak_hbm']:.3e}", f"{rs['ring_peak_hbm']:.3e}",
+                 f"{rs['hbm_ratio']:.1f}x", rs["ring_launches"]])
         table.append({
             "arch": arch, "trainer": mode, "params": n,
             "packed_real_bytes": real, "bucketed_real_bytes": breal,
             "launches_per_leaf": per_leaf, "launches_bucketed": bucketed,
             "launch_ratio": ratio,
+            "mono_peak_hbm_bytes": rs["mono_peak_hbm"],
+            "ring_peak_hbm_bytes": rs["ring_peak_hbm"],
+            "gather_hbm_ratio": rs["hbm_ratio"],
+            "ring_launches": rs["ring_launches"],
+            "ring_hops": rs["ring_hops"],
         })
 
     print("\n# step time: per-leaf vs bucketed wire "
           f"(jax backend={jax.default_backend()}, {jax.device_count()} devices)")
-    csv_header(["case", "ms_per_step", "wire_bytes_per_device"])
-    modes = ("votes",) if fast else ("votes", "scaled_votes", "pack8", "decoded")
+    csv_header(["case", "ms_per_step", "wire_bytes_per_device",
+                "gather_hbm_bytes"])
+    modes = (("votes", "ring_pack2") if fast
+             else ("votes", "scaled_votes", "pack8", "decoded",
+                   "ring_pack2", "ring_pack8"))
     repeats = 2 if fast else 3
     records: list[dict] = []
     _time_simple_steps(modes, records, repeats)
@@ -399,7 +493,13 @@ def main(fast: bool = False, out: Path | None = None):
                  "(streamed: n_repeats per-layer exchanges per block leaf); "
                  "step times compare the per-leaf wire against the bucketed "
                  "(simple) / double-buffered (streamed) wire on host devices "
-                 "— launch-count savings, not fabric bandwidth."),
+                 "— launch-count savings, not fabric bandwidth. Ring columns "
+                 "are at collectives.DEFAULT_RING_CHUNK_ROWS: the ring moves "
+                 "the same fabric bytes as the monolithic gather (asserted "
+                 "via the traced ring census) but holds only ~2 chunks of "
+                 "payload instead of M exchanges' worth; ring_* step-time "
+                 "rows run the chunked ppermute wire and report its "
+                 "gather_hbm_bytes metric."),
         "ledger": table,
         "results": records,
     }

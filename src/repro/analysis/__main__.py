@@ -5,8 +5,10 @@ Order: AST repo-lint first (cheap, no tracing), then per-spec traceable-program
 rules, then the wire-mode collective censuses (per-leaf AND bucketed), then the
 collective launch-count budgets (with the bucketed >= 5x launch-ratio floor on
 the stacked-block configs), then the entropy-wire byte-ratio floor (golomb
-must beat the flat 2-bit wire >= 2x on the same configs), then the HLO
-agreement check (compiles one step).
+must beat the flat 2-bit wire >= 2x on the same configs), then the ring
+gather's peak-HBM floor (ring residency must undercut the monolithic gather
+>= M/2 x on the same configs), then the HLO agreement check (compiles one
+step).
 """
 
 from __future__ import annotations
@@ -42,6 +44,11 @@ def main(argv=None) -> int:
     findings, checks = drivers.entropy_wire_checks()
     reports.append(report(findings, checks))
     print(f"entropy wire budget: {checks} checks, {len(findings)} findings",
+          flush=True)
+
+    findings, checks = drivers.gather_hbm_checks()
+    reports.append(report(findings, checks))
+    print(f"gather hbm budget: {checks} checks, {len(findings)} findings",
           flush=True)
 
     findings, checks = drivers.hlo_check()

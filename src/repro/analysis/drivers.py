@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from repro.analysis.hlo_audit import HloJaxprAgreement, hlo_collective_stats
 from repro.analysis.jaxpr_audit import (CollectiveCensus, CollectiveCountBudget,
                                         DtypePromotionDrift, EntropyWireBudget,
-                                        check_fused_uplink, collective_census)
+                                        GatherHbmBudget, check_fused_uplink,
+                                        collective_census)
 
 #: hypothetical worker count the census ring model is costed at: > 1 so every
 #: ring term is non-vacuous, <= 127 so the int8 _sum_dtype bucket still holds
@@ -56,12 +57,40 @@ MODE_SETUPS = {
                GOLOMB_P),
 }
 
+#: chunk size (payload rows) the ring setups sweep with: deliberately tiny —
+#: one sublane tile — so the tiny-model BUCKETED plans split into many chunks
+#: and the census sees a genuinely multi-chunk ring (at the production
+#: default of collectives.DEFAULT_RING_CHUNK_ROWS the tiny model would be
+#: one chunk everywhere and the chunk loop would go untested)
+RING_SWEEP_CHUNK_ROWS = 32
+
+#: ring-gather setups: the three gather wires again, exchanged over the
+#: chunked ppermute ring instead of the monolithic all_gather. Kept in their
+#: own table (not MODE_SETUPS) so the monolithic pins keep their exact
+#: parametrization; every census/count driver sweeps both tables.
+RING_SETUPS = {
+    "ring_pack2": ("sparsign", "majority_vote", "allgather_packed", 2.0),
+    "ring_pack8": ("qsgd8", "mean", "allgather_packed", 1.0),
+    "ring_golomb": ("sparsign_golomb", "majority_vote", "allgather_packed",
+                    GOLOMB_P),
+}
+
+
+def _setup_of(mode: str) -> tuple:
+    """(compressor, server, vote_impl, budget) row of either setup table."""
+    return MODE_SETUPS[mode] if mode in MODE_SETUPS else RING_SETUPS[mode]
+
 
 def wire_mode_of(mode: str) -> str:
     """The engine wire mode one setup's negotiation resolves to — identity
-    except for the golomb setup, which rides the votes mode on an
-    entropy-coded payload."""
-    return "votes" if mode == "golomb" else mode
+    except for the golomb setups (which ride the votes mode on an
+    entropy-coded payload) and the ring setups (the ring is an exchange
+    strategy of the SAME wire modes, not a mode of its own)."""
+    if mode.endswith("golomb") or mode == "ring_pack2":
+        return "votes"
+    if mode == "ring_pack8":
+        return "pack8"
+    return mode
 
 
 def tiny_model():
@@ -90,23 +119,30 @@ def mode_comp(mode: str):
     from repro.core.algorithm import CompressionConfig
     from repro.core.budgets import BudgetConfig
 
-    compressor, server, vote_impl, budget = MODE_SETUPS[mode]
-    # the golomb setup's budget IS its plan sparsity: a target_sparsity
+    compressor, server, vote_impl, budget = _setup_of(mode)
+    # the golomb setups' budget IS their plan sparsity: a target_sparsity
     # budget both drives the compressor and resolves the wire capacity p
-    kind = "target_sparsity" if mode == "golomb" else "fixed"
+    kind = "target_sparsity" if mode.endswith("golomb") else "fixed"
     return CompressionConfig(compressor=compressor,
                              budget=BudgetConfig(kind=kind, value=budget),
                              server=server)
 
 
 def mode_wire(mode: str, m: int):
-    """A costing-only VoteWire at hypothetical worker count ``m``."""
+    """A costing-only VoteWire at hypothetical worker count ``m`` — the ring
+    setups cost (and the steps build) their wires with the sweep chunk size."""
     from repro.dist import collectives
 
-    if mode == "pack8":
-        return collectives.Pack8Wire(axes=("data",), n_workers=m)
-    if mode == "golomb":
-        return collectives.GolombWire(axes=("data",), n_workers=m, p=GOLOMB_P)
+    rcr = RING_SWEEP_CHUNK_ROWS if mode in RING_SETUPS else None
+    if mode == "pack8" or mode == "ring_pack8":
+        return collectives.Pack8Wire(axes=("data",), n_workers=m,
+                                     ring_chunk_rows=rcr)
+    if mode.endswith("golomb"):
+        return collectives.GolombWire(axes=("data",), n_workers=m, p=GOLOMB_P,
+                                      ring_chunk_rows=rcr)
+    if mode == "ring_pack2":
+        return collectives.PackedVoteWire(axes=("data",), n_workers=m,
+                                          ring_chunk_rows=rcr)
     return collectives.VoteWire(axes=("data",), n_workers=m)
 
 
@@ -118,13 +154,13 @@ def build_mode_step(mode: str, *, bucketed: bool = False):
     from repro.train.state import LrSchedule, init_state
     from repro.train.step_simple import TrainStepConfig, build_train_step
 
-    _, server, vote_impl, _ = MODE_SETUPS[mode]
+    _, server, vote_impl, _ = _setup_of(mode)
     comp = mode_comp(mode)
     resolved = engine.wire_mode(comp, vote_impl=vote_impl)
     assert resolved == wire_mode_of(mode), (mode, resolved)
-    if mode == "golomb":
-        # the golomb setup is only itself if the payload negotiation picks
-        # the entropy-coded stream (votes mode + the gather impl)
+    if mode.endswith("golomb"):
+        # the golomb setups are only themselves if the payload negotiation
+        # picks the entropy-coded stream (votes mode + the gather impl)
         assert engine.wire_payload_format(
             comp, resolved, vote_impl=vote_impl) == "golomb"
     model = tiny_model()
@@ -134,7 +170,9 @@ def build_mode_step(mode: str, *, bucketed: bool = False):
     scfg = TrainStepConfig(compression=comp, lr=LrSchedule(base=0.05),
                            worker_axes=("data",), vote_impl=vote_impl,
                            donate=False, backend="interpret",
-                           bucketed=bucketed)
+                           bucketed=bucketed,
+                           ring_chunk_rows=(RING_SWEEP_CHUNK_ROWS
+                                            if mode in RING_SETUPS else None))
     step = build_train_step(model, scfg, mesh)
     state = init_state(params, server=server, seed=7)
     return step, state, batch, model, mesh, comp
@@ -157,7 +195,9 @@ def mode_ledger(mode: str, model, m: int):
         n = int(math.prod(s.shape))
         p = (collectives.decoded_wire_bytes(n, m) if mode == "decoded"
              else wire.wire_bytes(n))
-        sc = (wire.scalar_bytes() if mode == "pack8" else 0.0) \
+        # pack8 decode scales ride once per ring chunk (x1 monolithic)
+        sc = (wire.scalar_bytes() * wire.ring_chunks(n)
+              if emode == "pack8" else 0.0) \
             + (collectives.allreduce_scalar_bytes(m) if share else 0.0)
         assert abs((p + sc) - collectives.uplink_ledger(
             emode, wire, n, share_linf=share)) < 1e-6, (mode, n)
@@ -224,7 +264,7 @@ def census_check(mode: str, m: int = HYPOTHETICAL_M, *, bucketed: bool = False):
 
 def run_census_checks(m: int = HYPOTHETICAL_M):
     findings, checks = [], 0
-    for mode in MODE_SETUPS:
+    for mode in list(MODE_SETUPS) + list(RING_SETUPS):
         for bucketed in (False, True):
             f, _, _, _ = census_check(mode, m, bucketed=bucketed)
             findings += f
@@ -243,17 +283,27 @@ def mode_count_budget(mode: str, model, *, bucketed: bool,
     plus one (n_slots,) scale-vector gather on the pack8 wire and one (L,)
     shared-linf pmax when the compressor shares its scale — both >= 2
     elements, so they count as payload launches (and are billed as payload
-    bytes by the same rule in ``plan_ledger``)."""
+    bytes by the same rule in ``plan_ledger``). Ring setups launch one
+    payload ppermute per CHUNK (the wire's ``ring_chunks`` framing), and
+    the ring pack8 bucket re-ships its scale vector with every chunk."""
     from repro.core import engine
 
     leaves = jax.tree_util.tree_leaves(model.param_shapes())
     n_leaves = len(leaves)
     share = engine.needs_shared_linf(mode_comp(mode))
+    wire = mode_wire(mode, m)
     if not bucketed:
         # scalar budget: per-leaf n_sel (+ per-leaf scale protocol on the
-        # shared/pack8 wires) + a handful of metric reductions
-        return n_leaves, 2 * n_leaves + 8
+        # shared/pack8 wires, once per ring chunk) + metric reductions
+        expected = sum(wire.ring_chunks(int(math.prod(s.shape)))
+                       for s in leaves)
+        return expected, n_leaves + expected + 8
     plan = mode_bucket_plan(mode, model, m)
+    if mode in RING_SETUPS:
+        chunks = sum(wire.bucket_ring_chunks(b) for b in plan.buckets)
+        extra = (chunks if wire_mode_of(mode) == "pack8" else 0) \
+            + (1 if share else 0)
+        return chunks + extra, 8
     extra = (1 if mode == "pack8" else 0) + (1 if share else 0)
     return len(plan.buckets) + extra, 8
 
@@ -304,11 +354,15 @@ def count_ratio_checks(m: int = HYPOTHETICAL_M):
 
 def run_count_checks():
     findings, checks = [], 0
-    for mode in MODE_SETUPS:
+    for mode in list(MODE_SETUPS) + list(RING_SETUPS):
         for bucketed in (False, True):
             f, _, _ = count_check(mode, bucketed=bucketed)
             findings += f
             checks += 1
+    # count_ratio_checks stays on the monolithic setups: the ring trades
+    # launch count for residency BY DESIGN (one ppermute per chunk), so a
+    # bucketed-vs-per-leaf launch floor is the wrong question there —
+    # gather_hbm_checks asserts the ring's own win instead
     f, c = count_ratio_checks()
     return findings + f, checks + c
 
@@ -359,6 +413,62 @@ def entropy_wire_checks(m: int = HYPOTHETICAL_M):
         findings += rule.check(f"{name}[bucketed]",
                                golomb_bytes=g_bucket, pack2_bytes=p_bucket)
         checks += 2
+    return findings, checks
+
+
+def _ring_wire_pair(mode: str, m: int, chunk_rows: int):
+    """(monolithic, ring) twins of one ring setup's gather wire — identical
+    wire class and parameters, only the exchange strategy differs."""
+    from repro.dist import collectives
+
+    if mode == "ring_pack8":
+        cls, kw = collectives.Pack8Wire, {}
+    elif mode == "ring_golomb":
+        cls, kw = collectives.GolombWire, {"p": GOLOMB_P}
+    else:
+        cls, kw = collectives.PackedVoteWire, {}
+    mono = cls(axes=("data",), n_workers=m, **kw)
+    ring = cls(axes=("data",), n_workers=m, ring_chunk_rows=chunk_rows, **kw)
+    return mono, ring
+
+
+def gather_hbm_checks(m: int = HYPOTHETICAL_M):
+    """Blocking peak-HBM floor: on every stacked-block model config, the ring
+    gather's peak gathered-payload HBM (``gather_hbm_bytes``, at the
+    documented production chunk size) must undercut the monolithic gather's
+    M x payload by >= M/2 x for every ring setup, per-leaf AND bucketed.
+    Pure ledger/plan arithmetic over the real model shape trees — the same
+    formulas the train metric surfaces, so a floor here is a floor on the
+    reported residency. M/2 is exact for the single-chunk golomb leaf stream
+    (2 chunks vs M payloads of the same stream); every chunked case clears
+    it with room."""
+    from repro.configs.registry import get_config
+    from repro.dist import bucketing, collectives
+    from repro.models.model import Model
+
+    rule = GatherHbmBudget(min_ratio=m / 2.0)
+    findings, checks = [], 0
+    for name in RATIO_CONFIGS:
+        model = Model(get_config(name))
+        leaves = jax.tree_util.tree_leaves(model.param_shapes())
+        sizes = [int(math.prod(s.shape)) for s in leaves]
+        for mode in RING_SETUPS:
+            mono, ring = _ring_wire_pair(
+                mode, m, collectives.DEFAULT_RING_CHUNK_ROWS)
+            emode = wire_mode_of(mode)
+            findings += rule.check(
+                f"{name}[{mode}/per-leaf]",
+                ring_bytes=max(ring.gather_hbm_bytes(n) for n in sizes),
+                mono_bytes=max(mono.gather_hbm_bytes(n) for n in sizes))
+            fmt = bucketing.wire_bucket_format(emode, mono)
+            plan = bucketing.build_bucket_plan(
+                leaves, fmt,
+                rows_fn=(mono.payload_rows if fmt == "golomb" else None))
+            findings += rule.check(
+                f"{name}[{mode}/bucketed]",
+                ring_bytes=bucketing.plan_gather_hbm_bytes(emode, ring, plan),
+                mono_bytes=bucketing.plan_gather_hbm_bytes(emode, mono, plan))
+            checks += 2
     return findings, checks
 
 

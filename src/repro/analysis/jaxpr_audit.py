@@ -200,6 +200,14 @@ def check_fused_uplink(spec, g, *, seed: int = 7, param=None) -> list:
 COLLECTIVE_PRIMS = ("psum", "pmax", "pmin", "all_gather", "all_to_all",
                     "ppermute", "reduce_scatter", "psum_scatter")
 
+#: named-axis primitives that move NO payload over the fabric: device-id
+#: introspection and the replication-adjustment markers shard_map's
+#: check_rep/check_vma machinery inserts. Everything else that names a mesh
+#: axis and carries bytes is either modeled (COLLECTIVE_PRIMS) or an
+#: *unknown* collective — recorded on ``Census.unknown`` and turned into a
+#: blocking Finding by the census rule, never an uncounted zero.
+NONWIRE_PRIMS = ("axis_index", "pvary", "pbroadcast")
+
 
 def _named_axes(eqn) -> tuple:
     ax = eqn.params.get("axes", eqn.params.get("axis_name", ()))
@@ -247,15 +255,25 @@ class CollectiveRecord:
             return float((m - 1) * self.out_bytes)
         if self.primitive == "all_to_all":
             return (m - 1) / m * self.in_bytes
-        return float(self.in_bytes)                         # ppermute
+        # ppermute: the ring-pipelined gather's hop primitive. ONE traced
+        # ppermute is an M-1-hop ring (the hop loop is a while_loop, whose
+        # body the walker bills at trips=1), each hop shipping the full
+        # chunk — so a chunk's ring costs (M-1) x chunk bytes, and summing
+        # over chunks reproduces the gather wire's (M-1) x payload exactly.
+        assert self.primitive == "ppermute", self.primitive
+        return float((m - 1) * self.in_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
 class Census:
     """Every collective of one traced program, byte-costable at any
-    hypothetical axis sizes."""
+    hypothetical axis sizes. ``unknown`` holds payload-carrying named-axis
+    equations the byte model does NOT cover — they are excluded from every
+    byte/count sum (no model to bill them under) and exist to be surfaced
+    loudly by the census rule, not silently zeroed."""
 
     records: tuple
+    unknown: tuple = ()
 
     def counts(self) -> Counter:
         return Counter({p: sum(r.trips for r in self.records if r.primitive == p)
@@ -303,8 +321,17 @@ def collective_census(fn, *args) -> Census:
     collective equation, descending like the HBM walker. Descent through a
     ``scan`` multiplies ``trips`` by the scan length, so a collective inside
     the streamed backward scan is billed once per superblock; ``while`` trip
-    counts are unknowable statically and stay at 1 (documented under-count)."""
+    counts are unknowable statically and stay at 1 — which is exactly the
+    ring gather's billing contract: its hop loop is a while_loop whose single
+    ppermute models the whole M-1-hop ring (``CollectiveRecord.ring_bytes``).
+
+    A payload-carrying equation that NAMES a mesh axis but is neither a
+    modeled collective (``COLLECTIVE_PRIMS``) nor a known payload-free prim
+    (``NONWIRE_PRIMS``) lands on ``Census.unknown`` — the census rule blocks
+    on it, because an unmodeled collective silently billed at zero bytes is
+    how a ledger pin rots."""
     records = []
+    unknown = []
 
     def walk(jaxpr, trips: int):
         for eqn in jaxpr.eqns:
@@ -323,6 +350,19 @@ def collective_census(fn, *args) -> Census:
                     trips=trips,
                     tiled=bool(eqn.params.get("tiled", False)),
                 ))
+            elif name not in NONWIRE_PRIMS and _named_axes(eqn):
+                in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+                in_bytes = sum(math.prod(a.shape) * jnp.dtype(a.dtype).itemsize
+                               for a in in_avals)
+                if in_bytes > 0:
+                    unknown.append(CollectiveRecord(
+                        primitive=name,
+                        axes=_named_axes(eqn),
+                        in_elems=sum(math.prod(a.shape) for a in in_avals),
+                        in_bytes=in_bytes,
+                        out_bytes=0,
+                        trips=trips,
+                    ))
             if name == "pallas_call":
                 continue
             sub_trips = trips
@@ -332,7 +372,7 @@ def collective_census(fn, *args) -> Census:
                 walk(sub, sub_trips)
 
     walk(_as_jaxpr(fn, args), 1)
-    return Census(records=tuple(records))
+    return Census(records=tuple(records), unknown=tuple(unknown))
 
 
 class CollectiveCensus(Rule):
@@ -356,6 +396,17 @@ class CollectiveCensus(Rule):
     def check(self, label: str, census: Census, *, ledger_payload: float,
               ledger_scalar_min: float = 0.0) -> list:
         findings = []
+        if census.unknown:
+            names = ", ".join(sorted({
+                f"{r.primitive}[{','.join(r.axes)}]({r.in_bytes}B)"
+                for r in census.unknown}))
+            findings.append(self.finding(
+                label,
+                f"{len(census.unknown)} payload-carrying collective "
+                f"equation(s) the byte model does not cover: {names} — an "
+                f"unmodeled collective billed at zero bytes voids the "
+                f"ledger pin; teach CollectiveRecord.ring_bytes its model "
+                f"(or add a payload-free prim to NONWIRE_PRIMS)"))
         payload = census.payload_bytes(self.axis_sizes)
         tol = self.tolerance * max(abs(ledger_payload), 1.0)
         if abs(payload - ledger_payload) > tol:
@@ -438,6 +489,39 @@ class EntropyWireBudget(Rule):
                 f"golomb wire bills {golomb_bytes:.0f} B vs {pack2_bytes:.0f} "
                 f"B on the flat 2-bit wire — ratio {ratio:.2f}x is under the "
                 f"{self.min_ratio:.1f}x floor")]
+        return []
+
+
+class GatherHbmBudget(Rule):
+    """Blocking peak-HBM floor for the ring-pipelined gather.
+
+    The ring wire's whole point is residency: the monolithic gather holds
+    M x payload of gathered bytes in HBM before decoding, the chunked
+    ppermute ring holds ~2 chunks. This rule pins that win via the honest
+    ``gather_hbm_bytes`` ledger — ring peak HBM must undercut the monolithic
+    gather's by at least ``min_ratio`` (M/2 at the hypothetical census M:
+    2 chunks vs M payloads, with chunk <= payload). A chunk-framing
+    regression (chunks growing past the payload, a ledger billing the ring
+    at gather residency) blocks here; wire BYTES are intentionally not part
+    of this rule — the ring moves the same bytes, only the residency drops.
+    """
+
+    name = "gather-hbm-budget"
+    description = ("ring gather peak payload HBM must undercut the "
+                   "monolithic gather by the configured floor")
+
+    def __init__(self, min_ratio: float):
+        self.min_ratio = float(min_ratio)
+
+    def check(self, label: str, *, ring_bytes: float,
+              mono_bytes: float) -> list:
+        if ring_bytes * self.min_ratio > mono_bytes:
+            ratio = mono_bytes / max(ring_bytes, 1e-9)
+            return [self.finding(
+                label,
+                f"ring gather peaks at {ring_bytes:.0f} B of gathered "
+                f"payload HBM vs {mono_bytes:.0f} B monolithic — ratio "
+                f"{ratio:.2f}x is under the {self.min_ratio:.1f}x floor")]
         return []
 
 

@@ -167,6 +167,33 @@ def resolve_golomb_p(cfg: "CompressionConfig",
     return p
 
 
+def resolve_ring_chunk_rows(ring_chunk_rows: Optional[int],
+                            vote_impl: Optional[str]) -> Optional[int]:
+    """Negotiate the ring-pipelined gather knob at step-build time: ``None``
+    stays monolithic (the default), anything else must pair with the gather
+    impl and be a positive sublane multiple. The psum/hier impls reduce on
+    the fabric and never materialize a gathered tensor, so a ring request
+    there is a configuration contradiction, not something to silently drop —
+    mirror the wire_mode fallbacks' policy of failing loudly instead of
+    misreporting the byte/HBM ledger."""
+    if ring_chunk_rows is None:
+        return None
+    if vote_impl != "allgather_packed":
+        raise ValueError(
+            f"ring_chunk_rows={ring_chunk_rows!r} needs "
+            f"vote_impl='allgather_packed' (the ring chunks a gathered "
+            f"payload; vote_impl={vote_impl!r} has none) — drop the ring "
+            f"knob or switch the vote wire")
+    from repro.kernels import common as kcommon
+    r = int(ring_chunk_rows)
+    if r <= 0 or r % kcommon.SUBLANE_PAD != 0:
+        raise ValueError(
+            f"ring_chunk_rows must be a positive multiple of the sublane "
+            f"tile ({kcommon.SUBLANE_PAD}), got {ring_chunk_rows!r} — see "
+            f"collectives.DEFAULT_RING_CHUNK_ROWS for the documented default")
+    return r
+
+
 def needs_shared_linf(cfg: "CompressionConfig") -> bool:
     """Must the trainer all-reduce(max) the worker L-inf norms before
     compressing? True for the shared_max scale protocol (TernGrad's magnitude

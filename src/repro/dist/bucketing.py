@@ -269,8 +269,9 @@ def plan_ledger(mode: str, wire, plan: BucketPlan, *,
     (vs one scalar pmax per leaf in the per-leaf path)."""
     payload = scalar = 0.0
     for b in plan.buckets:
-        p, s = collectives.uplink_ledger_bucket(mode, wire, b.n_coords,
-                                                len(b.slots), rows=b.rows)
+        p, s = collectives.uplink_ledger_bucket(
+            mode, wire, b.n_coords, len(b.slots), rows=b.rows,
+            ring_chunks=wire.bucket_ring_chunks(b))
         payload += p
         scalar += s
     if share_linf:
@@ -281,6 +282,18 @@ def plan_ledger(mode: str, wire, plan: BucketPlan, *,
         else:
             scalar += bytes_
     return payload, scalar
+
+
+def plan_gather_hbm_bytes(mode: str, wire, plan: BucketPlan) -> float:
+    """Peak gathered-payload HBM across the plan's bucket exchanges — the
+    bucketed twin of ``wire.gather_hbm_bytes``. Buckets exchange one at a
+    time, so the plan's peak is the max bucket, not the sum; the decoded
+    mode's psum never materializes a gathered tensor (0.0), matching
+    ``collectives.VoteWire.gather_hbm_bytes`` for the psum wires."""
+    if mode == "decoded":
+        return 0.0
+    return max((wire.bucket_gather_hbm_bytes(b) for b in plan.buckets),
+               default=0.0)
 
 
 def streamed_plan_ledger(mode: str, wire, block_plan: BucketPlan,

@@ -45,6 +45,20 @@ Scale-carrying compressors ship f32 decode scales next to the payload: one
 shared scalar for the ``scaled_votes`` mode (``worker_shared_linf`` is the
 magnitude-sharing all-reduce(max) that produces it), per-worker scalars on
 the pack8 wire; ``VoteWire.scalar_bytes`` is the ledger entry either way.
+
+Ring-pipelined gather (``ring_chunk_rows``): the gather wires' default
+exchange is one monolithic ``all_gather`` that materializes the full
+``(M, rows, width)`` tensor in HBM before decoding. Setting
+``ring_chunk_rows`` replaces it with an M-1-hop ``ring_permute`` pipeline:
+the payload is cut into fixed-shape row chunks, each chunk circulates the
+worker ring with every arriving slice decode-summed immediately through the
+same fused kernels, so peak payload HBM is ~2 chunks (in-flight + decoding)
+instead of M x payload. Total fabric bytes are unchanged — every byte still
+visits every worker — only the residency changes; ``gather_hbm_bytes`` is
+the ledger entry. Integer wires (pack2, golomb) accumulate int32 and are
+bitwise-equal to the monolithic gather at any arrival order; the pack8
+wire's f32 sums associate in ring-arrival order (self, prev, prev-1, ...)
+instead of worker-index order — deterministic, allclose vs the oracle.
 """
 
 from __future__ import annotations
@@ -295,15 +309,17 @@ def uplink_ledger(mode: str, wire: "VoteWire", n_coords: int, *,
     else:
         total = wire.wire_bytes(n_coords)
     if mode == "pack8":
-        total += wire.scalar_bytes()   # per-worker decode scales ride the gather
+        # per-worker decode scales ride the gather — once per ring chunk
+        # (the chunked ring re-ships the scale alongside every chunk)
+        total += wire.scalar_bytes() * wire.ring_chunks(n_coords)
     if share_linf:
         total += allreduce_scalar_bytes(wire.n_workers)
     return total
 
 
 def uplink_ledger_bucket(mode: str, wire: "VoteWire", n_coords: int,
-                         n_slots: int, *,
-                         rows: Optional[int] = None) -> Tuple[float, float]:
+                         n_slots: int, *, rows: Optional[int] = None,
+                         ring_chunks: int = 1) -> Tuple[float, float]:
     """Per-device uplink bytes for ONE bucketed exchange carrying ``n_slots``
     leaves in ``n_coords`` padded coordinates — the bucketed variant of
     ``uplink_ledger``, split census-style into (payload, scalar) bytes.
@@ -321,14 +337,16 @@ def uplink_ledger_bucket(mode: str, wire: "VoteWire", n_coords: int,
     slot it is scalar protocol traffic — the split mirrors the census's
     ``in_elems >= 2`` rule so the exact pin holds either way. The shared-linf
     term is per exchange *group*, not per bucket — ``bucketing.plan_ledger``
-    bills it."""
+    bills it. ``ring_chunks`` (``wire.bucket_ring_chunks``) multiplies the
+    pack8 scale-vector term: the chunked ring re-ships the whole vector
+    alongside every chunk."""
     if mode == "decoded":
         payload = decoded_wire_bytes(n_coords, wire.n_workers)
     else:
         payload = wire.bucket_payload_bytes(n_coords, rows=rows)
     scalar = 0.0
     if mode == "pack8":
-        scales = float((wire.n_workers - 1) * 4 * n_slots)
+        scales = float((wire.n_workers - 1) * 4 * n_slots) * int(ring_chunks)
         if n_slots >= 2:
             payload += scales
         else:
@@ -364,6 +382,142 @@ def vote_allgather_packed8(payload: jnp.ndarray, scale, axes: Sequence[str],
     scales = jax.lax.all_gather(scale, tuple(axes), axis=0, tiled=False)
     interpret = (backend == "interpret") if backend is not None else None
     return unpack8_sum_op(gathered, scales, size, shape, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Ring-pipelined gather: ppermute chunks with streaming decode-sum
+# ---------------------------------------------------------------------------
+
+#: Default ring chunk size (canonical payload rows per chunk) when a caller
+#: asks for ring mode without a size: 256 rows is a 32 KiB pack2 / 128 KiB
+#: pack8 chunk — big enough to amortize a ppermute launch on the host
+#: backends, small enough that two in-flight chunks stay far under one
+#: monolithic gather. TPU latency tuning of this knob is deferred to the
+#: hardware pass (see ROADMAP); this is the documented CPU-container default.
+DEFAULT_RING_CHUNK_ROWS = 256
+
+
+def ring_perm(m: int) -> list:
+    """The M-cycle permutation (i -> i+1 mod M): after one application every
+    worker holds its predecessor's buffer, so M-1 hops visit every peer.
+    ``m == 1`` degenerates to the identity [(0, 0)] — trace-legal, and the
+    hop loop's condition is already false there."""
+    return [(i, (i + 1) % m) for i in range(m)]
+
+
+def ring_permute(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
+    """Sanctioned one-hop ring shift over the (flattened) worker axes: the
+    ONLY ppermute call site in the repo (raw ``lax.ppermute`` outside this
+    module is a repolint error). Row-major flat product indexing over
+    ``axes`` — the same worker order as ``worker_index`` and the gather
+    wires' axis-0 stacking, so ring arrival order is a pure rotation of the
+    monolithic gather's worker order."""
+    axes = tuple(axes)
+    if len(axes) == 1:
+        return jax.lax.ppermute(x, axes[0],
+                                ring_perm(compat.axis_size(axes[0])))
+    if compat.HAS_TUPLE_PPERMUTE:
+        return jax.lax.ppermute(x, axes, ring_perm(worker_count(axes)))
+    return _ring_permute_nested(x, axes)
+
+
+def _ring_permute_nested(x: jnp.ndarray, axes: Tuple[str, ...]) -> jnp.ndarray:
+    """Old-jax fallback: compose single-axis ppermutes into the flat-product
+    ring shift. One hop of the flat ring advances the innermost axis; the
+    worker that wraps (innermost index 0 after the shift) must also take the
+    carry into the outer axes — everyone shifts the inner axis, the outer
+    shift is computed unconditionally (collectives can't branch per-device)
+    and selected only on the wrapping workers."""
+    s = compat.axis_size(axes[-1])
+    y = jax.lax.ppermute(x, axes[-1], ring_perm(s))
+    if len(axes) == 1:
+        return y
+    z = _ring_permute_nested(y, axes[:-1])
+    return jnp.where(jax.lax.axis_index(axes[-1]) == 0, z, y)
+
+
+def _ring_chunk_spans(total_rows: int, chunk_rows: Optional[int]) -> tuple:
+    """Static (row_start, rows) chunk framing of a payload: greedy
+    ``chunk_rows``-row spans with a short tail. ``None`` = one whole-payload
+    chunk (a chunked ring degenerates to an unchunked one, which is how the
+    ledger treats a monolithic gather's chunk count too)."""
+    if chunk_rows is None or total_rows <= chunk_rows:
+        return ((0, total_rows),)
+    spans = []
+    r = 0
+    while r < total_rows:
+        spans.append((r, min(int(chunk_rows), total_rows - r)))
+        r += spans[-1][1]
+    return tuple(spans)
+
+
+def _slot_groups(slots, chunk_rows: Optional[int]) -> tuple:
+    """Golomb chunk framing: greedy groups of CONSECUTIVE WHOLE slots whose
+    rows fit in ``chunk_rows``. The coded stream is not row-addressable mid-
+    slot (each slot is one self-describing capacity stream), so golomb
+    chunks on slot boundaries; a slot bigger than ``chunk_rows`` rides the
+    ring alone as an oversized chunk."""
+    slots = tuple(slots)
+    if chunk_rows is None:
+        return (slots,)
+    groups, cur, cur_rows = [], [], 0
+    for s in slots:
+        if cur and cur_rows + s.rows > chunk_rows:
+            groups.append(tuple(cur))
+            cur, cur_rows = [], 0
+        cur.append(s)
+        cur_rows += s.rows
+    if cur:
+        groups.append(tuple(cur))
+    return tuple(groups)
+
+
+def _chunk_segments(slots, r0: int, nr: int) -> tuple:
+    """Which slot row-ranges a [r0, r0+nr) chunk carries: static
+    (slot_index, slot, seg_row_start, seg_rows) tuples, in row order. Used
+    by the pack8 bucket ring — its slots are sublane-aligned, so every
+    segment boundary is a valid kernel tile boundary when the chunk size
+    is a sublane multiple."""
+    segs = []
+    for i, s in enumerate(slots):
+        a = max(r0, s.row_start)
+        b = min(r0 + nr, s.row_start + s.rows)
+        if b > a:
+            segs.append((i, s, a, b - a))
+    return tuple(segs)
+
+
+def _ring_accumulate(payload: jnp.ndarray, side: tuple, decode_fn,
+                     axes: Tuple[str, ...], m: int):
+    """One chunk's M-1-hop ring exchange with streaming decode-sum.
+
+    Decode our own chunk first, then ``lax.while_loop`` the ring: each hop
+    shifts the payload (and any side-channel arrays, e.g. pack8 decode
+    scales) one worker forward and adds ``decode_fn``'s decode of the
+    arriving slice into the accumulator — the gathered ``(M, ...)`` tensor
+    never exists; peak HBM is the in-flight chunk plus the accumulator.
+    ``decode_fn(chunk, *side)`` may return an array or a tuple of arrays
+    (per-slot sums); accumulation is tree-mapped. The hop loop is a
+    ``while_loop`` (never a scan) on purpose: the census walker descends
+    its body with trips=1, so the single traced ppermute per chunk bills as
+    one (M-1)-hop ring launch regardless of the build-time mesh size — at
+    M=1 the loop body never runs and the decode of our own chunk is the
+    whole sum."""
+    acc = decode_fn(payload, *side)
+
+    def cond(carry):
+        return carry[0] < m
+
+    def body(carry):
+        k, b, sd, a = carry
+        b = ring_permute(b, axes)
+        sd = tuple(ring_permute(s, axes) for s in sd)
+        a = jax.tree_util.tree_map(jnp.add, a, decode_fn(b, *sd))
+        return (k + 1, b, sd, a)
+
+    _, _, _, acc = jax.lax.while_loop(
+        cond, body, (jnp.int32(1), payload, tuple(side), acc))
+    return acc
 
 
 # ---------------------------------------------------------------------------
@@ -458,6 +612,30 @@ class VoteWire:
         wire overrides this to bill its capacity rows directly."""
         return self.wire_bytes(n_coords)
 
+    def ring_chunks(self, n_coords: int) -> int:
+        """Number of ring chunks (= payload collective launches) to exchange
+        one n-coordinate leaf. 1 for the psum wires and for unchunked
+        gathers; the gather wires override with their chunk framing."""
+        return 1
+
+    def bucket_ring_chunks(self, bucket) -> int:
+        """Ring chunk count for ONE bucket exchange (cf. ``ring_chunks``)."""
+        return 1
+
+    def gather_hbm_bytes(self, n_coords: int) -> float:
+        """Peak HBM footprint of the gathered payload while exchanging one
+        n-coordinate leaf: M x payload for a monolithic gather, ~2 chunks
+        (in-flight + decoding) for the ring, 0 for the psum wires (a fabric
+        reduction never materializes a gathered tensor). A residency model,
+        not wire traffic — total fabric bytes (``wire_bytes``) are identical
+        either way."""
+        return 0.0
+
+    def bucket_gather_hbm_bytes(self, bucket) -> float:
+        """Peak gathered-payload HBM for ONE bucket exchange (cf.
+        ``gather_hbm_bytes``)."""
+        return 0.0
+
 
 @dataclasses.dataclass(frozen=True)
 class HierVoteWire(VoteWire):
@@ -501,9 +679,12 @@ class HierVoteWire(VoteWire):
 class PackedVoteWire(VoteWire):
     """All-gather of the 2-bit packed wire + fused decode-sum. The message IS
     the packed canonical view — produced in one pass by the fused
-    sparsign_pack2bit kernel on the kernel backends."""
+    sparsign_pack2bit kernel on the kernel backends. With ``ring_chunk_rows``
+    set, the gather becomes the chunked ppermute ring (module docstring):
+    int32 accumulation, bitwise the monolithic gather."""
 
     backend: Optional[str] = None
+    ring_chunk_rows: Optional[int] = None
 
     name = "allgather_packed"
     native_format = "pack2"
@@ -515,11 +696,35 @@ class PackedVoteWire(VoteWire):
         cnt = ((nz & 1) + ((nz >> 2) & 1) + ((nz >> 4) & 1) + ((nz >> 6) & 1))
         return jnp.sum(cnt.astype(jnp.float32))
 
+    def _ring_decode_flat(self, payload: jnp.ndarray) -> jnp.ndarray:
+        """Ring-exchange a (rows, LANES//4) packed payload in row chunks,
+        returning the flat (rows*LANES,) int32 vote sum. Every span is a
+        sublane multiple (canonical rows are sublane-padded and the chunk
+        size is validated as one), so each chunk decodes through the
+        unmodified fused kernel as a self-contained pack2 stream."""
+        from repro.kernels import common as kcommon
+        parts = []
+        for r0, nr in _ring_chunk_spans(payload.shape[0], self.ring_chunk_rows):
+            chunk = jax.lax.slice_in_dim(payload, r0, r0 + nr, axis=0)
+
+            def decode(b, _nr=nr):
+                return _packed_decode_sum(b[None], _nr * kcommon.LANES,
+                                          (_nr * kcommon.LANES,),
+                                          backend=self.backend)
+
+            parts.append(_ring_accumulate(chunk, (), decode, self.axes,
+                                          self.n_workers))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
     def exchange(self, values, size, shape, *, scale=None):
         if scale is not None:
             raise ValueError(
                 "the 2-bit packed vote wire exchanges raw ternary votes; a "
                 "decode scale inside the exchange is a pack8-wire concept")
+        if self.ring_chunk_rows is not None:
+            flat = self._ring_decode_flat(values)
+            total = jax.lax.slice(flat, (0,), (size,)).reshape(shape)
+            return total.astype(_sum_dtype(self.n_workers))
         gathered = jax.lax.all_gather(values, self.axes, axis=0, tiled=False)
         total = _packed_decode_sum(gathered, size, shape, backend=self.backend)
         return total.astype(_sum_dtype(self.n_workers))
@@ -529,13 +734,19 @@ class PackedVoteWire(VoteWire):
         over it, then split on the decoded stream. pack2 packs each canonical
         row independently, so the bucket (a row-concatenation of per-leaf
         payloads) is itself a valid pack2 stream and the whole-bucket decode
-        is bitwise the per-leaf decode at every coordinate."""
+        is bitwise the per-leaf decode at every coordinate — which is also
+        what lets the ring path chunk the bucket on ANY sublane-aligned row
+        boundary, slots included."""
         if scale is not None:
             raise ValueError(
                 "the 2-bit packed vote wire exchanges raw ternary votes; a "
                 "decode scale inside the exchange is a pack8-wire concept")
         from repro.dist import bucketing  # lazy: bucketing imports this module
         n = bucket.n_coords
+        if self.ring_chunk_rows is not None:
+            flat = self._ring_decode_flat(payload)
+            return bucketing.split_bucket(
+                flat.astype(_sum_dtype(self.n_workers)), bucket)
         gathered = jax.lax.all_gather(payload, self.axes, axis=0, tiled=False)
         total = _packed_decode_sum(gathered, n, (n,), backend=self.backend)
         return bucketing.split_bucket(
@@ -543,8 +754,33 @@ class PackedVoteWire(VoteWire):
 
     def wire_bytes(self, n_coords):
         # ring all-gather: each device transmits its (padded) packed payload
-        # to M-1 peers — no reduction on the fabric
+        # to M-1 peers — no reduction on the fabric. The chunked ppermute
+        # ring ships the same bytes (every chunk visits every worker), so
+        # one formula serves both exchanges.
         return float((self.n_workers - 1) * packed_nbytes(n_coords))
+
+    def ring_chunks(self, n_coords):
+        from repro.kernels import common as kcommon
+        return len(_ring_chunk_spans(kcommon.canonical_rows(n_coords),
+                                     self.ring_chunk_rows))
+
+    def bucket_ring_chunks(self, bucket):
+        return len(_ring_chunk_spans(bucket.rows, self.ring_chunk_rows))
+
+    def _gather_hbm(self, rows: int) -> float:
+        from repro.kernels import common as kcommon
+        row_bytes = kcommon.LANES // 4
+        if self.ring_chunk_rows is None:
+            return float(self.n_workers * rows * row_bytes)
+        max_nr = max(nr for _, nr in _ring_chunk_spans(rows, self.ring_chunk_rows))
+        return float(2 * max_nr * row_bytes)
+
+    def gather_hbm_bytes(self, n_coords):
+        from repro.kernels import common as kcommon
+        return self._gather_hbm(kcommon.canonical_rows(n_coords))
+
+    def bucket_gather_hbm_bytes(self, bucket):
+        return self._gather_hbm(bucket.rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -554,9 +790,18 @@ class Pack8Wire(VoteWire):
     message IS the canonical (rows, LANES) int8 view of the signed levels,
     produced in one pass by the fused qsgd8_pack8 kernel on the kernel
     backends; each worker's f32 decode scale rides the gather next to it and
-    the exchange returns the float32 decoded sum the mean server consumes."""
+    the exchange returns the float32 decoded sum the mean server consumes.
+
+    With ``ring_chunk_rows`` set, the kernel backends ring the payload in
+    sublane-tile chunks with the decode scales riding the same ring as an
+    f32 side channel; f32 sums then associate in ring-arrival order — a
+    different (deterministic) association than the worker-order oracle,
+    allclose but not bitwise. The jnp backend keeps its psum-oracle program
+    regardless (there is no gather to ring); the byte/HBM ledgers model the
+    honest gather wire either way, exactly as ``wire_bytes`` already does."""
 
     backend: Optional[str] = None
+    ring_chunk_rows: Optional[int] = None
 
     name = "allgather_packed8"
     native_format = "pack8"
@@ -566,13 +811,40 @@ class Pack8Wire(VoteWire):
         # large coordinates in the nnz_frac metric
         return jnp.sum((values != 0).astype(jnp.float32))
 
+    def _interpret(self):
+        return (self.backend == "interpret") if self.backend is not None else None
+
     def exchange(self, values, size, shape, *, scale=None):
         if scale is None:
             raise ValueError(
                 "the pack8 wire dequantizes during the exchange and needs "
                 "this worker's decode scale (CompressedGrad.scale)")
+        if self.ring_chunk_rows is not None and self.backend != "jnp":
+            return self._ring_exchange(values, scale, size, shape)
         return vote_allgather_packed8(values, scale, self.axes, size, shape,
                                       backend=self.backend)
+
+    def _ring_exchange(self, payload, scale, size, shape):
+        """Chunked ring exchange of one leaf: the (1,) decode scale rides
+        every chunk's ring next to the payload (re-shipped per chunk — the
+        ledger's ``ring_chunks`` factor), each arriving slice dequantize-
+        summed through the fused kernel at M=1."""
+        from repro.kernels import common as kcommon
+        from repro.kernels.pack8.ops import unpack8_sum_op
+        sc = jnp.asarray(scale, jnp.float32).reshape((1,))
+        parts = []
+        for r0, nr in _ring_chunk_spans(payload.shape[0], self.ring_chunk_rows):
+            chunk = jax.lax.slice_in_dim(payload, r0, r0 + nr, axis=0)
+
+            def decode(b, s, _nr=nr):
+                return unpack8_sum_op(b[None], s, _nr * kcommon.LANES,
+                                      (_nr * kcommon.LANES,),
+                                      interpret=self._interpret())
+
+            parts.append(_ring_accumulate(chunk, (sc,), decode, self.axes,
+                                          self.n_workers))
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        return jax.lax.slice(flat, (0,), (size,)).reshape(shape)
 
     def exchange_bucket(self, payload, bucket, *, scale=None):
         """ONE payload all-gather + ONE (n_slots,) scale-vector all-gather for
@@ -601,9 +873,11 @@ class Pack8Wire(VoteWire):
                                   s.rows for s in bucket.slots) else []))
             dec = payload.astype(jnp.float32) * row_scales[:, None]
             return bucketing.split_bucket(jax.lax.psum(dec, self.axes), bucket)
+        if self.ring_chunk_rows is not None:
+            return self._ring_exchange_bucket(payload, scale, bucket)
         gathered = jax.lax.all_gather(payload, self.axes, axis=0, tiled=False)
         scales = jax.lax.all_gather(scale, self.axes, axis=0, tiled=False)
-        interpret = (self.backend == "interpret") if self.backend is not None else None
+        interpret = self._interpret()
         out = []
         for i, s in enumerate(bucket.slots):
             rows = jax.lax.slice_in_dim(gathered, s.row_start,
@@ -612,6 +886,40 @@ class Pack8Wire(VoteWire):
                                       interpret=interpret))
         return out
 
+    def _ring_exchange_bucket(self, payload, scale, bucket):
+        """Chunked ring exchange of one bucket: payload chunks on sublane
+        row tiles, the whole (n_slots,) scale vector riding every chunk's
+        ring. Slots are sublane-aligned (``bucketing``'s pack8
+        ``align_rows``), so every chunk/slot intersection is a tile-aligned
+        segment decoding through the unmodified fused kernel; per-slot
+        segments re-concatenate in row order."""
+        from repro.kernels import common as kcommon
+        from repro.kernels.pack8.ops import unpack8_sum_op
+        outs = [[] for _ in bucket.slots]
+        for r0, nr in _ring_chunk_spans(bucket.rows, self.ring_chunk_rows):
+            chunk = jax.lax.slice_in_dim(payload, r0, r0 + nr, axis=0)
+            segs = _chunk_segments(bucket.slots, r0, nr)
+
+            def decode(b, sc, _segs=segs, _r0=r0):
+                res = []
+                for i, _s, a, srows in _segs:
+                    rows = jax.lax.slice_in_dim(b, a - _r0, a - _r0 + srows,
+                                                axis=0)
+                    res.append(unpack8_sum_op(
+                        rows[None], sc[i:i + 1], srows * kcommon.LANES,
+                        (srows * kcommon.LANES,), interpret=self._interpret()))
+                return tuple(res)
+
+            part = _ring_accumulate(chunk, (scale,), decode, self.axes,
+                                    self.n_workers)
+            for (i, _s, _a, _srows), arr in zip(segs, part):
+                outs[i].append(arr)
+        result = []
+        for s, parts in zip(bucket.slots, outs):
+            flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            result.append(jax.lax.slice(flat, (0,), (s.size,)).reshape(s.shape))
+        return result
+
     def wire_bytes(self, n_coords):
         # ring all-gather of the (padded) int8 payload to M-1 peers
         return float((self.n_workers - 1) * packed8_nbytes(n_coords))
@@ -619,8 +927,31 @@ class Pack8Wire(VoteWire):
     def scalar_bytes(self):
         # per-WORKER decode scales ride the same ring all-gather: M-1
         # incoming 4-B scalars per device (vs the all-reduced shared scalar
-        # of the scaled_votes mode)
+        # of the scaled_votes mode). The chunked ring re-ships them once
+        # per chunk — ``uplink_ledger`` multiplies by ``ring_chunks``.
         return float((self.n_workers - 1) * 4.0)
+
+    def ring_chunks(self, n_coords):
+        from repro.kernels import common as kcommon
+        return len(_ring_chunk_spans(kcommon.canonical_rows(n_coords),
+                                     self.ring_chunk_rows))
+
+    def bucket_ring_chunks(self, bucket):
+        return len(_ring_chunk_spans(bucket.rows, self.ring_chunk_rows))
+
+    def _gather_hbm(self, rows: int) -> float:
+        from repro.kernels import common as kcommon
+        if self.ring_chunk_rows is None:
+            return float(self.n_workers * rows * kcommon.LANES)
+        max_nr = max(nr for _, nr in _ring_chunk_spans(rows, self.ring_chunk_rows))
+        return float(2 * max_nr * kcommon.LANES)
+
+    def gather_hbm_bytes(self, n_coords):
+        from repro.kernels import common as kcommon
+        return self._gather_hbm(kcommon.canonical_rows(n_coords))
+
+    def bucket_gather_hbm_bytes(self, bucket):
+        return self._gather_hbm(bucket.rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -636,10 +967,18 @@ class GolombWire(VoteWire):
     all-gather, so the byte ledger (capacity padding included) equals the
     traced collective exactly; messages denser than plan truncate at
     capacity with the dropped count in the header, and configurations where
-    the capacity loses to pack2 already failed loudly at build time."""
+    the capacity loses to pack2 already failed loudly at build time.
+
+    With ``ring_chunk_rows`` set, the gather becomes the ppermute ring. The
+    coded stream is not row-addressable mid-stream, so golomb chunks on
+    STREAM boundaries: a per-leaf exchange rings its whole capacity stream
+    as one chunk; a bucket rings groups of consecutive whole slots
+    (``_slot_groups`` — each slot is its own self-describing stream).
+    int32 accumulation, bitwise the monolithic gather."""
 
     backend: Optional[str] = None
     p: float = 0.05
+    ring_chunk_rows: Optional[int] = None
 
     name = "allgather_golomb"
     native_format = "golomb"
@@ -661,6 +1000,15 @@ class GolombWire(VoteWire):
             raise ValueError(
                 "the golomb vote wire exchanges entropy-coded ternary votes; "
                 "a decode scale inside the exchange is a pack8-wire concept")
+        if self.ring_chunk_rows is not None:
+            # one leaf = one self-describing capacity stream = one chunk
+            def decode(b):
+                return _golomb_decode_sum(b[None], size, shape, p=self.p,
+                                          backend=self.backend)
+
+            total = _ring_accumulate(values, (), decode, self.axes,
+                                     self.n_workers)
+            return total.astype(_sum_dtype(self.n_workers))
         gathered = jax.lax.all_gather(values, self.axes, axis=0, tiled=False)
         total = _golomb_decode_sum(gathered, size, shape, p=self.p,
                                    backend=self.backend)
@@ -671,11 +1019,14 @@ class GolombWire(VoteWire):
         decode-sums on the gathered row slices. Slots are whole capacity
         streams (their own headers), so each slice decodes exactly as the
         per-leaf wire message — there is no whole-bucket decode to split:
-        the coded stream, unlike pack2 rows, is not coordinate-addressable."""
+        the coded stream, unlike pack2 rows, is not coordinate-addressable.
+        The ring path chunks on whole-slot groups for the same reason."""
         if scale is not None:
             raise ValueError(
                 "the golomb vote wire exchanges entropy-coded ternary votes; "
                 "a decode scale inside the exchange is a pack8-wire concept")
+        if self.ring_chunk_rows is not None:
+            return self._ring_exchange_bucket(payload, bucket)
         gathered = jax.lax.all_gather(payload, self.axes, axis=0, tiled=False)
         out = []
         for s in bucket.slots:
@@ -684,6 +1035,35 @@ class GolombWire(VoteWire):
             total = _golomb_decode_sum(rows, s.size, s.shape, p=self.p,
                                        backend=self.backend)
             out.append(total.astype(_sum_dtype(self.n_workers)))
+        return out
+
+    def _ring_exchange_bucket(self, payload, bucket):
+        """Ring the bucket in whole-slot groups: each group's contiguous row
+        span is one chunk whose decode is a tuple of per-slot fused
+        decode-sums (slots carry their own headers, so a group chunk is a
+        concatenation of self-contained streams)."""
+        slot_pos = {s: i for i, s in enumerate(bucket.slots)}
+        out = [None] * len(bucket.slots)
+        for g in _slot_groups(bucket.slots, self.ring_chunk_rows):
+            r0 = g[0].row_start
+            g_rows = sum(s.rows for s in g)
+            chunk = jax.lax.slice_in_dim(payload, r0, r0 + g_rows, axis=0)
+
+            def decode(b, _g=g, _r0=r0):
+                res = []
+                for s in _g:
+                    rows = jax.lax.slice_in_dim(
+                        b, s.row_start - _r0,
+                        s.row_start - _r0 + s.rows, axis=0)
+                    res.append(_golomb_decode_sum(rows[None], s.size, s.shape,
+                                                  p=self.p,
+                                                  backend=self.backend))
+                return tuple(res)
+
+            part = _ring_accumulate(chunk, (), decode, self.axes,
+                                    self.n_workers)
+            for s, arr in zip(g, part):
+                out[slot_pos[s]] = arr.astype(_sum_dtype(self.n_workers))
         return out
 
     def wire_bytes(self, n_coords):
@@ -705,11 +1085,33 @@ class GolombWire(VoteWire):
         from repro.kernels.golomb.ref import golomb_rows
         return golomb_rows(n_coords, self.p)
 
+    def bucket_ring_chunks(self, bucket):
+        return len(_slot_groups(bucket.slots, self.ring_chunk_rows))
+
+    def gather_hbm_bytes(self, n_coords):
+        from repro.kernels.golomb.ref import ROW_BYTES, golomb_rows
+        rows = golomb_rows(n_coords, self.p)
+        if self.ring_chunk_rows is None:
+            return float(self.n_workers * rows * ROW_BYTES)
+        # a per-leaf stream is one chunk regardless of size (not row-
+        # addressable), so the ring holds ~2 whole streams — still an M/2
+        # residency win over the monolithic gather
+        return float(2 * rows * ROW_BYTES)
+
+    def bucket_gather_hbm_bytes(self, bucket):
+        from repro.kernels.golomb.ref import ROW_BYTES
+        if self.ring_chunk_rows is None:
+            return float(self.n_workers * bucket.rows * ROW_BYTES)
+        max_rows = max(sum(s.rows for s in g)
+                       for g in _slot_groups(bucket.slots, self.ring_chunk_rows))
+        return float(2 * max_rows * ROW_BYTES)
+
 
 def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
                    backend: Optional[str] = None,
                    wire_format: str = "pack2",
-                   golomb_p: Optional[float] = None) -> VoteWire:
+                   golomb_p: Optional[float] = None,
+                   ring_chunk_rows: Optional[int] = None) -> VoteWire:
     """Build the wire for ``impl`` over the worker ``axes`` at step-build time.
 
     Axis sizes come from ``mesh.shape`` when a mesh is given (the builders'
@@ -721,7 +1123,11 @@ def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
     (``allgather_packed`` impl only — a fabric psum cannot sum byte streams;
     ``golomb_p`` is its plan-time nonzero fraction, required), ``pack8`` the
     8-bit level gather (``allgather_packed`` only — levels quantized against
-    per-worker norms cannot be reduced on the fabric).
+    per-worker norms cannot be reduced on the fabric). ``ring_chunk_rows``
+    (gather wires only; a positive sublane multiple, e.g.
+    ``DEFAULT_RING_CHUNK_ROWS``) switches the gather to the chunked
+    ppermute ring — see the module docstring and ``engine.
+    resolve_ring_chunk_rows`` for the negotiated path.
     """
     axes = tuple(axes)
     if impl not in VOTE_IMPLS:
@@ -758,6 +1164,21 @@ def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
         if not 0.0 < float(golomb_p) < 1.0:
             raise ValueError(
                 f"golomb plan fraction must be in (0,1), got {golomb_p}")
+    if ring_chunk_rows is not None:
+        if impl != "allgather_packed":
+            raise ValueError(
+                f"ring_chunk_rows is a gather-wire concept (it chunks the "
+                f"gathered payload) — vote_impl={impl!r} reduces on the "
+                f"fabric and never materializes a gathered tensor; use "
+                f"vote_impl='allgather_packed', or drop the ring knob")
+        from repro.kernels import common as kcommon
+        r = int(ring_chunk_rows)
+        if r <= 0 or r % kcommon.SUBLANE_PAD != 0:
+            raise ValueError(
+                f"ring_chunk_rows must be a positive multiple of the "
+                f"sublane tile ({kcommon.SUBLANE_PAD}) so every chunk stays "
+                f"a valid kernel grid, got {ring_chunk_rows!r}")
+        ring_chunk_rows = r
     sizes = tuple(int(mesh.shape[a]) for a in axes) if mesh is not None \
         else tuple(compat.axis_size(a) for a in axes)
     # one build-time validation point: every per-size /n in the byte ledgers
@@ -769,13 +1190,15 @@ def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
     for s in sizes:
         n *= s
     if wire_format == "pack8":
-        return Pack8Wire(axes=axes, n_workers=n, backend=backend)
+        return Pack8Wire(axes=axes, n_workers=n, backend=backend,
+                         ring_chunk_rows=ring_chunk_rows)
     if wire_format == "golomb":
         return GolombWire(axes=axes, n_workers=n, backend=backend,
-                          p=float(golomb_p))
+                          p=float(golomb_p), ring_chunk_rows=ring_chunk_rows)
     if impl == "hier":
         return HierVoteWire(axes=axes, n_workers=n,
                             inner_size=sizes[1], outer_size=sizes[0])
     if impl == "allgather_packed":
-        return PackedVoteWire(axes=axes, n_workers=n, backend=backend)
+        return PackedVoteWire(axes=axes, n_workers=n, backend=backend,
+                              ring_chunk_rows=ring_chunk_rows)
     return VoteWire(axes=axes, n_workers=n)

@@ -36,6 +36,13 @@ HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
 HAS_SET_MESH = hasattr(jax.sharding, "set_mesh")
 HAS_ABSTRACT_MESH_CTX = hasattr(jax.sharding, "get_abstract_mesh")
 HAS_LAX_AXIS_SIZE = hasattr(jax.lax, "axis_size")
+#: ``jax.lax.ppermute`` accepts a TUPLE of named axes (flat row-major product
+#: indexing over the axis group) from the 0.4 line on; very old releases take
+#: a single axis name only. The ring-pipelined gather wire's primary path
+#: needs the tuple form over ('pod','data') — when this is False,
+#: ``dist.collectives._ring_permute_nested`` composes per-axis single-name
+#: permutes instead (same result, more hops on the outer axis).
+HAS_TUPLE_PPERMUTE = jax.__version_info__ >= (0, 4, 16)
 
 
 def make_mesh(axis_shapes, axis_names, *, devices=None):

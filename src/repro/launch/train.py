@@ -19,7 +19,7 @@ from repro.configs.registry import ARCH_IDS, get_config, trainer_mode
 from repro.core.algorithm import CompressionConfig
 from repro.core.budgets import BudgetConfig
 from repro.data.synthetic import LMStreamConfig, lm_batch
-from repro.dist import compat
+from repro.dist import collectives, compat
 from repro.launch.mesh import make_host_mesh, make_production_mesh, worker_axes_of
 from repro.models.model import Model
 from repro.train import loop as loop_lib
@@ -46,16 +46,22 @@ def build_everything(args):
         worker_sample_fraction=args.participation,
     )
     lr = LrSchedule(base=args.lr, warmup=args.warmup)
+    # --ring engages the ring-pipelined gather on the packed uplink wires;
+    # None keeps the monolithic all_gather
+    ring_rows = ((args.ring_chunk_rows or collectives.DEFAULT_RING_CHUNK_ROWS)
+                 if args.ring else None)
     mode = args.mode or trainer_mode(args.arch)
     if mode == "simple":
         step = build_train_step(model, TrainStepConfig(
             compression=comp, lr=lr, local_lr=args.local_lr, worker_axes=wa,
-            vote_impl=args.vote_impl, bucketed=args.bucketed), mesh)
+            vote_impl=args.vote_impl, bucketed=args.bucketed,
+            ring_chunk_rows=ring_rows), mesh)
         params = model.init(jax.random.PRNGKey(args.seed))
     else:
         step = build_streamed_train_step(model, StreamedStepConfig(
             compression=comp, lr=lr, worker_axes=wa,
-            vote_impl=args.vote_impl, bucketed=args.bucketed), mesh)
+            vote_impl=args.vote_impl, bucketed=args.bucketed,
+            ring_chunk_rows=ring_rows), mesh)
         params = model.init(jax.random.PRNGKey(args.seed))
         params = jax.tree_util.tree_map(jax.device_put, params,
                                         fsdp_param_shardings(model, mesh))
@@ -118,6 +124,14 @@ def main(argv=None):
     ap.add_argument("--bucketed", action="store_true",
                     help="bucketized uplink (one collective per bucket; "
                          "streamed mode double-buffers exchange vs compute)")
+    ap.add_argument("--ring", action="store_true",
+                    help="ring-pipelined payload gather (allgather_packed "
+                         "only): ppermute fixed-shape chunks around the "
+                         "worker ring with streaming decode-sum — O(1) peak "
+                         "HBM instead of O(M)")
+    ap.add_argument("--ring-chunk-rows", type=int, default=None,
+                    help="payload rows per ring chunk (multiple of 32; "
+                         f"default {collectives.DEFAULT_RING_CHUNK_ROWS})")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)

@@ -67,6 +67,10 @@ class TrainStepConfig:
     golomb_p: Optional[float] = None    # plan-time nnz fraction sizing the
                                         # golomb wire's static capacity (None:
                                         # a target_sparsity budget's target)
+    ring_chunk_rows: Optional[int] = None  # ring-pipelined gather: payload
+                                           # rows per ppermute chunk (gather
+                                           # wires only; None: monolithic
+                                           # all_gather)
 
 
 def _leaf_seeds(worker_seed, tree):
@@ -131,7 +135,9 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         step_cfg.vote_impl, axes, mesh, backend=backend,
         wire_format=wire_fmt,
         golomb_p=(engine.resolve_golomb_p(comp, step_cfg.golomb_p)
-                  if wire_fmt == "golomb" else None))
+                  if wire_fmt == "golomb" else None),
+        ring_chunk_rows=engine.resolve_ring_chunk_rows(
+            step_cfg.ring_chunk_rows, step_cfg.vote_impl))
     share_linf = engine.needs_shared_linf(comp)
     if mode != "votes" and engine.needs_server_ef(comp.server):
         raise ValueError(
@@ -173,7 +179,7 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
             return _body_inner(state, batch)
 
     def _finish(state, treedef, new_leaves, ef_leaves, loss, lr, nnz_acc,
-                total, mask, wire_bytes):
+                total, mask, wire_bytes, gather_hbm):
         n_workers = collectives.worker_count(axes)
         new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
         new_ef_tree = (jax.tree_util.tree_unflatten(treedef, ef_leaves)
@@ -182,7 +188,8 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         nnz_mean = collectives.scalar_psum(nnz_acc, axes) / n_workers / jnp.float32(total)
         metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
                    "participated": collectives.scalar_psum(mask.astype(jnp.float32), axes),
-                   "wire_bytes_per_device": jnp.float32(wire_bytes)}
+                   "wire_bytes_per_device": jnp.float32(wire_bytes),
+                   "gather_hbm_bytes": jnp.float32(gather_hbm)}
         new_state = TrainState(params=new_params, ef_residual=new_ef_tree,
                                step=state.step + 1, seed=state.seed)
         return new_state, metrics
@@ -207,6 +214,7 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         nnz_acc = jnp.float32(0.0)
         total = 0
         wire_bytes = 0.0   # per-device uplink ledger (static sizes under jit)
+        gather_hbm = 0.0   # peak gather-payload residency (max over exchanges)
 
         if plan is not None:
             # ---- bucketized uplink: few big collectives -------------------
@@ -274,8 +282,9 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
             pay, scal = bucketing.plan_ledger(mode, wire, plan,
                                               share_linf=share_linf)
             wire_bytes = pay + scal
+            gather_hbm = bucketing.plan_gather_hbm_bytes(mode, wire, plan)
             return _finish(state, treedef, new_leaves, ef_leaves, loss, lr,
-                           nnz_acc, total, mask, wire_bytes)
+                           nnz_acc, total, mask, wire_bytes, gather_hbm)
 
         for i, (g, p, ef) in enumerate(zip(leaves, p_leaves, ef_flat)):
             seed_i = prng.fold_seed(wseed, i)
@@ -283,6 +292,8 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
             # traced collective census by repro.analysis
             wire_bytes += collectives.uplink_ledger(mode, wire, g.size,
                                                     share_linf=share_linf)
+            if mode != "decoded":
+                gather_hbm = max(gather_hbm, wire.gather_hbm_bytes(g.size))
             shared = None
             if share_linf:
                 # TernGrad's magnitude-sharing protocol / linf_share budgets:
@@ -337,7 +348,7 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
             ef_leaves.append(new_ef)
 
         return _finish(state, treedef, new_leaves, ef_leaves, loss, lr,
-                       nnz_acc, total, mask, wire_bytes)
+                       nnz_acc, total, mask, wire_bytes, gather_hbm)
 
     state_spec = P()   # replicated w.r.t. the manual worker axes
     batch_axis = 1 if comp.local_steps > 1 else 0

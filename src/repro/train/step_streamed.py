@@ -64,6 +64,10 @@ class StreamedStepConfig:
     golomb_p: Optional[float] = None    # plan-time nnz fraction sizing the
                                         # golomb wire's static capacity (None:
                                         # a target_sparsity budget's target)
+    ring_chunk_rows: Optional[int] = None  # ring-pipelined gather: payload
+                                           # rows per ppermute chunk (gather
+                                           # wires only; None: monolithic
+                                           # all_gather)
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +181,9 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         step_cfg.vote_impl, axes, mesh, backend=backend,
         wire_format=wire_fmt,
         golomb_p=(engine.resolve_golomb_p(comp, step_cfg.golomb_p)
-                  if wire_fmt == "golomb" else None))
+                  if wire_fmt == "golomb" else None),
+        ring_chunk_rows=engine.resolve_ring_chunk_rows(
+            step_cfg.ring_chunk_rows, step_cfg.vote_impl))
     share_linf = engine.needs_shared_linf(comp)
     if mode != "votes" and engine.needs_server_ef(comp.server):
         raise ValueError(
@@ -226,6 +232,17 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     wire_ledger += sum(exchange_bytes(math.prod(s.shape))
                        for k in outer_keys
                        for s in jax.tree_util.tree_leaves(shapes[k]))
+    # peak gather-payload residency (max over exchanges; 0.0 for psum wires
+    # and the decoded-float path, which never materialize a gathered tensor)
+    gather_hbm = 0.0
+    if mode != "decoded":
+        gather_hbm = max(
+            [wire.gather_hbm_bytes(math.prod(s.shape[1:]))
+             for s in jax.tree_util.tree_leaves(shapes["blocks"])]
+            + [wire.gather_hbm_bytes(math.prod(s.shape))
+               for k in outer_keys
+               for s in jax.tree_util.tree_leaves(shapes[k])],
+            default=0.0)
 
     # static bucket layouts (bucketed uplink): one plan for a superblock
     # layer's leaves (applied every scan iteration), one for the outer leaves
@@ -251,6 +268,9 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
             mode, wire, block_plan, outer_plan, cfg.n_repeats,
             share_linf=share_linf)
         wire_ledger = pay + scal
+        gather_hbm = max(
+            bucketing.plan_gather_hbm_bytes(mode, wire, block_plan),
+            bucketing.plan_gather_hbm_bytes(mode, wire, outer_plan))
 
     def _gather(leaf, ax):
         return leaf if ax == REPLICATED else collectives.fsdp_all_gather(
@@ -550,7 +570,8 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                         / jnp.float32(total_coords))
             metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
                        "participated": n_sel_b,
-                       "wire_bytes_per_device": jnp.float32(wire_ledger)}
+                       "wire_bytes_per_device": jnp.float32(wire_ledger),
+                       "gather_hbm_bytes": jnp.float32(gather_hbm)}
             new_state = TrainState(params=new_params, ef_residual=new_ef,
                                    step=state.step + 1, seed=state.seed)
             return new_state, metrics
@@ -629,7 +650,8 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         nnz_mean = collectives.scalar_psum(nnz_acc, axes) / n_workers / jnp.float32(total_coords)
         metrics = {"loss": loss_mean, "lr": lr, "nnz_frac": nnz_mean,
                    "participated": collectives.scalar_psum(mask.astype(jnp.float32), axes),
-                   "wire_bytes_per_device": jnp.float32(wire_ledger)}
+                   "wire_bytes_per_device": jnp.float32(wire_ledger),
+                   "gather_hbm_bytes": jnp.float32(gather_hbm)}
         new_state = TrainState(params=new_params, ef_residual=new_ef,
                                step=state.step + 1, seed=state.seed)
         return new_state, metrics

@@ -98,12 +98,12 @@ def main():
     assert np.isfinite(efn) and efn > 0
     print("OK streamed EF 2 rounds, loss:", float(m2["loss"]), "resid sq:", efn)
 
-    # --- bucketed + double-buffered == per-leaf, 4 wire modes x 2 backends ---
-    from repro.analysis.drivers import MODE_SETUPS
-    for wmode, (comp_name, server, vote_impl, value) in MODE_SETUPS.items():
-        comp_w = CompressionConfig(compressor=comp_name,
-                                   budget=BudgetConfig(kind="fixed", value=value),
-                                   server=server)
+    # --- bucketed + double-buffered == per-leaf, all wire setups x 2 backends
+    # (mode_comp picks each setup's budget kind: the golomb setup needs a
+    # target_sparsity budget to size the wire's static capacity)
+    from repro.analysis.drivers import MODE_SETUPS, mode_comp
+    for wmode, (_, server, vote_impl, _) in MODE_SETUPS.items():
+        comp_w = mode_comp(wmode)
         for backend in ("jnp", "interpret"):
             ref = None
             for bucketed in (False, True):

@@ -35,6 +35,18 @@ sparsign_golomb sweeps the entropy-coded wire in BOTH modes: the int8 psum
 (vote_impl=allgather_packed: fused sparsign->coded-byte-stream uplink,
 in-kernel decode-sum in strict worker order) — the acceptance check that the
 sub-2-bit wire carries the exact same votes.
+
+The ring-pipelined gather (ring_chunk_rows set on the allgather_packed
+configs) re-runs the gather-wire streams with the payload chunked around the
+M-hop ppermute ring instead of one monolithic all_gather. The integer wires
+(pack2, golomb) accumulate int32 chunk sums — addition commutes exactly, so
+the ring stream is BITWISE the monolithic one. The pack8 wire sums f32
+dequantized chunks in ring-arrival order (self, rank-1, rank-2, ...), a
+different association than the monolithic worker-order decode — the ring
+stream is run-twice deterministic and allclose, not bitwise (same caveat
+class as TPU psum association, see ROADMAP). Bucketed ring configs chunk the
+multi-leaf bucket buffers, exercising genuinely multi-chunk rings at
+RING_CHUNK_ROWS=32.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -57,6 +69,8 @@ from repro.train.step_streamed import (StreamedStepConfig,
 AXES = ("pod", "data")
 WIRES = ("psum", "hier", "allgather_packed")
 BACKENDS = ("jnp", "interpret")
+RING_CHUNK_ROWS = 32   # smallest legal chunk -> forces multi-chunk rings on
+                       # the bucketed plans (per-leaf smoke leaves fit in one)
 
 
 def make_batch(cfg, b, s, key=0):
@@ -101,6 +115,91 @@ def check_mode(mode, mesh, model, params, batch, comp, lr, wires=WIRES):
             assert ndiff == 0, f"{label} != {ref_label}: {ndiff} coords differ"
             print(f"  OK {label} == {ref_label} bitwise "
                   f"(wire_bytes/device={float(metrics['wire_bytes_per_device']):.0f})")
+
+
+def _build(mode, mesh, model, comp, lr, backend, *, ring=None, bucketed=False):
+    if mode == "simple":
+        scfg = TrainStepConfig(compression=comp, lr=lr, worker_axes=AXES,
+                               vote_impl="allgather_packed", donate=False,
+                               backend=backend, bucketed=bucketed,
+                               ring_chunk_rows=ring)
+        return build_train_step(model, scfg, mesh)
+    scfg = StreamedStepConfig(compression=comp, lr=lr, worker_axes=AXES,
+                              fsdp_axis="data", vote_impl="allgather_packed",
+                              donate=False, backend=backend, bucketed=bucketed,
+                              ring_chunk_rows=ring)
+    return build_streamed_train_step(model, scfg, mesh)
+
+
+def check_ring(mode, mesh, model, params, batch, comp, lr, *,
+               equality="bitwise", bucketed=False):
+    """Ring-pipelined gather vs the monolithic all_gather, same mode+backend.
+
+    equality="bitwise" for the integer wires (pack2, golomb: int32 chunk adds
+    commute); "allclose" for pack8 (f32 sums associate in ring-arrival order
+    — deterministic, pinned by a second execution, but not bitwise vs the
+    worker-order monolithic decode)."""
+    for backend in BACKENDS:
+        outs = []
+        for ring in (None, RING_CHUNK_ROWS):
+            step = _build(mode, mesh, model, comp, lr, backend,
+                          ring=ring, bucketed=bucketed)
+            state = init_state(params, server=comp.server, seed=42)
+            with compat.set_mesh(mesh):
+                out, metrics = step(state, batch)
+            if ring is not None:
+                # run-twice determinism of the ring stream
+                state2 = init_state(params, server=comp.server, seed=42)
+                with compat.set_mesh(mesh):
+                    out2, _ = step(state2, batch)
+                nd = sum(int((a != b).sum()) for a, b in
+                         zip(flat_np(out.params), flat_np(out2.params)))
+                assert nd == 0, \
+                    f"{mode}/ring/{backend} nondeterministic: {nd} coords"
+            outs.append((flat_np(out.params), metrics))
+        (mono, mm), (ringed, rm) = outs
+        hbm = (float(mm["gather_hbm_bytes"]), float(rm["gather_hbm_bytes"]))
+        assert hbm[1] <= hbm[0], hbm
+        label = f"{mode}{'/bucketed' if bucketed else ''}/ring/{backend}"
+        if equality == "bitwise":
+            nd = sum(int((a != b).sum()) for a, b in zip(ringed, mono))
+            assert nd == 0, f"{label} != monolithic: {nd} coords differ"
+            rel = "bitwise =="
+        else:
+            for a, b in zip(ringed, mono):
+                np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-6)
+            rel = "allclose ~="
+        print(f"  OK {label} {rel} monolithic "
+              f"(gather_hbm {hbm[0]:.0f} -> {hbm[1]:.0f} B)")
+
+
+def check_ring_permute_fallback(mesh):
+    """ring_permute over the 2-axis worker group: the tuple-axis ppermute and
+    the old-jax nested fallback (compat.HAS_TUPLE_PPERMUTE=False) must both
+    rotate the flat worker ring by one."""
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import collectives, compat as _compat
+
+    x = np.arange(4 * 8, dtype=np.int32).reshape(4, 8)
+    expect = np.roll(x, 1, axis=0)   # worker w receives worker w-1's slice
+
+    def run():
+        def f(v):
+            return collectives.ring_permute(v, AXES)
+        g = compat.shard_map(f, mesh=mesh, in_specs=P(AXES),
+                             out_specs=P(AXES),
+                             axis_names=set(AXES), check_vma=False)
+        with compat.set_mesh(mesh):
+            return np.asarray(g(jnp.asarray(x)))
+
+    np.testing.assert_array_equal(run(), expect)
+    orig = _compat.HAS_TUPLE_PPERMUTE
+    _compat.HAS_TUPLE_PPERMUTE = False
+    try:
+        np.testing.assert_array_equal(run(), expect)
+    finally:
+        _compat.HAS_TUPLE_PPERMUTE = orig
+    print("  OK ring_permute tuple-axis == nested single-axis fallback")
 
 
 def main():
@@ -157,6 +256,28 @@ def main():
                comp_g, lr, wires=("psum", "hier", "allgather_packed"))
     print("OK sparsign_golomb wires bitwise-equal (3 wires x 2 backends)")
 
+    # ring-pipelined gather vs the monolithic all_gather (simple mode): the
+    # integer wires pin bitwise, pack8 pins deterministic + allclose; the
+    # bucketed variants chunk the multi-leaf bucket buffers (multi-chunk ring)
+    print("ring_permute old-jax fallback:")
+    check_ring_permute_fallback(mesh)
+    batch_s = make_batch(cfg_s, 8, 16)
+    print("simple mode ring (sparsign pack2):")
+    check_ring("simple", mesh, model_s, params_s, batch_s, comp, lr)
+    check_ring("simple", mesh, model_s, params_s, batch_s, comp, lr,
+               bucketed=True)
+    print("simple mode ring (qsgd8 pack8):")
+    check_ring("simple", mesh, model_s, params_s, batch_s, comp_q, lr,
+               equality="allclose")
+    check_ring("simple", mesh, model_s, params_s, batch_s, comp_q, lr,
+               equality="allclose", bucketed=True)
+    print("simple mode ring (sparsign_golomb):")
+    check_ring("simple", mesh, model_s, params_s, batch_s, comp_g, lr)
+    check_ring("simple", mesh, model_s, params_s, batch_s, comp_g, lr,
+               bucketed=True)
+    print("OK simple-mode ring == monolithic (3 wires x 2 backends, "
+          "per-leaf + bucketed)")
+
     cfg_t = get_config("qwen2-moe-a2.7b", smoke=True)
     model_t = Model(cfg_t)
     params_t = model_t.init(jax.random.PRNGKey(0))
@@ -189,6 +310,20 @@ def main():
                comp_g, lr, wires=("psum", "allgather_packed"))
     print("OK streamed sparsign_golomb golomb wire bitwise-equal to the int8 "
           "psum (2 backends)")
+
+    # streamed-mode ring sweep (per-leaf, plus one bucketed double-buffered
+    # config — the bucketed scan exchanges ride the same wire.exchange_bucket)
+    batch_t = make_batch(cfg_t, 8, 16)
+    print("streamed mode ring (sparsign pack2):")
+    check_ring("streamed", mesh, model_t, params_t, batch_t, comp, lr)
+    check_ring("streamed", mesh, model_t, params_t, batch_t, comp, lr,
+               bucketed=True)
+    print("streamed mode ring (qsgd8 pack8):")
+    check_ring("streamed", mesh, model_t, params_t, batch_t, comp_q, lr,
+               equality="allclose")
+    print("streamed mode ring (sparsign_golomb):")
+    check_ring("streamed", mesh, model_t, params_t, batch_t, comp_g, lr)
+    print("OK streamed-mode ring == monolithic (3 wires x 2 backends)")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """The repro.analysis subsystem: jaxpr walker descent (incl. the historical
-custom_vjp blind spot), collective-census byte math, the 4-wire-mode
-census==ledger acceptance pin, the HLO agreement pass, dtype-promotion drift,
-and the AST repo-lint (unit cases + repo-green + the zero-entry allowlist pin).
+custom_vjp blind spot), collective-census byte math (ppermute ring hops
+included), the census==ledger acceptance pin over every wire mode (monolithic
+AND ring-pipelined), the gather peak-HBM floor, the HLO agreement pass,
+dtype-promotion drift, and the AST repo-lint (unit cases + repo-green + the
+zero-entry allowlist pin).
 """
 
 import jax
@@ -162,10 +164,78 @@ def test_census_byte_math_on_shard_map_program():
 
 
 # ---------------------------------------------------------------------------
-# the acceptance pin: step census == VoteWire ledger, all four wire modes
+# ppermute ring math, unknown-collective loudness, gather-HBM floor
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("mode", list(drivers.MODE_SETUPS))
+def test_census_ppermute_ring_math():
+    """ONE traced ppermute (the ring gather's hop primitive, while-looped at
+    trips=1) bills as an (M-1)-hop ring of its operand."""
+    from repro.analysis.jaxpr_audit import CollectiveRecord
+    from repro.dist import collectives, compat
+    from repro.launch.mesh import make_host_mesh
+
+    rec = CollectiveRecord(primitive="ppermute", axes=("data",),
+                           in_elems=2048, in_bytes=2048, out_bytes=2048)
+    assert rec.ring_bytes({"data": 16}) == pytest.approx(15 * 2048)
+    assert rec.ring_bytes({"data": 1}) == 0.0
+
+    # and the traced program agrees: the sanctioned wrapper emits exactly one
+    # ppermute eqn, billed at (m-1) x operand bytes
+    mesh = make_host_mesh(1, 1)
+    P = jax.sharding.PartitionSpec
+    n = 2048
+    fn = compat.shard_map(lambda v: collectives.ring_permute(v, ("data",)),
+                          mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_vma=False)
+    census = collective_census(jax.make_jaxpr(fn)(jnp.zeros((n,), jnp.int8)))
+    assert census.counts() == {"ppermute": 1}
+    assert census.payload_bytes({"data": 16}) == pytest.approx(15 * n)
+    assert census.total_bytes({"data": 1}) == 0.0
+
+
+def test_census_unknown_collective_blocks():
+    """A payload-carrying named-axis equation the byte model does not cover
+    must surface as a blocking finding — never a silent zero-byte bill."""
+    from repro.analysis.jaxpr_audit import Census, CollectiveRecord
+
+    mystery = CollectiveRecord(primitive="all_to_all_v", axes=("data",),
+                               in_elems=512, in_bytes=512, out_bytes=512)
+    census = Census(records=(), unknown=(mystery,))
+    rule = CollectiveCensus(axis_sizes={"data": 16})
+    findings = rule.check("prog", census, ledger_payload=0.0)
+    assert any("does not cover" in f.message and "all_to_all_v" in f.message
+               for f in findings)
+    assert all(f.severity == "error" for f in findings)
+    # unknowns are excluded from every byte sum — that's WHY the rule blocks
+    assert census.payload_bytes({"data": 16}) == 0.0
+
+
+def test_gather_hbm_budget_math():
+    from repro.analysis.jaxpr_audit import GatherHbmBudget
+
+    rule = GatherHbmBudget(min_ratio=8.0)
+    # monolithic M x payload vs a 2-chunk ring at M=16: ratio 8x, at the floor
+    assert rule.check("x", ring_bytes=2 * 4096.0,
+                      mono_bytes=16 * 4096.0) == []
+    bad = rule.check("x", ring_bytes=3 * 4096.0, mono_bytes=16 * 4096.0)
+    assert len(bad) == 1 and "under the 8.0x floor" in bad[0].message
+
+
+def test_gather_hbm_checks_green():
+    """The blocking M/2 peak-HBM floor holds on every stacked-block config,
+    every ring setup, per-leaf and bucketed — the acceptance criterion."""
+    findings, checks = drivers.gather_hbm_checks()
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert checks == len(drivers.RATIO_CONFIGS) * len(drivers.RING_SETUPS) * 2
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pin: step census == VoteWire ledger, all wire modes
+# (monolithic AND ring-pipelined exchange strategies)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode",
+                         list(drivers.MODE_SETUPS) + list(drivers.RING_SETUPS))
 def test_step_census_matches_wire_ledger(mode):
     findings, census, payload, scalar = drivers.census_check(mode)
     assert findings == [], "\n".join(f.render() for f in findings)
