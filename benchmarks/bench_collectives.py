@@ -25,6 +25,14 @@ ring (send + recv chunk, O(1) in M), plus the ring's launch count (one
 (M-1)-hop ring per chunk). A third traced census (``ring_census_bytes``)
 asserts the ring program bills the SAME fabric bytes as the monolithic ledger.
 
+Elastic-participation columns (``elastic_real`` / ``weight_side`` /
+``weight_tax``): the weighted vote's packed gather ships the same payload plus
+one (1,) f32 participation weight per peer per exchange — weight_side =
+launches x (M-1) x 4 B, asserted to be EXACTLY the elastic-vs-legacy ledger
+delta. The step-time section adds ``elastic_full`` (weighted exchange, full
+participation) and ``elastic_mask50`` (50% per-round report dropout — masked
+payloads are exact zeros but every byte still rides the fixed-shape wire).
+
 The step-time section times real train steps (per-leaf vs bucketed wire, both
 trainers, plus ``ring_*`` chunked-ppermute configs) on forced host devices and
 writes the tracked ``BENCH_collectives.json`` at the repo root (``--quick``
@@ -94,6 +102,24 @@ def packed_real_bytes(cfg, trainer: str, n_data: int = 16, n_pod: int = 1) -> fl
     wire = PackedVoteWire(axes=("data",), n_workers=n_data * n_pod)
     return sum(count * wire.wire_bytes(n)
                for n, count in exchange_sizes(cfg, trainer).items())
+
+
+def elastic_packed_bytes(cfg, trainer: str, n_data: int = 16,
+                         n_pod: int = 1) -> tuple[float, float]:
+    """(elastic_total, weight_side) per-device bytes of the elastic packed
+    wire for one round: the payload is unchanged, but every exchange also
+    gathers each peer's (1,) f32 participation weight — the side channel the
+    weighted vote normalizes by. weight_side = launches x (M-1) x 4 B."""
+    from repro.dist.collectives import ParticipationSpec, PackedVoteWire
+
+    wire = PackedVoteWire(axes=("data",), n_workers=n_data * n_pod,
+                          participation=ParticipationSpec(q_frac=0.5))
+    total = weight = 0.0
+    for n, count in exchange_sizes(cfg, trainer).items():
+        total += count * (wire.wire_bytes(n)
+                          + wire.weight_bytes() * wire.ring_chunks(n))
+        weight += count * wire.weight_bytes() * wire.ring_chunks(n)
+    return total, weight
 
 
 def packed_census_bytes(cfg, trainer: str, n_data: int = 16, n_pod: int = 1) -> float:
@@ -339,6 +365,39 @@ def _time_simple_steps(modes, records, repeats: int):
                      f"{records[-1]['gather_hbm_bytes']:.0f}"])
 
 
+def _time_elastic_steps(records, repeats: int):
+    """Elastic-participation timing rows on the votes wire: the weighted
+    exchange at full participation, and the chaos configuration (50%%
+    per-round report dropout) where half the fleet's payloads are masked to
+    exact zeros but — SPMD ships fixed shapes — every byte still rides."""
+    import jax
+
+    from repro.analysis import drivers
+    from repro.dist import compat
+    from repro.dist.collectives import ParticipationSpec
+
+    for tag, part in (
+            ("elastic_full", drivers.participation_spec()),
+            ("elastic_mask50", ParticipationSpec(q_frac=0.5, dropout=0.5))):
+        step, state, batch, model, mesh, _ = drivers.build_mode_step(
+            "votes", participation=part)
+        with compat.set_mesh(mesh):
+            (_, metrics), dt = timed(
+                lambda: jax.block_until_ready(step(state, batch)),
+                repeats=repeats)
+        records.append({
+            "case": f"step_simple/votes/{tag}",
+            "trainer": "simple", "wire_mode": "votes", "bucketed": False,
+            "ms_per_step": dt * 1e3,
+            "wire_bytes_per_device": float(metrics["wire_bytes_per_device"]),
+            "gather_hbm_bytes": float(metrics["gather_hbm_bytes"]),
+            "participated": float(metrics["participated"]),
+        })
+        csv_row([records[-1]["case"], f"{dt*1e3:.2f}",
+                 f"{records[-1]['wire_bytes_per_device']:.0f}",
+                 f"{records[-1]['gather_hbm_bytes']:.0f}"])
+
+
 def _time_streamed_steps(modes, records, repeats: int):
     import jax
     import jax.numpy as jnp
@@ -419,7 +478,8 @@ def main(fast: bool = False, out: Path | None = None):
                 "packed_real", "packed_census", "pad_tax", "bucketed_real",
                 "bucket_pad_tax", "launches", "launches_bucketed",
                 "launch_ratio", "mono_peak_hbm", "ring_peak_hbm",
-                "hbm_ratio", "ring_launches"])
+                "hbm_ratio", "ring_launches", "elastic_real",
+                "weight_side", "weight_tax"])
     table = []
     for arch in ARCH_IDS:
         cfg = get_config(arch)
@@ -445,6 +505,10 @@ def main(fast: bool = False, out: Path | None = None):
         per_leaf, bucketed = launch_counts(cfg, mode)
         ratio = per_leaf / max(bucketed, 1)
         rs = ring_stats(cfg, mode)
+        ereal, wside = elastic_packed_bytes(cfg, mode)
+        assert ereal == real + wside, (
+            f"{arch}: elastic packed wire must be payload + weight side "
+            f"channel exactly, got {ereal:.6g} vs {real + wside:.6g}")
         csv_row([arch, mode, f"{n/1e9:.2f}e9",
                  f"{base['grad_exchange']:.3e}", f"{ours['grad_exchange']:.3e}",
                  f"{base['grad_exchange']/ours['grad_exchange']:.1f}x",
@@ -456,7 +520,9 @@ def main(fast: bool = False, out: Path | None = None):
                  f"{breal / packed['grad_exchange'] - 1:+.1%}",
                  per_leaf, bucketed, f"{ratio:.1f}x",
                  f"{rs['mono_peak_hbm']:.3e}", f"{rs['ring_peak_hbm']:.3e}",
-                 f"{rs['hbm_ratio']:.1f}x", rs["ring_launches"]])
+                 f"{rs['hbm_ratio']:.1f}x", rs["ring_launches"],
+                 f"{ereal:.3e}", f"{wside:.3e}",
+                 f"{wside / real:+.2%}"])
         table.append({
             "arch": arch, "trainer": mode, "params": n,
             "packed_real_bytes": real, "bucketed_real_bytes": breal,
@@ -467,6 +533,8 @@ def main(fast: bool = False, out: Path | None = None):
             "gather_hbm_ratio": rs["hbm_ratio"],
             "ring_launches": rs["ring_launches"],
             "ring_hops": rs["ring_hops"],
+            "elastic_real_bytes": ereal,
+            "weight_side_bytes": wside,
         })
 
     print("\n# step time: per-leaf vs bucketed wire "
@@ -479,6 +547,7 @@ def main(fast: bool = False, out: Path | None = None):
     repeats = 2 if fast else 3
     records: list[dict] = []
     _time_simple_steps(modes, records, repeats)
+    _time_elastic_steps(records, repeats)
     _time_streamed_steps(modes, records, repeats)
 
     doc = {
@@ -499,7 +568,10 @@ def main(fast: bool = False, out: Path | None = None):
                  "via the traced ring census) but holds only ~2 chunks of "
                  "payload instead of M exchanges' worth; ring_* step-time "
                  "rows run the chunked ppermute wire and report its "
-                 "gather_hbm_bytes metric."),
+                 "gather_hbm_bytes metric. elastic_real/weight_side columns "
+                 "bill the weighted exchange's (M-1)x4B-per-launch f32 weight "
+                 "side channel; elastic_* step rows time the weighted vote at "
+                 "full participation and under 50% report dropout."),
         "ledger": table,
         "results": records,
     }

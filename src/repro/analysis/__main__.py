@@ -4,11 +4,12 @@ nonzero on any error finding. This is the blocking CI gate.
 Order: AST repo-lint first (cheap, no tracing), then per-spec traceable-program
 rules, then the wire-mode collective censuses (per-leaf AND bucketed), then the
 collective launch-count budgets (with the bucketed >= 5x launch-ratio floor on
-the stacked-block configs), then the entropy-wire byte-ratio floor (golomb
-must beat the flat 2-bit wire >= 2x on the same configs), then the ring
-gather's peak-HBM floor (ring residency must undercut the monolithic gather
->= M/2 x on the same configs), then the HLO agreement check (compiles one
-step).
+the stacked-block configs), then the elastic-participation gate (census +
+count pins on the weighted-exchange builds, plus the masked-payload-zero rule
+on every gather wire), then the entropy-wire byte-ratio floor (golomb must
+beat the flat 2-bit wire >= 2x on the same configs), then the ring gather's
+peak-HBM floor (ring residency must undercut the monolithic gather >= M/2 x
+on the same configs), then the HLO agreement check (compiles one step).
 """
 
 from __future__ import annotations
@@ -39,6 +40,11 @@ def main(argv=None) -> int:
     findings, checks = drivers.run_count_checks()
     reports.append(report(findings, checks))
     print(f"collective counts: {checks} checks, {len(findings)} findings",
+          flush=True)
+
+    findings, checks = drivers.run_participation_checks()
+    reports.append(report(findings, checks))
+    print(f"participation wire: {checks} checks, {len(findings)} findings",
           flush=True)
 
     findings, checks = drivers.entropy_wire_checks()

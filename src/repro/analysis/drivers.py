@@ -30,8 +30,8 @@ import jax.numpy as jnp
 from repro.analysis.hlo_audit import HloJaxprAgreement, hlo_collective_stats
 from repro.analysis.jaxpr_audit import (CollectiveCensus, CollectiveCountBudget,
                                         DtypePromotionDrift, EntropyWireBudget,
-                                        GatherHbmBudget, check_fused_uplink,
-                                        collective_census)
+                                        GatherHbmBudget, MaskedPayloadZero,
+                                        check_fused_uplink, collective_census)
 
 #: hypothetical worker count the census ring model is costed at: > 1 so every
 #: ring term is non-vacuous, <= 127 so the int8 _sum_dtype bucket still holds
@@ -128,27 +128,46 @@ def mode_comp(mode: str):
                              server=server)
 
 
-def mode_wire(mode: str, m: int):
+def participation_spec():
+    """The ParticipationSpec the elastic setups build with: uniform weights,
+    the quorum as an explicit fraction. The census/count billing depends only
+    on the spec's PRESENCE (which exchange family the step traces), not on
+    its numbers — any valid spec pins the same equations."""
+    from repro.dist import collectives
+    return collectives.ParticipationSpec(q_frac=0.5)
+
+
+def mode_wire(mode: str, m: int, *, elastic: bool = False):
     """A costing-only VoteWire at hypothetical worker count ``m`` — the ring
-    setups cost (and the steps build) their wires with the sweep chunk size."""
+    setups cost (and the steps build) their wires with the sweep chunk size.
+    ``elastic=True`` attaches the participation spec, switching the byte
+    ledger to the weighted-exchange billing (psum wires: two f32 all-reduces;
+    gather wires: the weight side channel)."""
     from repro.dist import collectives
 
+    part = participation_spec() if elastic else None
     rcr = RING_SWEEP_CHUNK_ROWS if mode in RING_SETUPS else None
     if mode == "pack8" or mode == "ring_pack8":
         return collectives.Pack8Wire(axes=("data",), n_workers=m,
-                                     ring_chunk_rows=rcr)
+                                     ring_chunk_rows=rcr, participation=part)
     if mode.endswith("golomb"):
         return collectives.GolombWire(axes=("data",), n_workers=m, p=GOLOMB_P,
-                                      ring_chunk_rows=rcr)
+                                      ring_chunk_rows=rcr, participation=part)
     if mode == "ring_pack2":
         return collectives.PackedVoteWire(axes=("data",), n_workers=m,
-                                          ring_chunk_rows=rcr)
-    return collectives.VoteWire(axes=("data",), n_workers=m)
+                                          ring_chunk_rows=rcr,
+                                          participation=part)
+    return collectives.VoteWire(axes=("data",), n_workers=m,
+                                participation=part)
 
 
-def build_mode_step(mode: str, *, bucketed: bool = False):
+def build_mode_step(mode: str, *, bucketed: bool = False,
+                    elastic: bool = False, participation=None):
     """Build the 1-device `simple` train step whose wire negotiation resolves
-    to ``mode``; returns (step, state, batch, model, mesh, comp)."""
+    to ``mode``; returns (step, state, batch, model, mesh, comp).
+    ``elastic=True`` builds the weighted, participation-normalized variant
+    (the same ParticipationSpec as ``mode_wire(elastic=True)``); an explicit
+    ``participation`` spec overrides it (the bench's chaos timing rows)."""
     from repro.core import engine
     from repro.launch.mesh import make_host_mesh
     from repro.train.state import LrSchedule, init_state
@@ -172,7 +191,11 @@ def build_mode_step(mode: str, *, bucketed: bool = False):
                            donate=False, backend="interpret",
                            bucketed=bucketed,
                            ring_chunk_rows=(RING_SWEEP_CHUNK_ROWS
-                                            if mode in RING_SETUPS else None))
+                                            if mode in RING_SETUPS else None),
+                           participation=(participation
+                                          if participation is not None
+                                          else (participation_spec()
+                                                if elastic else None)))
     step = build_train_step(model, scfg, mesh)
     state = init_state(params, server=server, seed=7)
     return step, state, batch, model, mesh, comp
@@ -218,19 +241,60 @@ def mode_bucket_plan(mode: str, model, m: int, bucket_bytes=None):
         rows_fn=(wire.payload_rows if fmt == "golomb" else None))
 
 
-def mode_bucketed_ledger(mode: str, model, m: int, bucket_bytes=None):
+def mode_bucketed_ledger(mode: str, model, m: int, bucket_bytes=None, *,
+                         elastic: bool = False):
     """(payload_bytes, scalar_bytes, plan) the bucketed-wire ledger bills for
     one round of ``model`` at ``m`` hypothetical workers — the bucketed twin
-    of ``mode_ledger``, split the same census way."""
+    of ``mode_ledger``, split the same census way. ``elastic=True`` bills the
+    participation-carrying wire (``uplink_ledger_bucket`` reads the spec off
+    the wire: the pack8 side vector widens by the raw-weight entry, the
+    ternary gather wires add the (1,) weight scalar, the psum wires' second
+    f32 participation all-reduce lands inside the payload term)."""
     from repro.core import engine
     from repro.dist import bucketing
 
     share = engine.needs_shared_linf(mode_comp(mode))
-    wire = mode_wire(mode, m)
+    wire = mode_wire(mode, m, elastic=elastic)
     plan = mode_bucket_plan(mode, model, m, bucket_bytes)
     payload, scalar = bucketing.plan_ledger(wire_mode_of(mode), wire, plan,
                                             share_linf=share)
     return payload, scalar, plan
+
+
+def elastic_mode_ledger(mode: str, model, m: int):
+    """(payload_bytes, scalar_bytes) the per-leaf ELASTIC wire bills for one
+    round at ``m`` hypothetical workers — the weighted-exchange twin of
+    ``mode_ledger``, split the census way: the psum wires' participation
+    all-reduce is a second per-coordinate f32 payload (inside
+    ``wire_bytes``), pack8's widened [scale*w, w] side slot is a (2,) gather
+    — >= 2 elements, payload class — and the ternary gather wires' (1,)
+    weight is scalar protocol traffic. Re-sums to ``uplink_ledger``
+    exactly (asserted per leaf); the decoded mode bypasses the wire object
+    (weights premultiply the decode scale), so nothing widens there."""
+    from repro.core import engine
+    from repro.dist import collectives
+
+    comp = mode_comp(mode)
+    share = engine.needs_shared_linf(comp)
+    wire = mode_wire(mode, m, elastic=True)
+    emode = wire_mode_of(mode)
+    payload = scalar = 0.0
+    for s in jax.tree_util.tree_leaves(model.param_shapes()):
+        n = int(math.prod(s.shape))
+        p = (collectives.decoded_wire_bytes(n, m) if mode == "decoded"
+             else wire.wire_bytes(n))
+        sc = 0.0
+        if emode == "pack8":
+            p += wire.scalar_bytes() * wire.ring_chunks(n)
+        elif mode != "decoded":
+            sc += wire.weight_bytes() * wire.ring_chunks(n)
+        if share:
+            sc += collectives.allreduce_scalar_bytes(m)
+        assert abs((p + sc) - collectives.uplink_ledger(
+            emode, wire, n, share_linf=share)) < 1e-6, (mode, n)
+        payload += p
+        scalar += sc
+    return payload, scalar
 
 
 def traced_step_census(mode: str, *, bucketed: bool = False):
@@ -317,6 +381,87 @@ def count_check(mode: str, *, bucketed: bool):
     label = f"step[{mode}{'/bucketed' if bucketed else ''}]"
     return rule.check(label, census, expected_payload=expected,
                       max_scalar=max_scalar), census, expected
+
+
+def elastic_count_budget(mode: str, model, *, bucketed: bool,
+                         m: int = HYPOTHETICAL_M):
+    """(expected_payload_launches, max_scalar_launches) of the ELASTIC step:
+    the psum wires launch TWO f32 all-reduces per exchange (weighted vote +
+    per-coordinate participation count), pack8 gathers its widened
+    >= 2-element side vector next to every payload, the ternary gather wires
+    add only a (1,) scalar weight gather, and decoded keeps its single psum
+    (weights premultiply the decode scale before the reduce). The scalar cap
+    widens over the legacy budget for the per-leaf weight gathers / the
+    decoded mode's per-leaf participation psums."""
+    from repro.core import engine
+
+    leaves = jax.tree_util.tree_leaves(model.param_shapes())
+    n_leaves = len(leaves)
+    share = engine.needs_shared_linf(mode_comp(mode))
+    _, _, vote_impl, _ = _setup_of(mode)
+    if mode == "decoded":
+        per = 1                 # one f32 psum; W is a scalar psum
+    elif wire_mode_of(mode) == "pack8":
+        per = 2                 # payload gather + (n_side >= 2,) side gather
+    elif vote_impl == "psum":
+        per = 2                 # weighted-vote psum + participation psum
+    else:
+        per = 1                 # ternary gather; the (1,) weight is scalar
+    if not bucketed:
+        return per * n_leaves, 3 * n_leaves + 8
+    plan = mode_bucket_plan(mode, model, m)
+    extra = 1 if share else 0   # the (L,) shared-linf pmax
+    return per * len(plan.buckets) + extra, len(plan.buckets) + 8
+
+
+def run_participation_checks(m: int = HYPOTHETICAL_M):
+    """The elastic-participation gate: trace the ELASTIC build of every
+    wire-mode setup (per-leaf AND bucketed) once, and run three blocking
+    rules on the same jaxpr — the census byte pin against the elastic
+    ledger, the launch-count pin against the elastic budget, and the
+    masked-payload-zero rule (every untiled integer gather payload must
+    trace back to its participation mask). The legacy ring setups get the
+    mask rule too: the chunked ppermute hop ships the same masked buffers,
+    and the cross-scope backtrack (while-carry -> init operand) is exactly
+    what the ring exercises."""
+    from repro.dist import compat
+
+    findings, checks = [], 0
+    census_rule = CollectiveCensus(axis_sizes={"data": m})
+    count_rule = CollectiveCountBudget()
+    mask_rule = MaskedPayloadZero()
+    for mode in MODE_SETUPS:
+        for bucketed in (False, True):
+            step, state, batch, model, mesh, _ = build_mode_step(
+                mode, bucketed=bucketed, elastic=True)
+            with compat.set_mesh(mesh):
+                closed = jax.make_jaxpr(step)(state, batch)
+            census = collective_census(closed)
+            label = f"step[{mode}{'/bucketed' if bucketed else ''}/elastic]"
+            if bucketed:
+                payload, scalar, _ = mode_bucketed_ledger(mode, model, m,
+                                                          elastic=True)
+            else:
+                payload, scalar = elastic_mode_ledger(mode, model, m)
+            findings += census_rule.check(label, census,
+                                          ledger_payload=payload,
+                                          ledger_scalar_min=scalar)
+            expected, max_scalar = elastic_count_budget(mode, model,
+                                                        bucketed=bucketed,
+                                                        m=m)
+            findings += count_rule.check(label, census,
+                                         expected_payload=expected,
+                                         max_scalar=max_scalar)
+            findings += mask_rule.check(label, closed)
+            checks += 3
+    for mode in RING_SETUPS:
+        step, state, batch, model, mesh, _ = build_mode_step(mode,
+                                                             bucketed=True)
+        with compat.set_mesh(mesh):
+            closed = jax.make_jaxpr(step)(state, batch)
+        findings += mask_rule.check(f"step[{mode}/bucketed]", closed)
+        checks += 1
+    return findings, checks
 
 
 #: stacked-block model configs the launch-ratio floor is asserted on

@@ -27,6 +27,11 @@ Rules:
       >= min_elems elements on a declared-narrow (e.g. bf16) leaf path: a
       full-size f32 HBM intermediate on a bf16 uplink is a silent 2x traffic
       regression.
+  MaskedPayloadZero — every untiled >= 2-element integer gather payload
+      (all_gather/ppermute) must trace back to a ``select_n`` participation
+      mask through shape-preserving primitives and across scope boundaries:
+      a non-reporting worker's bytes still ride the SPMD gather, so they
+      must be exact zeros or they vote.
 """
 
 from __future__ import annotations
@@ -523,6 +528,208 @@ class GatherHbmBudget(Rule):
                 f"payload HBM vs {mono_bytes:.0f} B monolithic — ratio "
                 f"{ratio:.2f}x is under the {self.min_ratio:.1f}x floor")]
         return []
+
+
+# ---------------------------------------------------------------------------
+# MaskedPayloadZero — a non-reporting worker's gather payload must be zeros
+# ---------------------------------------------------------------------------
+
+#: primitives a payload's ZEROS survive unchanged — the mask backtracker
+#: walks through these from a gathered operand toward its mask gate: shape/
+#: layout moves, dtype casts, bucket assembly (concatenate/pad), and the
+#: ring's own hop primitive. Anything else (an add of fresh data, an iota)
+#: breaks zero-provenance and the search stops on that path.
+MASK_PASS_THROUGH = frozenset({
+    "slice", "dynamic_slice", "reshape", "convert_element_type",
+    "broadcast_in_dim", "transpose", "squeeze", "expand_dims", "rev",
+    "concatenate", "pad", "copy", "ppermute",
+})
+
+#: collective primitives whose operand IS a worker's shipped uplink payload
+#: (the monolithic gather and the chunked ring's hop)
+GATHER_PRIMS = ("all_gather", "ppermute")
+
+
+def _is_int_payload(aval) -> bool:
+    """Is this aval a >= 2-element integer buffer — the shape of a packed
+    wire payload? The f32 scale/weight side channels are value-carrying by
+    design (a non-reporter's weight slot ships its 0.0) and exempt."""
+    dt = getattr(aval, "dtype", None)
+    shape = getattr(aval, "shape", None)
+    return (dt is not None and shape is not None
+            and jnp.issubdtype(dt, jnp.integer)
+            and math.prod(shape) >= 2)
+
+
+def _producers(jaxpr, cache: dict) -> dict:
+    """id(outvar) -> producing eqn table for one jaxpr (memoized)."""
+    tbl = cache.get(id(jaxpr))
+    if tbl is None:
+        tbl = {}
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                tbl[id(v)] = eqn
+        cache[id(jaxpr)] = tbl
+    return tbl
+
+
+def _map_invar_out(eqn, sub, idx):
+    """The outer operand feeding sub-jaxpr invar ``idx`` of call-like
+    ``eqn`` (None if unmappable). ``while`` splits its invars into
+    cond-consts + body-consts + carry; ``cond`` prefixes the predicate;
+    everything else (pjit/scan/shard_map/remat/custom_* calls) aligns its
+    sub invars to the TAIL of the equation invars (1:1 when lengths match)."""
+    name = eqn.primitive.name
+    if name == "while":
+        cn = int(eqn.params.get("cond_nconsts", 0))
+        bn = int(eqn.params.get("body_nconsts", 0))
+        body = eqn.params["body_jaxpr"]
+        body = body.jaxpr if isinstance(body, jcore.ClosedJaxpr) else body
+        if sub is body:
+            return eqn.invars[cn + idx]
+        return eqn.invars[idx] if idx < cn else eqn.invars[bn + idx]
+    if name == "cond":
+        return eqn.invars[idx + 1]
+    n_in, n_sub = len(eqn.invars), len(sub.invars)
+    if n_sub <= n_in:
+        return eqn.invars[n_in - n_sub + idx]
+    return None
+
+
+def _call_outvar_sources(prod, pos, jaxpr, frames):
+    """Where a call-like producer's ``pos``-th output comes from: the
+    matching sub-jaxpr outvar (descending a frame), plus — for ``while`` —
+    the initial carry operand (the loop may pass the value through
+    untouched)."""
+    name = prod.primitive.name
+    inner = frames + ((jaxpr, prod),)
+    if name == "while":
+        body = prod.params["body_jaxpr"]
+        body = body.jaxpr if isinstance(body, jcore.ClosedJaxpr) else body
+        cn = int(prod.params.get("cond_nconsts", 0))
+        bn = int(prod.params.get("body_nconsts", 0))
+        if pos < len(body.outvars):
+            yield body.outvars[pos], body, inner
+        if cn + bn + pos < len(prod.invars):
+            yield prod.invars[cn + bn + pos], jaxpr, frames
+        return
+    if name == "cond":
+        for br in prod.params.get("branches", ()):
+            br = br.jaxpr if isinstance(br, jcore.ClosedJaxpr) else br
+            if pos < len(br.outvars):
+                yield br.outvars[pos], br, inner
+        return
+    for sub in sub_jaxprs(prod):
+        if pos < len(sub.outvars):
+            yield sub.outvars[pos], sub, inner
+
+
+def traces_to_mask(var, jaxpr, frames, cache=None, seen=None) -> bool:
+    """Does ``var``'s producer chain contain a ``select_n`` mask gate?
+
+    Walks backward through ``MASK_PASS_THROUGH`` primitives and through
+    ``pallas_call`` pack kernels (an all-zero vote block packs to all-zero
+    wire bytes). A jaxpr invar maps UP to the calling equation's operand
+    (``frames`` is the ((jaxpr, eqn), ...) call stack built by the site
+    walker); a call-like producer maps DOWN into its sub-jaxpr's matching
+    outvar. Cycles (the while carry) are cut by the visited set.
+    """
+    cache = {} if cache is None else cache
+    seen = set() if seen is None else seen
+    if isinstance(var, jcore.Literal):
+        return False
+    key = (id(jaxpr), id(var))
+    if key in seen:
+        return False
+    seen.add(key)
+    prod = _producers(jaxpr, cache).get(id(var))
+    if prod is None:
+        # a jaxpr invar: continue in the caller's scope. constvars (closed-
+        # over constants) are never mask outputs — dead end.
+        try:
+            idx = jaxpr.invars.index(var)
+        except ValueError:
+            return False
+        if not frames:
+            return False
+        caller_jaxpr, caller_eqn = frames[-1]
+        outer = _map_invar_out(caller_eqn, jaxpr, idx)
+        if outer is None:
+            return False
+        return traces_to_mask(outer, caller_jaxpr, frames[:-1], cache, seen)
+    name = prod.primitive.name
+    if name == "select_n":
+        return True
+    if name == "pallas_call" or name in MASK_PASS_THROUGH:
+        return any(traces_to_mask(v, jaxpr, frames, cache, seen)
+                   for v in prod.invars if not isinstance(v, jcore.Literal))
+    try:
+        pos = prod.outvars.index(var)
+    except ValueError:
+        return False
+    for src_var, src_jaxpr, src_frames in _call_outvar_sources(
+            prod, pos, jaxpr, frames):
+        if traces_to_mask(src_var, src_jaxpr, src_frames, cache, seen):
+            return True
+    return False
+
+
+def _gather_payload_sites(jaxpr, frames, out):
+    """Collect (eqn, operand var, owning jaxpr, frames) for every untiled
+    gather of a >= 2-element integer payload, descending like the census
+    walker (pallas bodies excluded) with the call stack threaded through."""
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if (name in GATHER_PRIMS and not eqn.params.get("tiled", False)
+                and _named_axes(eqn)):
+            for v in eqn.invars:
+                if (not isinstance(v, jcore.Literal)
+                        and _is_int_payload(getattr(v, "aval", None))):
+                    out.append((eqn, v, jaxpr, frames))
+        if name == "pallas_call":
+            continue
+        for sub in sub_jaxprs(eqn):
+            _gather_payload_sites(sub, frames + ((jaxpr, eqn),), out)
+
+
+class MaskedPayloadZero(Rule):
+    """Every gather-wire payload must carry its participation mask gate.
+
+    SPMD ships fixed shapes, so a masked-out (non-reporting) worker's bytes
+    still ride every gather wire — correctness of the vote demands those
+    bytes be EXACT zeros (an all-zero packed message decodes to zero votes;
+    stale nonzero bytes would vote). The structural witness is a
+    ``select_n`` — ``VoteWire.mask_message``'s ``jnp.where`` — somewhere in
+    the gathered operand's producer chain. The rule backtracks every
+    untiled >= 2-element integer-dtype ``all_gather``/``ppermute`` operand
+    (packed payloads are integer buffers; the f32 scale/weight side
+    channels legitimately ship values and are exempt) through
+    shape-preserving primitives, across while/scan/pjit scope boundaries,
+    and through pallas pack kernels — and blocks when no mask gate is
+    found. FSDP parameter movement (``tiled=True``) is exempt: parameters
+    are replicated state, not per-worker reports.
+    """
+
+    name = "masked-payload-zero"
+    description = ("untiled gather payloads must trace back to a "
+                   "participation mask (select_n)")
+
+    def check(self, label: str, fn, *args) -> list:
+        sites: list = []
+        _gather_payload_sites(_as_jaxpr(fn, args), (), sites)
+        findings, cache = [], {}
+        for eqn, var, owner, frames in sites:
+            if traces_to_mask(var, owner, frames, cache):
+                continue
+            aval = var.aval
+            findings.append(self.finding(
+                label,
+                f"untiled {eqn.primitive.name}[{','.join(_named_axes(eqn))}] "
+                f"ships a {jnp.dtype(aval.dtype).name}{tuple(aval.shape)} "
+                f"payload with no participation mask (select_n) in its "
+                f"producer chain — a non-reporting worker's stale bytes "
+                f"would ride the wire and vote"))
+        return findings
 
 
 # ---------------------------------------------------------------------------

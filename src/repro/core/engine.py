@@ -54,8 +54,10 @@ from repro.kernels.golomb.ops import golomb_pack_op
 from repro.kernels.golomb.ref import golomb_encode_ref
 from repro.kernels.pack2bit.ops import pack2bit_op
 from repro.kernels.pack2bit.ref import pack2bit_ref
-from repro.kernels.vote_update.ops import vote_update_op
-from repro.kernels.vote_update.ref import vote_update_ref
+from repro.kernels.vote_update.ops import (vote_update_op,
+                                           weighted_vote_update_op)
+from repro.kernels.vote_update.ref import (vote_update_ref,
+                                           weighted_vote_update_ref)
 
 if TYPE_CHECKING:  # avoid a runtime cycle: algorithm imports this module
     from repro.core.algorithm import CompressionConfig
@@ -192,6 +194,24 @@ def resolve_ring_chunk_rows(ring_chunk_rows: Optional[int],
             f"tile ({kcommon.SUBLANE_PAD}), got {ring_chunk_rows!r} — see "
             f"collectives.DEFAULT_RING_CHUNK_ROWS for the documented default")
     return r
+
+
+def check_participation_server(server: str, compressor: str) -> None:
+    """Build-time gate for elastic participation: the weighted,
+    participation-normalized vote family covers the majority-vote deadband
+    (``|sum w_m sign_m| >= q_frac * W``) and the mean server (divide by the
+    realized participation ``W`` instead of ``|S|``). ``scaled_sign_ef``
+    keeps a server-side error-feedback residual whose scale calibration
+    assumes the full fleet's mean delta — silently re-normalizing it to a
+    shifting reporting set would corrupt the residual, so it must fail HERE,
+    at step build, not mid-run."""
+    if server == "scaled_sign_ef":
+        raise ValueError(
+            f"elastic participation (a ParticipationSpec) is incompatible "
+            f"with server 'scaled_sign_ef' (compressor {compressor!r}): the "
+            f"server-side EF residual is calibrated against the full fleet's "
+            f"mean delta and cannot be participation-normalized per round. "
+            f"Use server='majority_vote' or 'mean'.")
 
 
 def needs_shared_linf(cfg: "CompressionConfig") -> bool:
@@ -405,6 +425,8 @@ def server_apply(
     leaf_size: Optional[int] = None,
     l1_reduce: Optional[Callable] = None,
     quorum: int = 1,
+    part_total=None,
+    q_frac: Optional[float] = None,
     backend: Optional[str] = None,
 ):
     """C(sum of worker messages) [+ EF] + SGD for one leaf (or leaf shard).
@@ -425,12 +447,39 @@ def server_apply(
 
     ``server`` overrides ``cfg.server`` (the non-ternary baselines always
     aggregate by mean regardless of the configured rule).
+
+    Elastic participation (``part_total`` + ``q_frac``): ``vote_sum`` is the
+    WEIGHTED f32 vote ``sum_m w_m * votes_m`` from the wire's weighted
+    exchange and ``part_total`` the realized participation
+    ``W = sum_reporting w_m`` (scalar, or per-coordinate on the psum wires).
+    The majority-vote deadband normalizes to it: no step unless
+    ``|vote_sum| >= q_frac * W`` (the fused ``weighted_vote_update`` kernel).
+    Mean servers instead pass ``part_total`` as ``n_sel`` — the divisor IS
+    the realized participation. ``scaled_sign_ef`` rejects elastic input
+    (``check_participation_server`` — also enforced at step build).
     """
     backend = resolve_backend(backend)
     rule = server if server is not None else cfg.server
     lr = jnp.asarray(lr, jnp.float32)
 
+    if part_total is not None:
+        check_participation_server(rule, cfg.compressor)
+
     if rule == "majority_vote":
+        if part_total is not None:
+            if q_frac is None:
+                raise ValueError(
+                    "elastic majority vote needs q_frac (the quorum as a "
+                    "fraction of realized participation) next to part_total")
+            wv = vote_sum.astype(jnp.float32)
+            if backend != "jnp":
+                new_p = weighted_vote_update_op(
+                    p, wv, part_total, lr, q_frac=float(q_frac),
+                    interpret=(backend == "interpret"))
+            else:
+                new_p = weighted_vote_update_ref(p, wv, part_total, lr,
+                                                 q_frac=float(q_frac))
+            return new_p, ef
         if jnp.issubdtype(vote_sum.dtype, jnp.integer):
             if backend != "jnp":
                 new_p = vote_update_op(p, vote_sum, lr, quorum=quorum,

@@ -74,6 +74,84 @@ from repro.dist import compat
 VOTE_IMPLS = ("psum", "hier", "allgather_packed")
 
 
+@dataclasses.dataclass(frozen=True)
+class ParticipationSpec:
+    """Elastic-participation contract a ``VoteWire`` carries: per-worker vote
+    weights (FedCom-style data-volume weighting), a quorum expressed as a
+    FRACTION of realized participation, and a per-round report-dropout rate
+    (chaos: crashes / stragglers past the round deadline).
+
+    With a spec attached, the wire's weighted exchange returns
+    ``sum_m w_m * votes_m`` together with the realized participation total
+    ``W = sum_{reporting} w_m``, and the server deadband becomes
+    ``|sum w_m sign_m| >= q_frac * W`` instead of a fixed integer M-quorum —
+    the vote normalizes to whoever actually reported. ``weights=None`` means
+    uniform 1.0; ``q_frac=None`` re-derives the fraction from the legacy
+    integer quorum (``resolve_q_frac``). Validation is loud and build-time."""
+
+    weights: Optional[Tuple[float, ...]] = None
+    q_frac: Optional[float] = None
+    dropout: float = 0.0
+
+    def __post_init__(self):
+        if self.weights is not None:
+            w = tuple(float(x) for x in self.weights)
+            if not w or any(not (x > 0.0) or not (x < float("inf")) for x in w):
+                raise ValueError(
+                    f"participation weights must be positive finite floats "
+                    f"(a zero/negative weight is a permanently-dead worker — "
+                    f"shrink the mesh instead), got {self.weights!r}")
+            object.__setattr__(self, "weights", w)
+        if self.q_frac is not None:
+            q = float(self.q_frac)
+            if not (0.0 < q <= 1.0):
+                raise ValueError(
+                    f"quorum fraction must be in (0, 1]: it is the share of "
+                    f"realized participation the vote magnitude must clear, "
+                    f"got {self.q_frac!r}")
+        d = float(self.dropout)
+        if not (0.0 <= d < 1.0):
+            raise ValueError(
+                f"report dropout must be in [0, 1) (1.0 would drop every "
+                f"report every round), got {self.dropout!r}")
+
+    @property
+    def is_uniform(self) -> bool:
+        return self.weights is None
+
+    def weights_array(self, n_workers: int) -> jnp.ndarray:
+        """(M,) f32 per-worker weights (uniform 1.0 when unset), validated
+        against the wire's worker count."""
+        if self.weights is None:
+            return jnp.ones((n_workers,), jnp.float32)
+        if len(self.weights) != n_workers:
+            raise ValueError(
+                f"participation weights cover {len(self.weights)} workers "
+                f"but the wire has {n_workers}")
+        return jnp.asarray(self.weights, jnp.float32)
+
+    def weight_of(self, widx, n_workers: int) -> jnp.ndarray:
+        """This worker's static weight as a traced f32 scalar (flat worker
+        index — the same row-major order as ``worker_index``)."""
+        if self.weights is None:
+            return jnp.float32(1.0)
+        return self.weights_array(n_workers)[widx]
+
+    def resolve_q_frac(self, quorum: int, n_workers: int) -> float:
+        """The wire's quorum fraction: the explicit ``q_frac``, else the
+        legacy integer M-quorum re-derived as ``quorum / M`` — at full
+        uniform participation (W = M) the weighted deadband
+        ``|v| >= q_frac * W`` is then exactly the legacy ``|v| >= quorum``."""
+        if self.q_frac is not None:
+            return float(self.q_frac)
+        q = int(quorum)
+        if not (1 <= q <= n_workers):
+            raise ValueError(
+                f"cannot derive a quorum fraction: integer quorum {quorum!r} "
+                f"is outside [1, M={n_workers}]")
+        return q / float(n_workers)
+
+
 def axis_size(name) -> int:
     """Static size of a named mesh axis (valid inside shard_map)."""
     return compat.axis_size(name)
@@ -240,6 +318,45 @@ def _golomb_decode_sum(gathered: jnp.ndarray, size: int, shape, *, p: float,
     return ungolomb_sum_op(gathered, size, shape, p=p, interpret=interpret)
 
 
+def _packed_decode_wsum(gathered: jnp.ndarray, weights: jnp.ndarray,
+                        size: int, shape,
+                        *, backend: Optional[str]) -> jnp.ndarray:
+    """Weighted twin of ``_packed_decode_sum``: (M, rows, q) gathered packed
+    votes + (M,) f32 per-worker weights -> f32 ``sum_m w_m * votes_m`` in
+    ``shape``. A masked-out worker's all-zero payload decodes to zero votes
+    AND its weight is zero, so it contributes exact zeros twice over."""
+    from repro.kernels import common as kcommon
+    from repro.kernels.pack2bit.ops import unpack2bit_wsum_op
+    from repro.kernels.pack2bit.ref import unpack2bit_wsum_ref
+
+    if backend == "jnp":
+        return kcommon.from_2d(unpack2bit_wsum_ref(gathered, weights), size, shape)
+    interpret = (backend == "interpret") if backend is not None else None
+    return unpack2bit_wsum_op(gathered, weights, size, shape, interpret=interpret)
+
+
+def _golomb_decode_wsum(gathered: jnp.ndarray, weights: jnp.ndarray,
+                        size: int, shape, *, p: float,
+                        backend: Optional[str]) -> jnp.ndarray:
+    """Weighted twin of ``_golomb_decode_sum``: f32 ``sum_m w_m * votes_m``
+    with per-worker weights riding the gather as the side channel."""
+    from repro.kernels.golomb.ops import ungolomb_wsum_op
+    from repro.kernels.golomb.ref import ungolomb_wsum_ref
+
+    if backend == "jnp":
+        return ungolomb_wsum_ref(gathered, weights, size, shape, p=p)
+    interpret = (backend == "interpret") if backend is not None else None
+    return ungolomb_wsum_op(gathered, weights, size, shape, p=p,
+                            interpret=interpret)
+
+
+def _unpack8_op():
+    """Lazy accessor for the fused pack8 decode-sum op (kernels import at
+    call time, like every other kernel dispatch in this module)."""
+    from repro.kernels.pack8.ops import unpack8_sum_op
+    return unpack8_sum_op
+
+
 def decoded_message(values: jnp.ndarray, scale, mask, *, is_ternary: bool):
     """One worker's ``decoded``-mode message: decode locally (values * scale),
     zero non-participants. Returns ``(decoded fp32 message, masked nnz)`` —
@@ -310,8 +427,19 @@ def uplink_ledger(mode: str, wire: "VoteWire", n_coords: int, *,
         total = wire.wire_bytes(n_coords)
     if mode == "pack8":
         # per-worker decode scales ride the gather — once per ring chunk
-        # (the chunked ring re-ships the scale alongside every chunk)
+        # (the chunked ring re-ships the scale alongside every chunk); under
+        # elastic participation the worker's weight rides the same slot
+        # (scalar_bytes widens to 8 B — the weight premultiplies the decode
+        # scale AND ships raw for the participation total)
         total += wire.scalar_bytes() * wire.ring_chunks(n_coords)
+    # elastic weight side-channel on the ternary gather wires: one f32 weight
+    # per worker rides every gather (re-shipped per ring chunk, like pack8's
+    # scales); the psum wires instead bill the participation payload inside
+    # wire_bytes (a second per-coordinate f32 all-reduce). The decoded mode
+    # bypasses the wire object entirely (weights premultiply the decode scale
+    # before the f32 psum), so no side channel is traced or billed there.
+    if mode != "decoded":
+        total += wire.weight_bytes() * wire.ring_chunks(n_coords)
     if share_linf:
         total += allreduce_scalar_bytes(wire.n_workers)
     return total
@@ -346,11 +474,22 @@ def uplink_ledger_bucket(mode: str, wire: "VoteWire", n_coords: int,
         payload = wire.bucket_payload_bytes(n_coords, rows=rows)
     scalar = 0.0
     if mode == "pack8":
-        scales = float((wire.n_workers - 1) * 4 * n_slots) * int(ring_chunks)
-        if n_slots >= 2:
+        # elastic participation appends ONE weight entry to the per-slot
+        # scale vector (the side channel becomes (n_slots + 1,)) — the
+        # census's >= 2-element payload classification follows the widened
+        # vector, so the split must too
+        n_side = n_slots + (1 if wire.participation is not None else 0)
+        scales = float((wire.n_workers - 1) * 4 * n_side) * int(ring_chunks)
+        if n_side >= 2:
             payload += scales
         else:
             scalar += scales
+    elif mode != "decoded":
+        # ternary gather wires under elastic participation gather a (1,) f32
+        # weight per worker next to the bucket (re-shipped per ring chunk);
+        # one element -> scalar protocol traffic under the census split. The
+        # decoded mode's bucket psum bypasses the wire (no side channel).
+        scalar += wire.weight_bytes() * int(ring_chunks)
     return payload, scalar
 
 
@@ -532,10 +671,22 @@ class VoteWire:
     once per step via ``make_vote_wire``. ``exchange`` must run inside the
     worker-axes shard_map. All wires return the same vote totals bitwise —
     only the message format and the bytes on the fabric differ.
+
+    With a ``participation`` spec attached (``make_vote_wire(...,
+    participation=...)``), the elastic exchange family
+    (``exchange_weighted`` / ``exchange_bucket_weighted``) is live: the wire
+    carries each worker's effective weight (static per-worker weight x
+    dynamic report mask) next to the payload — as a second per-coordinate
+    f32 all-reduce on the psum wires, as a billed (1,)-per-worker gather
+    side channel on the ternary gather wires, folded into the existing
+    decode-scale channel (widened to carry the raw weight too) on pack8 —
+    and returns ``(sum_m w_m * votes_m, W = sum_reporting w_m)`` for the
+    participation-normalized server deadband.
     """
 
     axes: Tuple[str, ...]
     n_workers: int
+    participation: Optional[ParticipationSpec] = None
 
     name = "psum"
     #: native uplink message format ("int8": leaf-shaped int8 ternary votes,
@@ -571,6 +722,33 @@ class VoteWire:
                 f"a decode scale inside the exchange is a pack8-wire concept")
         return vote_psum(values, self.axes, self.n_workers)
 
+    def _require_participation(self):
+        if self.participation is None:
+            raise ValueError(
+                f"the {self.name!r} wire was built without a "
+                f"ParticipationSpec; the weighted exchange family is the "
+                f"elastic-participation path — pass participation= to "
+                f"make_vote_wire")
+
+    def exchange_weighted(self, values: jnp.ndarray, size: int, shape, *,
+                          weight, scale=None):
+        """Elastic exchange: ``(sum_m w_m * votes_m, per-coordinate
+        participation total)``. ``weight`` is THIS worker's effective f32
+        weight (static weight x report mask — exactly 0.0 when not
+        reporting; ``values`` must already be masked to zeros). The psum
+        wires all-reduce two f32 arrays — the weighted vote and the realized
+        participation count per coordinate — both billed as payload."""
+        self._require_participation()
+        if scale is not None:
+            raise ValueError(
+                f"the {self.name!r} vote wire exchanges raw integer votes; "
+                f"a decode scale inside the exchange is a pack8-wire concept")
+        w = jnp.asarray(weight, jnp.float32)
+        wv = jax.lax.psum(values.astype(jnp.float32) * w, tuple(self.axes))
+        wtot = jax.lax.psum(jnp.broadcast_to(w, shape).astype(jnp.float32),
+                            tuple(self.axes))
+        return wv, wtot
+
     def exchange_bucket(self, payload: jnp.ndarray, bucket, *, scale=None):
         """One bucket of wire-native messages -> per-leaf aggregates, ONE
         collective. ``payload`` is the assembled (rows, width) buffer
@@ -589,10 +767,37 @@ class VoteWire:
         return bucketing.split_bucket(
             vote_psum(payload, self.axes, self.n_workers), bucket)
 
+    def exchange_bucket_weighted(self, payload: jnp.ndarray, bucket, *,
+                                 weight, scale=None):
+        """Bucketed elastic exchange: per-leaf ``(weighted vote sums,
+        participation total)`` for one assembled bucket — ``(parts, wtot)``
+        where ``parts`` aligns with ``bucket.slots`` and ``wtot`` is the
+        realized participation (per-coordinate f32 arrays per slot on the
+        psum wires, one scalar on the gather wires — per-worker weights are
+        per-message, so every coordinate shares it)."""
+        self._require_participation()
+        if scale is not None:
+            raise ValueError(
+                f"the {self.name!r} vote wire exchanges raw integer votes; "
+                f"a decode scale inside the exchange is a pack8-wire concept")
+        from repro.dist import bucketing  # lazy: bucketing imports this module
+        w = jnp.asarray(weight, jnp.float32)
+        wv = jax.lax.psum(payload.astype(jnp.float32) * w, tuple(self.axes))
+        wtot = jax.lax.psum(
+            jnp.broadcast_to(w, payload.shape).astype(jnp.float32),
+            tuple(self.axes))
+        return (bucketing.split_bucket(wv, bucket),
+                bucketing.split_bucket(wtot, bucket))
+
     def wire_bytes(self, n_coords: int) -> float:
         """Per-device wire bytes to exchange one n-coordinate leaf's votes
-        (ring-collective first principles, real payload sizes)."""
+        (ring-collective first principles, real payload sizes). Under elastic
+        participation the psum wires exchange TWO f32 arrays (weighted vote +
+        per-coordinate participation count) instead of one narrow integer
+        payload — billed honestly."""
         m = self.n_workers
+        if self.participation is not None:
+            return 2.0 * decoded_wire_bytes(n_coords, m)
         payload = n_coords * jnp.dtype(_sum_dtype(m)).itemsize
         return 2.0 * (m - 1) / m * payload
 
@@ -603,6 +808,15 @@ class VoteWire:
         per-worker scale gather."""
         m = self.n_workers
         return 2.0 * (m - 1) / m * 4.0
+
+    def weight_bytes(self) -> float:
+        """Elastic weight side-channel ledger: bytes to ship this worker's
+        f32 effective weight alongside ONE payload exchange (multiplied by
+        the ring chunk count upstream — the chunked ring re-ships it). Zero
+        for the psum wires (their participation payload bills inside
+        ``wire_bytes``) and for pack8 (the weight widens ``scalar_bytes``);
+        the ternary gather wires override with the (M-1)-peer gather."""
+        return 0.0
 
     def bucket_payload_bytes(self, n_coords: int,
                              rows: Optional[int] = None) -> float:
@@ -665,11 +879,49 @@ class HierVoteWire(VoteWire):
             vote_psum_hier(payload, self.axes[1], self.axes[0],
                            self.inner_size, self.outer_size), bucket)
 
+    def _hier_f32_psum(self, x: jnp.ndarray) -> jnp.ndarray:
+        # elastic sums are f32, so there is no narrow/widen dtype split —
+        # but the exchange stays two-level to keep the hierarchical wire
+        # shape (intra-pod reduce, then the DCN hop)
+        return jax.lax.psum(jax.lax.psum(x, self.axes[1]), self.axes[0])
+
+    def exchange_weighted(self, values, size, shape, *, weight, scale=None):
+        self._require_participation()
+        if scale is not None:
+            raise ValueError(
+                "the 'hier' vote wire exchanges raw integer votes; a decode "
+                "scale inside the exchange is a pack8-wire concept")
+        w = jnp.asarray(weight, jnp.float32)
+        wv = self._hier_f32_psum(values.astype(jnp.float32) * w)
+        wtot = self._hier_f32_psum(
+            jnp.broadcast_to(w, shape).astype(jnp.float32))
+        return wv, wtot
+
+    def exchange_bucket_weighted(self, payload, bucket, *, weight, scale=None):
+        self._require_participation()
+        if scale is not None:
+            raise ValueError(
+                "the 'hier' vote wire exchanges raw integer votes; a decode "
+                "scale inside the exchange is a pack8-wire concept")
+        from repro.dist import bucketing  # lazy: bucketing imports this module
+        w = jnp.asarray(weight, jnp.float32)
+        wv = self._hier_f32_psum(payload.astype(jnp.float32) * w)
+        wtot = self._hier_f32_psum(
+            jnp.broadcast_to(w, payload.shape).astype(jnp.float32))
+        return (bucketing.split_bucket(wv, bucket),
+                bucketing.split_bucket(wtot, bucket))
+
     def wire_bytes(self, n_coords):
         # both ring terms share one (symmetric) formula — make_vote_wire
         # validates the axis sizes >= 1 at build time, so neither denominator
         # needs a zero guard
         ni, no = self.inner_size, self.outer_size
+        if self.participation is not None:
+            # two f32 arrays (weighted vote + participation count), both
+            # levels at 4 B/coord — no narrow inner dtype to exploit
+            inner = 2.0 * (ni - 1) / ni * 4.0 * n_coords
+            outer = 2.0 * (no - 1) / no * 4.0 * n_coords
+            return 2.0 * (inner + outer)
         inner = 2.0 * (ni - 1) / ni * n_coords * jnp.dtype(_sum_dtype(ni)).itemsize
         outer = 2.0 * (no - 1) / no * n_coords * jnp.dtype(_sum_dtype(ni * no)).itemsize
         return inner + outer
@@ -751,6 +1003,73 @@ class PackedVoteWire(VoteWire):
         total = _packed_decode_sum(gathered, n, (n,), backend=self.backend)
         return bucketing.split_bucket(
             total.astype(_sum_dtype(self.n_workers)), bucket)
+
+    def _ring_wdecode_flat(self, payload: jnp.ndarray, w1: jnp.ndarray):
+        """Weighted ring exchange of a (rows, LANES//4) packed payload: the
+        (1,) effective weight rides every chunk's ring as the side channel
+        (re-shipped per chunk — the ledger's ``weight_bytes x ring_chunks``),
+        each arriving slice weighted-decode-summed at M=1. Returns the flat
+        f32 weighted vote sum and the realized participation total (the
+        weights accumulate around the same ring)."""
+        from repro.kernels import common as kcommon
+        parts, wtot = [], None
+        for r0, nr in _ring_chunk_spans(payload.shape[0], self.ring_chunk_rows):
+            chunk = jax.lax.slice_in_dim(payload, r0, r0 + nr, axis=0)
+
+            def decode(b, wv, _nr=nr):
+                s = _packed_decode_wsum(b[None], wv, _nr * kcommon.LANES,
+                                        (_nr * kcommon.LANES,),
+                                        backend=self.backend)
+                return (s, jnp.sum(wv))
+
+            acc, wt = _ring_accumulate(chunk, (w1,), decode, self.axes,
+                                       self.n_workers)
+            parts.append(acc)
+            wtot = wt if wtot is None else wtot
+        return (parts[0] if len(parts) == 1 else jnp.concatenate(parts)), wtot
+
+    def exchange_weighted(self, values, size, shape, *, weight, scale=None):
+        self._require_participation()
+        if scale is not None:
+            raise ValueError(
+                "the 2-bit packed vote wire exchanges raw ternary votes; a "
+                "decode scale inside the exchange is a pack8-wire concept")
+        w1 = jnp.asarray(weight, jnp.float32).reshape((1,))
+        if self.ring_chunk_rows is not None:
+            flat, wtot = self._ring_wdecode_flat(values, w1)
+            return jax.lax.slice(flat, (0,), (size,)).reshape(shape), wtot
+        gathered = jax.lax.all_gather(values, self.axes, axis=0, tiled=False)
+        wvec = jax.lax.all_gather(w1, self.axes, axis=0,
+                                  tiled=False).reshape(-1)
+        wv = _packed_decode_wsum(gathered, wvec, size, shape,
+                                 backend=self.backend)
+        return wv, jnp.sum(wvec)
+
+    def exchange_bucket_weighted(self, payload, bucket, *, weight, scale=None):
+        self._require_participation()
+        if scale is not None:
+            raise ValueError(
+                "the 2-bit packed vote wire exchanges raw ternary votes; a "
+                "decode scale inside the exchange is a pack8-wire concept")
+        from repro.dist import bucketing  # lazy: bucketing imports this module
+        w1 = jnp.asarray(weight, jnp.float32).reshape((1,))
+        n = bucket.n_coords
+        if self.ring_chunk_rows is not None:
+            flat, wtot = self._ring_wdecode_flat(payload, w1)
+            return bucketing.split_bucket(flat, bucket), wtot
+        gathered = jax.lax.all_gather(payload, self.axes, axis=0, tiled=False)
+        wvec = jax.lax.all_gather(w1, self.axes, axis=0,
+                                  tiled=False).reshape(-1)
+        total = _packed_decode_wsum(gathered, wvec, n, (n,),
+                                    backend=self.backend)
+        return bucketing.split_bucket(total, bucket), jnp.sum(wvec)
+
+    def weight_bytes(self):
+        # the (1,) f32 effective weight gathered from M-1 peers next to the
+        # packed payload — the elastic side channel
+        if self.participation is None:
+            return 0.0
+        return float((self.n_workers - 1) * 4.0)
 
     def wire_bytes(self, n_coords):
         # ring all-gather: each device transmits its (padded) packed payload
@@ -920,6 +1239,132 @@ class Pack8Wire(VoteWire):
             result.append(jax.lax.slice(flat, (0,), (s.size,)).reshape(s.shape))
         return result
 
+    def exchange_weighted(self, values, size, shape, *, weight, scale=None):
+        """Elastic pack8 exchange: the effective weight PREMULTIPLIES the
+        decode scale (a dropped worker's scale*0 zeroes its dequantized
+        contribution — the fused kernel is unchanged) and also ships raw in
+        the widened (2,) side channel ``[scale * w, w]`` so the server can
+        normalize by the realized participation total."""
+        self._require_participation()
+        if scale is None:
+            raise ValueError(
+                "the pack8 wire dequantizes during the exchange and needs "
+                "this worker's decode scale (CompressedGrad.scale)")
+        w = jnp.asarray(weight, jnp.float32)
+        sc = jnp.asarray(scale, jnp.float32).reshape(())
+        if self.backend == "jnp":
+            # the psum oracle program, weighted: decode with scale * w
+            from repro.kernels import common as kcommon
+            dec = kcommon.from_2d(values, size, shape).astype(jnp.float32) \
+                * (sc * w)
+            return (jax.lax.psum(dec, tuple(self.axes)),
+                    scalar_psum(w, self.axes))
+        side = jnp.stack([sc * w, w])
+        if self.ring_chunk_rows is not None:
+            return self._ring_exchange_weighted(values, side, size, shape)
+        gathered = jax.lax.all_gather(values, self.axes, axis=0, tiled=False)
+        sides = jax.lax.all_gather(side, self.axes, axis=0, tiled=False)
+        wv = _unpack8_op()(gathered, sides[:, 0], size, shape,
+                                  interpret=self._interpret())
+        return wv, jnp.sum(sides[:, 1])
+
+    def _ring_exchange_weighted(self, payload, side, size, shape):
+        """Weighted chunked ring: the (2,) ``[scale * w, w]`` side channel
+        rides every chunk (re-shipped per chunk — ``scalar_bytes`` widens to
+        8 B under participation and ``uplink_ledger`` multiplies by
+        ``ring_chunks``); the raw weights accumulate around the ring into
+        the participation total."""
+        from repro.kernels import common as kcommon
+        op = _unpack8_op()
+        parts, wtot = [], None
+        for r0, nr in _ring_chunk_spans(payload.shape[0], self.ring_chunk_rows):
+            chunk = jax.lax.slice_in_dim(payload, r0, r0 + nr, axis=0)
+
+            def decode(b, s, _nr=nr):
+                val = op(b[None], s[0:1], _nr * kcommon.LANES,
+                         (_nr * kcommon.LANES,), interpret=self._interpret())
+                return (val, s[1])
+
+            acc, wt = _ring_accumulate(chunk, (side,), decode, self.axes,
+                                       self.n_workers)
+            parts.append(acc)
+            wtot = wt if wtot is None else wtot
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        return jax.lax.slice(flat, (0,), (size,)).reshape(shape), wtot
+
+    def exchange_bucket_weighted(self, payload, bucket, *, weight, scale=None):
+        """Bucketed elastic pack8 exchange: the per-slot scale vector is
+        premultiplied by the effective weight and widened by one raw-weight
+        entry — ONE (n_slots + 1,) side-channel gather for the whole
+        bucket."""
+        self._require_participation()
+        if scale is None:
+            raise ValueError(
+                "the pack8 wire dequantizes during the exchange and needs "
+                "the bucket's per-slot decode scales (one f32 per leaf)")
+        from repro.dist import bucketing  # lazy: bucketing imports this module
+        w = jnp.asarray(weight, jnp.float32)
+        scale = jnp.asarray(scale, jnp.float32).reshape(-1)
+        assert scale.shape[0] == len(bucket.slots), (scale.shape, bucket)
+        if self.backend == "jnp":
+            row_scales = jnp.concatenate(
+                [jnp.broadcast_to(scale[i] * w, (s.rows,))
+                 for i, s in enumerate(bucket.slots)]
+                + ([jnp.zeros((bucket.rows - sum(s.rows for s in bucket.slots),),
+                              jnp.float32)] if bucket.rows > sum(
+                                  s.rows for s in bucket.slots) else []))
+            dec = payload.astype(jnp.float32) * row_scales[:, None]
+            return (bucketing.split_bucket(jax.lax.psum(dec, self.axes),
+                                           bucket),
+                    scalar_psum(w, self.axes))
+        side = jnp.concatenate([scale * w, w.reshape((1,))])
+        if self.ring_chunk_rows is not None:
+            return self._ring_exchange_bucket_weighted(payload, side, bucket)
+        gathered = jax.lax.all_gather(payload, self.axes, axis=0, tiled=False)
+        sides = jax.lax.all_gather(side, self.axes, axis=0, tiled=False)
+        op = _unpack8_op()
+        out = []
+        for i, s in enumerate(bucket.slots):
+            rows = jax.lax.slice_in_dim(gathered, s.row_start,
+                                        s.row_start + s.rows, axis=1)
+            out.append(op(rows, sides[:, i], s.size, s.shape,
+                          interpret=self._interpret()))
+        return out, jnp.sum(sides[:, -1])
+
+    def _ring_exchange_bucket_weighted(self, payload, side, bucket):
+        """Weighted bucket ring: the whole (n_slots + 1,) side vector rides
+        every chunk; per-slot segments decode with the premultiplied scales
+        and the raw-weight tail entry accumulates into the participation
+        total."""
+        from repro.kernels import common as kcommon
+        op = _unpack8_op()
+        outs = [[] for _ in bucket.slots]
+        wtot = None
+        for r0, nr in _ring_chunk_spans(bucket.rows, self.ring_chunk_rows):
+            chunk = jax.lax.slice_in_dim(payload, r0, r0 + nr, axis=0)
+            segs = _chunk_segments(bucket.slots, r0, nr)
+
+            def decode(b, sc, _segs=segs, _r0=r0):
+                res = []
+                for i, _s, a, srows in _segs:
+                    rows = jax.lax.slice_in_dim(b, a - _r0, a - _r0 + srows,
+                                                axis=0)
+                    res.append(op(
+                        rows[None], sc[i:i + 1], srows * kcommon.LANES,
+                        (srows * kcommon.LANES,), interpret=self._interpret()))
+                return tuple(res) + (sc[-1],)
+
+            part = _ring_accumulate(chunk, (side,), decode, self.axes,
+                                    self.n_workers)
+            wtot = part[-1] if wtot is None else wtot
+            for (i, _s, _a, _srows), arr in zip(segs, part[:-1]):
+                outs[i].append(arr)
+        result = []
+        for s, parts in zip(bucket.slots, outs):
+            flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            result.append(jax.lax.slice(flat, (0,), (s.size,)).reshape(s.shape))
+        return result, wtot
+
     def wire_bytes(self, n_coords):
         # ring all-gather of the (padded) int8 payload to M-1 peers
         return float((self.n_workers - 1) * packed8_nbytes(n_coords))
@@ -929,7 +1374,10 @@ class Pack8Wire(VoteWire):
         # incoming 4-B scalars per device (vs the all-reduced shared scalar
         # of the scaled_votes mode). The chunked ring re-ships them once
         # per chunk — ``uplink_ledger`` multiplies by ``ring_chunks``.
-        return float((self.n_workers - 1) * 4.0)
+        # Elastic participation widens the slot to 8 B: the weighted decode
+        # scale plus the raw weight (the participation side channel).
+        per = 8.0 if self.participation is not None else 4.0
+        return float((self.n_workers - 1) * per)
 
     def ring_chunks(self, n_coords):
         from repro.kernels import common as kcommon
@@ -1066,6 +1514,87 @@ class GolombWire(VoteWire):
                 out[slot_pos[s]] = arr.astype(_sum_dtype(self.n_workers))
         return out
 
+    def exchange_weighted(self, values, size, shape, *, weight, scale=None):
+        self._require_participation()
+        if scale is not None:
+            raise ValueError(
+                "the golomb vote wire exchanges entropy-coded ternary votes; "
+                "a decode scale inside the exchange is a pack8-wire concept")
+        w1 = jnp.asarray(weight, jnp.float32).reshape((1,))
+        if self.ring_chunk_rows is not None:
+            # one leaf = one self-describing capacity stream = one chunk;
+            # the (1,) weight rides the same ring as the side channel
+            def decode(b, wv):
+                s = _golomb_decode_wsum(b[None], wv, size, shape, p=self.p,
+                                        backend=self.backend)
+                return (s, jnp.sum(wv))
+
+            return _ring_accumulate(values, (w1,), decode, self.axes,
+                                    self.n_workers)
+        gathered = jax.lax.all_gather(values, self.axes, axis=0, tiled=False)
+        wvec = jax.lax.all_gather(w1, self.axes, axis=0,
+                                  tiled=False).reshape(-1)
+        wv = _golomb_decode_wsum(gathered, wvec, size, shape, p=self.p,
+                                 backend=self.backend)
+        return wv, jnp.sum(wvec)
+
+    def exchange_bucket_weighted(self, payload, bucket, *, weight, scale=None):
+        self._require_participation()
+        if scale is not None:
+            raise ValueError(
+                "the golomb vote wire exchanges entropy-coded ternary votes; "
+                "a decode scale inside the exchange is a pack8-wire concept")
+        w1 = jnp.asarray(weight, jnp.float32).reshape((1,))
+        if self.ring_chunk_rows is not None:
+            return self._ring_exchange_bucket_weighted(payload, w1, bucket)
+        gathered = jax.lax.all_gather(payload, self.axes, axis=0, tiled=False)
+        wvec = jax.lax.all_gather(w1, self.axes, axis=0,
+                                  tiled=False).reshape(-1)
+        out = []
+        for s in bucket.slots:
+            rows = jax.lax.slice_in_dim(gathered, s.row_start,
+                                        s.row_start + s.rows, axis=1)
+            out.append(_golomb_decode_wsum(rows, wvec, s.size, s.shape,
+                                           p=self.p, backend=self.backend))
+        return out, jnp.sum(wvec)
+
+    def _ring_exchange_bucket_weighted(self, payload, w1, bucket):
+        """Weighted slot-group ring: the (1,) weight rides every group
+        chunk; raw weights accumulate around the ring into the realized
+        participation total."""
+        slot_pos = {s: i for i, s in enumerate(bucket.slots)}
+        out = [None] * len(bucket.slots)
+        wtot = None
+        for g in _slot_groups(bucket.slots, self.ring_chunk_rows):
+            r0 = g[0].row_start
+            g_rows = sum(s.rows for s in g)
+            chunk = jax.lax.slice_in_dim(payload, r0, r0 + g_rows, axis=0)
+
+            def decode(b, wv, _g=g, _r0=r0):
+                res = []
+                for s in _g:
+                    rows = jax.lax.slice_in_dim(
+                        b, s.row_start - _r0,
+                        s.row_start - _r0 + s.rows, axis=0)
+                    res.append(_golomb_decode_wsum(rows[None], wv, s.size,
+                                                   s.shape, p=self.p,
+                                                   backend=self.backend))
+                return tuple(res) + (jnp.sum(wv),)
+
+            part = _ring_accumulate(chunk, (w1,), decode, self.axes,
+                                    self.n_workers)
+            wtot = part[-1] if wtot is None else wtot
+            for s, arr in zip(g, part[:-1]):
+                out[slot_pos[s]] = arr
+        return out, wtot
+
+    def weight_bytes(self):
+        # the (1,) f32 effective weight gathered from M-1 peers next to the
+        # coded payload — the elastic side channel
+        if self.participation is None:
+            return 0.0
+        return float((self.n_workers - 1) * 4.0)
+
     def wire_bytes(self, n_coords):
         # ring all-gather of the capacity-padded coded payload to M-1 peers
         return float((self.n_workers - 1)
@@ -1111,7 +1640,8 @@ def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
                    backend: Optional[str] = None,
                    wire_format: str = "pack2",
                    golomb_p: Optional[float] = None,
-                   ring_chunk_rows: Optional[int] = None) -> VoteWire:
+                   ring_chunk_rows: Optional[int] = None,
+                   participation: Optional[ParticipationSpec] = None) -> VoteWire:
     """Build the wire for ``impl`` over the worker ``axes`` at step-build time.
 
     Axis sizes come from ``mesh.shape`` when a mesh is given (the builders'
@@ -1127,9 +1657,17 @@ def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
     (gather wires only; a positive sublane multiple, e.g.
     ``DEFAULT_RING_CHUNK_ROWS``) switches the gather to the chunked
     ppermute ring — see the module docstring and ``engine.
-    resolve_ring_chunk_rows`` for the negotiated path.
+    resolve_ring_chunk_rows`` for the negotiated path. ``participation``
+    (a ``ParticipationSpec``) arms the elastic weighted-exchange family —
+    per-worker weights are validated against the realized worker count here,
+    at build time.
     """
     axes = tuple(axes)
+    if participation is not None and not isinstance(participation,
+                                                    ParticipationSpec):
+        raise TypeError(
+            f"participation must be a ParticipationSpec, got "
+            f"{type(participation).__name__}")
     if impl not in VOTE_IMPLS:
         raise ValueError(f"unknown vote_impl {impl!r}; known: {VOTE_IMPLS}")
     if impl == "hier" and len(axes) != 2:
@@ -1189,16 +1727,23 @@ def make_vote_wire(impl: str, axes: Sequence[str], mesh=None, *,
     n = 1
     for s in sizes:
         n *= s
+    if participation is not None:
+        # weights must cover the realized fleet — fail before tracing
+        participation.weights_array(n)
     if wire_format == "pack8":
         return Pack8Wire(axes=axes, n_workers=n, backend=backend,
-                         ring_chunk_rows=ring_chunk_rows)
+                         ring_chunk_rows=ring_chunk_rows,
+                         participation=participation)
     if wire_format == "golomb":
         return GolombWire(axes=axes, n_workers=n, backend=backend,
-                          p=float(golomb_p), ring_chunk_rows=ring_chunk_rows)
+                          p=float(golomb_p), ring_chunk_rows=ring_chunk_rows,
+                          participation=participation)
     if impl == "hier":
         return HierVoteWire(axes=axes, n_workers=n,
-                            inner_size=sizes[1], outer_size=sizes[0])
+                            inner_size=sizes[1], outer_size=sizes[0],
+                            participation=participation)
     if impl == "allgather_packed":
         return PackedVoteWire(axes=axes, n_workers=n, backend=backend,
-                              ring_chunk_rows=ring_chunk_rows)
-    return VoteWire(axes=axes, n_workers=n)
+                              ring_chunk_rows=ring_chunk_rows,
+                              participation=participation)
+    return VoteWire(axes=axes, n_workers=n, participation=participation)

@@ -39,6 +39,15 @@ class FLConfig:
     comp: CompressionConfig = dataclasses.field(default_factory=CompressionConfig)
     seed: int = 0
     eval_every: int = 10
+    quorum: int = 1                 # vote-server deadband (majority_vote only)
+    # elastic participation (any set -> weighted, participation-normalized
+    # aggregation): per-GLOBAL-worker vote weights (len n_workers), a quorum
+    # expressed as a fraction of realized participation W, and a per-round
+    # report-dropout rate on TOP of sampling (chaos: crashed/straggling
+    # reporters). None/0.0 everywhere = the legacy fixed-count path.
+    worker_weights: Optional[tuple] = None
+    q_frac: Optional[float] = None
+    dropout: float = 0.0
 
 
 def _worker_batch_idx(key, shard_sizes, batch):
@@ -63,6 +72,25 @@ def build_round_fn(loss_fn: Callable, cfg: FLConfig, x_parts, y_parts):
     m = cfg.n_workers
     n_sel = max(1, int(round(cfg.participation * m)))
     shard_len = x_parts.shape[1]
+    # elastic participation: any elastic field set switches the aggregation
+    # to the weighted, participation-normalized form (same ParticipationSpec
+    # validation the mesh trainers use — loud and build-time)
+    spec = None
+    if (cfg.worker_weights is not None or cfg.q_frac is not None
+            or cfg.dropout > 0.0):
+        from repro.dist import collectives
+        spec = collectives.ParticipationSpec(
+            weights=cfg.worker_weights, q_frac=cfg.q_frac,
+            dropout=cfg.dropout)
+        engine.check_participation_server(server_rule, comp.compressor)
+        if spec.weights is not None and len(spec.weights) != m:
+            raise ValueError(
+                f"worker_weights cover {len(spec.weights)} workers but the "
+                f"simulation has n_workers={m} (weights are per GLOBAL "
+                f"worker id, not per sampled slot)")
+        # the quorum normalizes to whoever reports: a fraction of W, not a
+        # fixed count out of |S|
+        q_frac = spec.resolve_q_frac(cfg.quorum, n_sel)
 
     def worker_source(v, widx, key, round_idx):
         """One worker's uplink *input* (gradient, or Alg. 2 local-step sum)
@@ -99,14 +127,45 @@ def build_round_fn(loss_fn: Callable, cfg: FLConfig, x_parts, y_parts):
         sel = jax.random.permutation(ksel, m)[:n_sel]
         keys = jax.random.split(kw, n_sel)
         srcs, seeds = jax.vmap(lambda w, k: worker_source(v, w, k, round_idx))(sel, keys)
+        if spec is not None:
+            # the reporting set is the sampled set minus chaos dropouts;
+            # w_eff = static per-worker weight x report bit (exact 0.0 for a
+            # silent worker, so its message contributes exact zeros)
+            from repro.train import sampling
+            rmask = jax.vmap(lambda w: sampling.report_mask(
+                jnp.uint32(cfg.seed), round_idx, w, spec.dropout))(sel)
+            w_eff = (spec.weights_array(m)[sel]
+                     * rmask.astype(jnp.float32))
         # the magnitude-sharing all-reduce(max) over the sampled set S
-        shared = (jnp.max(jnp.abs(srcs.astype(jnp.float32)))
-                  if share_linf else None)
+        # (elastic: over the REPORTING set — a crashed worker's magnitude
+        # cannot ride a wire it never sent)
+        if share_linf:
+            mags = jnp.max(jnp.abs(srcs.astype(jnp.float32)),
+                           axis=tuple(range(1, srcs.ndim)))
+            if spec is not None:
+                mags = jnp.where(rmask, mags, 0.0)
+            shared = jnp.max(mags)
+        else:
+            shared = None
         dec, nnz = jax.vmap(lambda s, sd: worker_msg(s, sd, shared))(srcs, seeds)
+        if spec is not None:
+            # weighted vote: sum_m w_m * msg_m over reporters, normalized to
+            # the realized participation W = sum_reporting w_m
+            wv = jnp.sum(dec * w_eff[:, None], axis=0)
+            wtot = jnp.sum(w_eff)
+            if server_rule == "majority_vote":
+                v, ef = engine.server_apply(
+                    v, wv, comp, lr=cfg.lr, ef=ef, part_total=wtot,
+                    q_frac=q_frac, backend=backend)
+            else:
+                v, ef = engine.server_apply(
+                    v, wv, comp, lr=cfg.lr, ef=ef, n_sel=wtot,
+                    server="mean", backend=backend)
+            return v, ef, jnp.mean(nnz * rmask.astype(jnp.float32))
         vote_sum = jnp.sum(dec, axis=0)
         v, ef = engine.server_apply(
             v, vote_sum, comp, lr=cfg.lr, ef=ef, n_sel=jnp.float32(n_sel),
-            server=server_rule, backend=backend)
+            server=server_rule, quorum=cfg.quorum, backend=backend)
         return v, ef, jnp.mean(nnz)
 
     return round_fn

@@ -118,3 +118,29 @@ def ungolomb_sum(gathered: jnp.ndarray, *, n: int, b: int, interpret: bool):
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         interpret=interpret,
     )(gathered)
+
+
+def _decode_wsum_kernel(w_ref, gathered_ref, out_ref, *, n: int, b: int):
+    # w_ref: (1, M) f32 per-worker weights in SMEM (the pack8 scales idiom)
+    out_ref[...] = golomb_ref.decode_wsum_workers(
+        gathered_ref[...], w_ref[0, :], n, b=b)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "b", "interpret"))
+def ungolomb_wsum(gathered: jnp.ndarray, w: jnp.ndarray, *, n: int, b: int,
+                  interpret: bool):
+    """(M, rows, ROW_BYTES) gathered payloads + (1, M) f32 weights -> (n,)
+    f32 weighted vote sum, workers accumulated in strict gather order (the
+    shared ref helper — kernel == ref bitwise by construction)."""
+    m, rows, width = gathered.shape
+    return pl.pallas_call(
+        functools.partial(_decode_wsum_kernel, n=n, b=b),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((m, rows, width), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(w, gathered)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.kernels import common
 from repro.kernels.golomb import ref as golomb_ref
 from repro.kernels.golomb.kernel import (golomb_pack_2d, sparsign_golomb_2d,
-                                         ungolomb_sum)
+                                         ungolomb_sum, ungolomb_wsum)
 
 #: default plan-time nonzero fraction (paper-regime 5%) — only for
 #: spec-generic tracing; real wires pass their configured p
@@ -91,4 +91,28 @@ def ungolomb_sum_op(
         interpret = common.default_interpret()
     total = ungolomb_sum(gathered, n=size, b=golomb_ref.rice_b(p),
                          interpret=interpret)
+    return total.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("size", "shape", "p", "interpret"))
+def ungolomb_wsum_op(
+    gathered: jnp.ndarray,
+    weights: jnp.ndarray,
+    size: int,
+    shape,
+    *,
+    p: float = DEFAULT_P,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(M, rows, ROW_BYTES) gathered payloads + (M,) f32 per-worker weights ->
+    f32 weighted vote sum ``sum_m weights[m] * votes_m`` of ``shape``, workers
+    accumulated in strict gather order (pinned against
+    ``ref.ungolomb_wsum_ref``). The elastic-participation decode of the
+    golomb gather wire: weights ride the gather as a billed side channel."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    m = int(gathered.shape[0])
+    w = weights.astype(jnp.float32).reshape(1, m)
+    total = ungolomb_wsum(gathered, w, n=size, b=golomb_ref.rice_b(p),
+                          interpret=interpret)
     return total.reshape(shape)

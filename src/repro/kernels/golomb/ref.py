@@ -234,3 +234,27 @@ def ungolomb_sum_ref(gathered: jnp.ndarray, n: int, shape, *, p: float) -> jnp.n
     """Reference decode-sum: gathered worker payloads -> int32 vote sum in
     ``shape`` — the oracle the fused ``ungolomb_sum_op`` is pinned against."""
     return decode_sum_workers(gathered, n, b=rice_b(p)).reshape(shape)
+
+
+def decode_wsum_workers(gathered: jnp.ndarray, weights: jnp.ndarray, n: int,
+                        *, b: int) -> jnp.ndarray:
+    """(M, rows, ROW_BYTES) gathered payloads + (M,) f32 per-worker weights
+    -> f32 weighted vote sum, flat (n,).
+
+    The elastic-participation twin of ``decode_sum_workers``: strict
+    worker-order float accumulation (the association the kernel reproduces).
+    A masked-out worker's all-zero buffer decodes to zero votes and its zero
+    weight makes the contribution exactly zero either way."""
+    total = jnp.zeros((n,), jnp.float32)
+    for w in range(int(gathered.shape[0])):
+        total = total + (decode_stream(gathered[w], n, b=b).astype(jnp.float32)
+                         * weights[w])
+    return total
+
+
+def ungolomb_wsum_ref(gathered: jnp.ndarray, weights: jnp.ndarray, n: int,
+                      shape, *, p: float) -> jnp.ndarray:
+    """Reference weighted decode-sum: gathered payloads + per-worker weights
+    -> f32 ``sum_m w_m * votes_m`` in ``shape`` (the oracle the fused
+    ``ungolomb_wsum_op`` is pinned against)."""
+    return decode_wsum_workers(gathered, weights, n, b=rice_b(p)).reshape(shape)

@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import common
 
@@ -50,6 +51,28 @@ def _unpack_sum_kernel(p_ref, out_ref, *, quarter: int):
         out_ref[:, k * quarter:(k + 1) * quarter] = jnp.sum(dec(codes), axis=0)
 
 
+def _unpack_wsum_kernel(w_ref, p_ref, out_ref, *, quarter: int, m: int):
+    # Elastic-participation decode: (M, block_rows, quarter) packed votes plus
+    # (1, M) f32 per-worker weights in SMEM (the pack8 scales idiom). The
+    # accumulator unrolls strictly in worker order so the float sum associates
+    # exactly like the eager-loop oracle; a masked-out worker's zero payload
+    # AND zero weight both force exact-zero contributions.
+    p = p_ref[...]
+
+    def dec(c):
+        return jnp.where(c == 1, jnp.float32(1.0),
+                         jnp.where(c == 2, jnp.float32(-1.0), jnp.float32(0.0)))
+
+    for k in range(4):
+        codes = (p >> (2 * k)) & jnp.uint8(3)
+        # zero seed (not acc = first term): a zero weight times a -1 vote is
+        # -0.0, and the oracle's 0.0 + (-0.0) == +0.0 must be reproduced
+        acc = jnp.zeros_like(dec(codes[0]))
+        for i in range(m):
+            acc = acc + dec(codes[i]) * w_ref[0, i]
+        out_ref[:, k * quarter:(k + 1) * quarter] = acc
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def pack2bit_2d(t2d: jnp.ndarray, *, block_rows: int, interpret: bool) -> jnp.ndarray:
     rows, lanes = t2d.shape
@@ -82,6 +105,28 @@ def unpack2bit_sum_2d(p3d: jnp.ndarray, *, block_rows: int, interpret: bool) -> 
         out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
         interpret=interpret,
     )(p3d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def unpack2bit_wsum_2d(p3d: jnp.ndarray, w: jnp.ndarray, *, block_rows: int,
+                       interpret: bool) -> jnp.ndarray:
+    """(M, rows, q) packed worker votes + (1, M) f32 weights -> (rows, 4q)
+    f32 weighted vote sum (the elastic-participation decode of the
+    ``allgather_packed`` wire). Same fused decode+accumulate discipline as
+    ``unpack2bit_sum_2d`` with the per-worker weights riding in SMEM."""
+    m, rows, q = p3d.shape
+    lanes = q * 4
+    return pl.pallas_call(
+        functools.partial(_unpack_wsum_kernel, quarter=q, m=m),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((m, block_rows, q), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
+        interpret=interpret,
+    )(w, p3d)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 
 from repro.kernels import common
 from repro.kernels.pack2bit.kernel import (pack2bit_2d, unpack2bit_2d,
-                                           unpack2bit_sum_2d)
+                                           unpack2bit_sum_2d,
+                                           unpack2bit_wsum_2d)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -51,4 +52,25 @@ def unpack2bit_sum_op(gathered: jnp.ndarray, n: int, shape, *,
     want = max(common.SUBLANE_PAD, min(common.DEFAULT_BLOCK_ROWS, (1 << 21) // max(1, m * q)))
     br = common.block_rows_for(rows, want=want)
     total2d = unpack2bit_sum_2d(gathered, block_rows=br, interpret=interpret)
+    return common.from_2d(total2d, n, shape)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "shape", "interpret"))
+def unpack2bit_wsum_op(gathered: jnp.ndarray, weights: jnp.ndarray, n: int,
+                       shape, *, interpret: bool | None = None) -> jnp.ndarray:
+    """(M, rows, LANES//4) gathered packed votes + (M,) f32 per-worker weights
+    -> f32 weighted vote sum ``sum_m weights[m] * votes_m`` in ``shape``.
+
+    The elastic-participation decode of the ``allgather_packed`` wire: weights
+    ride the gather as a billed side channel; a dropped worker (zero payload,
+    zero weight) contributes exact zeros. Same VMEM budget rule as
+    ``unpack2bit_sum_op``.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    m, rows, q = gathered.shape
+    want = max(common.SUBLANE_PAD, min(common.DEFAULT_BLOCK_ROWS, (1 << 21) // max(1, m * q)))
+    br = common.block_rows_for(rows, want=want)
+    w = weights.astype(jnp.float32).reshape(1, m)
+    total2d = unpack2bit_wsum_2d(gathered, w, block_rows=br, interpret=interpret)
     return common.from_2d(total2d, n, shape)

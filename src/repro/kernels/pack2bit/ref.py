@@ -49,3 +49,19 @@ def unpack2bit_sum_ref(gathered: jnp.ndarray) -> jnp.ndarray:
     (deliberately materializes the int8 tensor the kernel avoids)."""
     ternary = jax.vmap(unpack2bit_ref)(gathered)
     return jnp.sum(ternary.astype(jnp.int32), axis=0)
+
+
+def unpack2bit_wsum_ref(gathered: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """(M, rows, L//4) packed worker votes + (M,) f32 weights -> (rows, L)
+    f32 weighted vote sum ``sum_m weights[m] * votes_m``.
+
+    Oracle for the elastic-participation decode: the python loop accumulates
+    strictly in worker order, the association the fused kernel's unrolled
+    accumulator reproduces (for weights == 1 the ternary products are exact
+    integers, so the sum is bitwise the int32 ``unpack2bit_sum_ref`` stream
+    up to dtype)."""
+    m, rows, q = gathered.shape
+    acc = jnp.zeros((rows, q * 4), jnp.float32)
+    for i in range(m):
+        acc = acc + unpack2bit_ref(gathered[i]).astype(jnp.float32) * weights[i]
+    return acc

@@ -41,3 +41,33 @@ def vote_update_2d(w2d, v2d, scalars, *, block_rows: int, interpret: bool):
         out_shape=jax.ShapeDtypeStruct((rows, lanes), w2d.dtype),
         interpret=interpret,
     )(scalars, w2d, v2d)
+
+
+def _wkernel(scalars_ref, w_ref, v_ref, t_ref, out_ref):
+    # scalars: [eta bits, q_frac bits] — both f32 payloads in SMEM uint32
+    eta = jax.lax.bitcast_convert_type(scalars_ref[0, 0], jnp.float32)
+    q_frac = jax.lax.bitcast_convert_type(scalars_ref[0, 1], jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    thr = q_frac * t_ref[...].astype(jnp.float32)
+    step = jnp.where(jnp.abs(v) >= thr, jnp.sign(v), jnp.float32(0.0))
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[...] = (w - eta * step).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def weighted_vote_update_2d(w2d, v2d, t2d, scalars, *, block_rows: int,
+                            interpret: bool):
+    """Fused elastic update: w' = w - eta * sign(v) where |v| clears the
+    participation-normalized deadband q_frac * W per coordinate. Same grid /
+    block discipline as ``vote_update_2d`` with one extra f32 operand (the
+    per-coordinate realized participation W)."""
+    rows, lanes = w2d.shape
+    spec = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    return pl.pallas_call(
+        _wkernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), w2d.dtype),
+        interpret=interpret,
+    )(scalars, w2d, v2d, t2d)

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import common
-from repro.kernels.vote_update.kernel import vote_update_2d
+from repro.kernels.vote_update.kernel import vote_update_2d, weighted_vote_update_2d
 
 
 @functools.partial(jax.jit, static_argnames=("quorum", "interpret"))
@@ -23,4 +23,29 @@ def vote_update_op(w: jnp.ndarray, votes: jnp.ndarray, eta, *, quorum: int = 1,
     eta_bits = jax.lax.bitcast_convert_type(jnp.asarray(eta, jnp.float32), jnp.uint32)
     scalars = jnp.stack([eta_bits, jnp.asarray(quorum, jnp.uint32)]).reshape(1, 2)
     out2 = vote_update_2d(w2, v2, scalars, block_rows=br, interpret=interpret)
+    return common.from_2d(out2, n, w.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("q_frac", "interpret"))
+def weighted_vote_update_op(w: jnp.ndarray, wvotes: jnp.ndarray, wtot,
+                            eta, *, q_frac: float,
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """Elastic update: w' = w - eta * sign(wvotes) with the
+    participation-normalized deadband ``|wvotes| >= q_frac * wtot``; any
+    shape, w dtype preserved. ``wtot`` (realized participation
+    ``sum_reporting w_m``) may be a scalar or per-coordinate array —
+    broadcast before the canonical view so padded tail coordinates see
+    wtot = 0, where the zero-vote sign already produces no step."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    w2, n = common.to_2d(w.reshape(-1))
+    v2, _ = common.to_2d(wvotes.astype(jnp.float32).reshape(-1))
+    t = jnp.broadcast_to(jnp.asarray(wtot, jnp.float32), wvotes.shape)
+    t2, _ = common.to_2d(t.reshape(-1))
+    br = common.block_rows_for(w2.shape[0])
+    eta_bits = jax.lax.bitcast_convert_type(jnp.asarray(eta, jnp.float32), jnp.uint32)
+    qf_bits = jax.lax.bitcast_convert_type(jnp.asarray(q_frac, jnp.float32), jnp.uint32)
+    scalars = jnp.stack([eta_bits, qf_bits]).reshape(1, 2)
+    out2 = weighted_vote_update_2d(w2, v2, t2, scalars, block_rows=br,
+                                   interpret=interpret)
     return common.from_2d(out2, n, w.shape)

@@ -14,3 +14,20 @@ def vote_update_ref(w: jnp.ndarray, votes: jnp.ndarray, eta, quorum: int = 1) ->
     v = votes.astype(jnp.int32)
     step = jnp.where(jnp.abs(v) >= quorum, jnp.sign(v), 0).astype(jnp.float32)
     return (w.astype(jnp.float32) - jnp.float32(eta) * step).astype(w.dtype)
+
+
+def weighted_vote_update_ref(w: jnp.ndarray, wvotes: jnp.ndarray,
+                             wtot: jnp.ndarray, eta, q_frac: float) -> jnp.ndarray:
+    """Elastic-participation oracle: w' = w - eta * sign(sum_m w_m sign_m)
+    where the deadband is ``|sum_m w_m sign_m| >= q_frac * W`` — the quorum
+    normalizes to the realized participation ``W = sum_reporting w_m``
+    (``wtot``, per coordinate or broadcastable scalar) instead of a fixed
+    integer M-quorum. With uniform weights and full participation (W = M,
+    q_frac = quorum/M) this is bitwise ``vote_update_ref``: f32 sums of
+    ternary votes are exact integers up to 2^24 and the threshold product
+    recovers the integer quorum exactly on power-of-two fleets."""
+    v = wvotes.astype(jnp.float32)
+    thr = jnp.float32(q_frac) * jnp.broadcast_to(
+        jnp.asarray(wtot, jnp.float32), v.shape)
+    step = jnp.where(jnp.abs(v) >= thr, jnp.sign(v), jnp.float32(0.0))
+    return (w.astype(jnp.float32) - jnp.float32(eta) * step).astype(w.dtype)

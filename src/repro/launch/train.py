@@ -50,18 +50,30 @@ def build_everything(args):
     # None keeps the monolithic all_gather
     ring_rows = ((args.ring_chunk_rows or collectives.DEFAULT_RING_CHUNK_ROWS)
                  if args.ring else None)
+    # elastic participation: any of --worker-weights/--quorum-frac/--dropout
+    # builds a ParticipationSpec (validated loudly before the step builds) and
+    # switches the vote to the weighted, participation-normalized form
+    part = None
+    if (args.worker_weights is not None or args.quorum_frac is not None
+            or args.dropout > 0.0):
+        weights = (tuple(float(x) for x in args.worker_weights.split(","))
+                   if args.worker_weights else None)
+        part = collectives.ParticipationSpec(
+            weights=weights, q_frac=args.quorum_frac, dropout=args.dropout)
     mode = args.mode or trainer_mode(args.arch)
     if mode == "simple":
         step = build_train_step(model, TrainStepConfig(
             compression=comp, lr=lr, local_lr=args.local_lr, worker_axes=wa,
-            vote_impl=args.vote_impl, bucketed=args.bucketed,
-            ring_chunk_rows=ring_rows), mesh)
+            vote_impl=args.vote_impl, quorum=args.quorum,
+            bucketed=args.bucketed,
+            ring_chunk_rows=ring_rows, participation=part), mesh)
         params = model.init(jax.random.PRNGKey(args.seed))
     else:
         step = build_streamed_train_step(model, StreamedStepConfig(
             compression=comp, lr=lr, worker_axes=wa,
-            vote_impl=args.vote_impl, bucketed=args.bucketed,
-            ring_chunk_rows=ring_rows), mesh)
+            vote_impl=args.vote_impl, quorum=args.quorum,
+            bucketed=args.bucketed,
+            ring_chunk_rows=ring_rows, participation=part), mesh)
         params = model.init(jax.random.PRNGKey(args.seed))
         params = jax.tree_util.tree_map(jax.device_put, params,
                                         fsdp_param_shardings(model, mesh))
@@ -121,6 +133,23 @@ def main(argv=None):
     ap.add_argument("--local-budget", type=float, default=10.0)
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--quorum", type=int, default=1,
+                    help="vote-server deadband: |votes| < quorum -> no step "
+                         "(majority_vote only); under elastic participation "
+                         "it is re-derived as the fraction quorum/M of "
+                         "realized participation")
+    ap.add_argument("--quorum-frac", type=float, default=None,
+                    help="elastic quorum as an explicit fraction of realized "
+                         "participation W (overrides the quorum/M "
+                         "derivation); engages elastic participation")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-round report-dropout rate (chaos: crashed/"
+                         "straggling reporters); engages elastic "
+                         "participation")
+    ap.add_argument("--worker-weights", default=None,
+                    help="comma-separated per-worker vote weights (one per "
+                         "worker, flat worker-index order); engages elastic "
+                         "participation")
     ap.add_argument("--bucketed", action="store_true",
                     help="bucketized uplink (one collective per bucket; "
                          "streamed mode double-buffers exchange vs compute)")

@@ -27,5 +27,20 @@ def participation_mask(seed, round_idx, worker_idx, p_sample: float) -> jnp.ndar
     return u < p_sample
 
 
+def report_mask(seed, round_idx, worker_idx, dropout: float) -> jnp.ndarray:
+    """bool scalar (per worker) — does a *sampled* worker's report arrive this
+    round? Models elastic-participation chaos (crashes, stragglers past the
+    round deadline) independently of the sampling policy: a distinct salt from
+    ``participation_mask`` so the two masks are uncorrelated streams. The
+    effective reporting set is ``participation_mask & report_mask``;
+    ``dropout=0.0`` short-circuits to True (the fully-reporting fleet)."""
+    if dropout <= 0.0:
+        return jnp.bool_(True)
+    u = prng.uniform01(prng.fold_seed(seed, 0xD0A7, 1),
+                       jnp.asarray(round_idx, jnp.uint32) * jnp.uint32(1_000_003)
+                       + jnp.asarray(worker_idx, jnp.uint32))
+    return u >= dropout
+
+
 def round_seed(base_seed, round_idx) -> jnp.ndarray:
     return prng.fold_seed(base_seed, 0x52D) + jnp.asarray(round_idx, jnp.uint32) * jnp.uint32(0x9E3779B9)

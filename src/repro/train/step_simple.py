@@ -71,6 +71,11 @@ class TrainStepConfig:
                                            # rows per ppermute chunk (gather
                                            # wires only; None: monolithic
                                            # all_gather)
+    participation: Optional[collectives.ParticipationSpec] = None
+                                           # elastic participation: per-worker
+                                           # vote weights + quorum-fraction
+                                           # deadband + report dropout; None =
+                                           # the legacy fixed-quorum path
 
 
 def _leaf_seeds(worker_seed, tree):
@@ -131,13 +136,19 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
     # entropy-coded wire's static capacity
     wire_fmt = engine.wire_payload_format(comp, mode,
                                           vote_impl=step_cfg.vote_impl)
+    part = step_cfg.participation
+    if part is not None:
+        # elastic participation: loud build-time gates — the EF server cannot
+        # be participation-normalized, and the weights must cover the mesh
+        engine.check_participation_server(comp.server, comp.compressor)
     wire = collectives.make_vote_wire(
         step_cfg.vote_impl, axes, mesh, backend=backend,
         wire_format=wire_fmt,
         golomb_p=(engine.resolve_golomb_p(comp, step_cfg.golomb_p)
                   if wire_fmt == "golomb" else None),
         ring_chunk_rows=engine.resolve_ring_chunk_rows(
-            step_cfg.ring_chunk_rows, step_cfg.vote_impl))
+            step_cfg.ring_chunk_rows, step_cfg.vote_impl),
+        participation=part)
     share_linf = engine.needs_shared_linf(comp)
     if mode != "votes" and engine.needs_server_ef(comp.server):
         raise ValueError(
@@ -149,6 +160,10 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
             f"server")
     quorum_leaves = jax.tree_util.tree_leaves(
         engine.broadcast_quorum(step_cfg.quorum, model.param_shapes()))
+    # per-leaf quorum as a FRACTION of realized participation (build-time:
+    # bad quorums and q_frac out of (0,1] fail before tracing)
+    q_fracs = ([part.resolve_q_frac(q, wire.n_workers) for q in quorum_leaves]
+               if part is not None else None)
     if mode != "votes" and any(q != 1 for q in quorum_leaves):
         raise ValueError(
             f"quorum={step_cfg.quorum!r} is a vote-server deadband, but "
@@ -201,6 +216,14 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
         rseed = sampling.round_seed(state.seed, state.step)
         wseed = prng.fold_seed(rseed, 0x5EED) + widx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
         mask = sampling.participation_mask(rseed, state.step, widx, comp.worker_sample_fraction)
+        if part is not None:
+            # elastic: the round's effective reporting set is the sampled set
+            # minus chaos dropouts; w_eff = static weight x report bit is the
+            # weight that rides the wire (exact 0.0 for a silent worker)
+            mask = mask & sampling.report_mask(rseed, state.step, widx,
+                                               part.dropout)
+            w_eff = (part.weight_of(widx, n_workers)
+                     * mask.astype(jnp.float32))
 
         loss, msg_src = _local_grads(model, params, batch, comp, wseed,
                                      step_cfg.local_lr, backend=backend)
@@ -236,8 +259,12 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
                         msg = engine.compress_leaf(g, comp, seed_i,
                                                    backend=backend,
                                                    shared_linf=shared)
+                        # elastic: the weight premultiplies the decode scale
+                        # (w_eff == 1.0 is a bitwise identity; a dropped
+                        # worker's slot decodes to exact zeros)
+                        sc = msg.scale * w_eff if part is not None else msg.scale
                         dec, nnz = collectives.decoded_message(
-                            msg.values, msg.scale, mask,
+                            msg.values, sc, mask,
                             is_ternary=comp.is_ternary)
                         payloads[i] = bucketing.as_rows(dec, plan.fmt, s.rows)
                         nnz_acc += nnz
@@ -254,18 +281,51 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
             for b in plan.buckets:
                 buf = bucketing.assemble_bucket(
                     [payloads[s.index] for s in b.slots], b, plan.fmt)
+                wtots = None
                 if mode == "decoded":
                     parts = bucketing.split_bucket(
                         collectives.decoded_exchange_bucket(buf, axes), b)
+                    if part is not None:
+                        # weights already premultiplied into the psum'd
+                        # stream; W (the mean divisor) is one protocol scalar
+                        wtots = collectives.scalar_psum(w_eff, axes)
+                elif part is not None:
+                    # elastic: one weighted exchange per bucket returns
+                    # (sum_m w_m payload_m, W) — W is per-slot on the psum
+                    # wires (per-coordinate arrays) and one scalar on the
+                    # gather wires
+                    if mode == "pack8":
+                        parts, wtots = wire.exchange_bucket_weighted(
+                            buf, b, weight=w_eff,
+                            scale=jnp.stack([scales[s.index]
+                                             for s in b.slots]))
+                    else:
+                        parts, wtots = wire.exchange_bucket_weighted(
+                            buf, b, weight=w_eff)
                 elif mode == "pack8":
                     parts = wire.exchange_bucket(
                         buf, b, scale=jnp.stack([scales[s.index]
                                                  for s in b.slots]))
                 else:
                     parts = wire.exchange_bucket(buf, b)
-                for s, agg in zip(b.slots, parts):
+                for j, (s, agg) in enumerate(zip(b.slots, parts)):
                     i = s.index
-                    if mode == "votes":
+                    if part is not None:
+                        wt = (wtots[j] if isinstance(wtots, (list, tuple))
+                              else wtots)
+                        if mode == "votes":
+                            new_p, new_ef = engine.server_apply(
+                                p_leaves[i], agg, comp, lr=lr, ef=ef_flat[i],
+                                part_total=wt, q_frac=q_fracs[i],
+                                backend=backend)
+                        else:
+                            new_p, new_ef = engine.server_apply(
+                                p_leaves[i], agg, comp, lr=lr, ef=ef_flat[i],
+                                n_sel=wt, server="mean",
+                                scale=(scales[i] if mode == "scaled_votes"
+                                       else None),
+                                backend=backend)
+                    elif mode == "votes":
                         new_p, new_ef = engine.server_apply(
                             p_leaves[i], agg, comp, lr=lr, ef=ef_flat[i],
                             n_sel=n_sel, quorum=quorum_leaves[i],
@@ -311,7 +371,31 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
                 votes = wire.mask_message(msg.values, mask)
                 nnz_acc += wire.message_nnz(votes)
                 n_sel = collectives.scalar_psum(mask.astype(jnp.float32), axes)
-                if mode == "pack8":
+                if part is not None:
+                    # elastic: weighted exchange returns (sum w_m votes_m, W);
+                    # vote servers normalize the deadband to W, mean servers
+                    # divide by it
+                    if mode == "pack8":
+                        wv, wtot = wire.exchange_weighted(
+                            votes, g.size, g.shape, weight=w_eff,
+                            scale=msg.scale)
+                        new_p, new_ef = engine.server_apply(
+                            p, wv, comp, lr=lr, ef=ef, n_sel=wtot,
+                            server="mean", backend=backend)
+                    elif mode == "votes":
+                        wv, wtot = wire.exchange_weighted(
+                            votes, g.size, g.shape, weight=w_eff)
+                        new_p, new_ef = engine.server_apply(
+                            p, wv, comp, lr=lr, ef=ef,
+                            part_total=wtot, q_frac=q_fracs[i],
+                            backend=backend)
+                    else:
+                        wv, wtot = wire.exchange_weighted(
+                            votes, g.size, g.shape, weight=w_eff)
+                        new_p, new_ef = engine.server_apply(
+                            p, wv, comp, lr=lr, ef=ef, n_sel=wtot,
+                            server="mean", scale=msg.scale, backend=backend)
+                elif mode == "pack8":
                     dec_sum = wire.exchange(votes, g.size, g.shape,
                                             scale=msg.scale)
                     new_p, new_ef = engine.server_apply(
@@ -335,14 +419,25 @@ def build_train_step(model, step_cfg: TrainStepConfig, mesh) -> Callable:
                 # formats ship decode(compress(g)) — fp32 collective bytes,
                 # honestly the cost this family pays (identity's message IS
                 # g, so D-SGD is bit-identical to raw psum)
-                vote_sum, nnz = collectives.decoded_exchange(
-                    msg.values, msg.scale, mask, axes,
-                    is_ternary=comp.is_ternary)
+                if part is not None:
+                    # elastic decoded wire: the weight premultiplies the
+                    # decode scale (w_eff == 1.0 is a bitwise identity, a
+                    # dropped worker decodes to exact zeros) and the mean
+                    # divisor becomes the realized participation W
+                    vote_sum, nnz = collectives.decoded_exchange(
+                        msg.values, msg.scale * w_eff, mask, axes,
+                        is_ternary=comp.is_ternary)
+                    n_or_w = collectives.scalar_psum(w_eff, axes)
+                else:
+                    vote_sum, nnz = collectives.decoded_exchange(
+                        msg.values, msg.scale, mask, axes,
+                        is_ternary=comp.is_ternary)
+                    n_or_w = collectives.scalar_psum(
+                        mask.astype(jnp.float32), axes)
                 nnz_acc += nnz
-                n_sel = collectives.scalar_psum(mask.astype(jnp.float32), axes)
                 new_p, new_ef = engine.server_apply(
-                    p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_sel, server="mean",
-                    backend=backend)
+                    p, vote_sum, comp, lr=lr, ef=ef, n_sel=n_or_w,
+                    server="mean", backend=backend)
             total += g.size
             new_leaves.append(new_p)
             ef_leaves.append(new_ef)

@@ -68,6 +68,11 @@ class StreamedStepConfig:
                                            # rows per ppermute chunk (gather
                                            # wires only; None: monolithic
                                            # all_gather)
+    participation: Optional[collectives.ParticipationSpec] = None
+                                           # elastic participation: per-worker
+                                           # vote weights + quorum-fraction
+                                           # deadband + report dropout; None =
+                                           # the legacy fixed-quorum path
 
 
 # ---------------------------------------------------------------------------
@@ -177,13 +182,19 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     # entropy-coded wire's static capacity
     wire_fmt = engine.wire_payload_format(comp, mode,
                                           vote_impl=step_cfg.vote_impl)
+    part = step_cfg.participation
+    if part is not None:
+        # elastic participation: loud build-time gates — the EF server cannot
+        # be participation-normalized, and the weights must cover the mesh
+        engine.check_participation_server(comp.server, comp.compressor)
     wire = collectives.make_vote_wire(
         step_cfg.vote_impl, axes, mesh, backend=backend,
         wire_format=wire_fmt,
         golomb_p=(engine.resolve_golomb_p(comp, step_cfg.golomb_p)
                   if wire_fmt == "golomb" else None),
         ring_chunk_rows=engine.resolve_ring_chunk_rows(
-            step_cfg.ring_chunk_rows, step_cfg.vote_impl))
+            step_cfg.ring_chunk_rows, step_cfg.vote_impl),
+        participation=part)
     share_linf = engine.needs_shared_linf(comp)
     if mode != "votes" and engine.needs_server_ef(comp.server):
         raise ValueError(
@@ -201,6 +212,10 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     # position (same flat order as idx_tree below)
     quorum_flat = jax.tree_util.tree_leaves(
         engine.broadcast_quorum(step_cfg.quorum, shapes))
+    # per-leaf quorum as a FRACTION of realized participation (build-time:
+    # bad quorums and q_frac out of (0,1] fail before tracing)
+    q_frac_flat = ([part.resolve_q_frac(q, wire.n_workers) for q in quorum_flat]
+                   if part is not None else None)
     if mode != "votes" and any(q != 1 for q in quorum_flat):
         raise ValueError(
             f"quorum={step_cfg.quorum!r} is a vote-server deadband, but "
@@ -283,36 +298,72 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         return jax.lax.dynamic_slice_in_dim(full, start, shard_size, axis=ax)
 
     def leaf_update(p_shard, g_full, *, seed, counter_base, ef_shard, mask, lr,
-                    shard_ax: int, leaf_size: int, quorum: int):
+                    shard_ax: int, leaf_size: int, quorum: int,
+                    w_eff=None, q_frac=None):
         """compress(full) -> wire exchange(full) -> server math + SGD on the SHARD.
 
         The fp32 update/EF tensors only ever exist at shard size; the
         full-size artifacts are the bf16/f32 gradient (transient, from vjp)
         and the exchanged message (1 B/coord int8 votes for the psum wires,
         0.25 B/coord packed ternary or 1 B/coord pack8 levels for the gather
-        wires, 4 B/coord fp32 for the decoded psum)."""
+        wires, 4 B/coord fp32 for the decoded psum). Under elastic
+        participation (``w_eff`` set) the exchange is the weighted one and
+        the realized-participation total W replaces the fixed quorum /
+        selected-count divisor; a per-coordinate W (psum wires) is sliced to
+        the shard alongside the weighted vote."""
         shared = (collectives.worker_shared_linf(g_full, axes, mask=mask)
                   if share_linf else None)
         n_sel = collectives.scalar_psum(mask.astype(jnp.float32), axes)
+        wtot = None
         if mode == "decoded":
             # per-worker decode scales / float payloads: decode locally, psum
             # fp32 — the wire object is bypassed, exactly like simple mode
             # (decoded_exchange is the one shared definition)
             msg = engine.compress_leaf(g_full, comp, seed, counter_base,
                                        backend=backend, shared_linf=shared)
-            agg, nnz = collectives.decoded_exchange(
-                msg.values, msg.scale, mask, axes, is_ternary=comp.is_ternary)
+            if part is not None:
+                # the weight premultiplies the decode scale (w_eff == 1.0 is
+                # a bitwise identity; a dropped worker decodes to exact
+                # zeros) and the mean divisor becomes W
+                agg, nnz = collectives.decoded_exchange(
+                    msg.values, msg.scale * w_eff, mask, axes,
+                    is_ternary=comp.is_ternary)
+                wtot = collectives.scalar_psum(w_eff, axes)
+            else:
+                agg, nnz = collectives.decoded_exchange(
+                    msg.values, msg.scale, mask, axes,
+                    is_ternary=comp.is_ternary)
         else:
             msg = engine.compress_leaf(g_full, comp, seed, counter_base,
                                        backend=backend, wire=wire,
                                        shared_linf=shared)
             votes = wire.mask_message(msg.values, mask)
             nnz = wire.message_nnz(votes)
-            agg = wire.exchange(votes, g_full.size, g_full.shape,
-                                scale=(msg.scale if mode == "pack8" else None))
+            if part is not None:
+                agg, wtot = wire.exchange_weighted(
+                    votes, g_full.size, g_full.shape, weight=w_eff,
+                    scale=(msg.scale if mode == "pack8" else None))
+            else:
+                agg = wire.exchange(votes, g_full.size, g_full.shape,
+                                    scale=(msg.scale if mode == "pack8" else None))
         shard_size = p_shard.shape[shard_ax] if shard_ax != REPLICATED else None
         vs = _slice(agg, shard_ax, shard_size)
-        if mode == "votes":
+        if part is not None:
+            # W rides per-coordinate on the psum wires — slice it like the
+            # weighted vote; gather wires return one scalar
+            wt = wtot if jnp.ndim(wtot) == 0 else _slice(wtot, shard_ax,
+                                                         shard_size)
+            if mode == "votes":
+                new_shard, new_ef = engine.server_apply(
+                    p_shard, vs, comp, lr=lr, ef=ef_shard,
+                    part_total=wt, q_frac=q_frac, backend=backend)
+            else:
+                new_shard, new_ef = engine.server_apply(
+                    p_shard, vs, comp, lr=lr, ef=ef_shard, n_sel=wt,
+                    server="mean",
+                    scale=(msg.scale if mode == "scaled_votes" else None),
+                    backend=backend)
+        elif mode == "votes":
             # shards partition the leaf, so the scaled-sign L1 reduces across them
             l1_reduce = ((lambda part: collectives.scalar_psum(part, fsdp_ax))
                          if shard_ax != REPLICATED else None)
@@ -339,13 +390,19 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
     block_quorums = [quorum_flat[i] for i in blocks_idx_flat]
     outer_shard_axes = [axes_all[k] for k in outer_keys]
     outer_quorums = [quorum_flat[idx_tree[k]] for k in outer_keys]
+    block_q_fracs = ([q_frac_flat[i] for i in blocks_idx_flat]
+                     if part is not None else None)
+    outer_q_fracs = ([q_frac_flat[idx_tree[k]] for k in outer_keys]
+                     if part is not None else None)
 
-    def _group_compress(plan_, g_leaves, seeds, bases, mask):
+    def _group_compress(plan_, g_leaves, seeds, bases, mask, w_eff=None):
         """Per-leaf compress into bucket slices (seeds/counter_base unchanged
         vs the per-leaf path — slot payloads are bitwise the per-leaf wire
         messages), assembled into the plan's wire buffers. Returns
         (bufs, svecs, nnz): one payload buffer and one (n_slots,) f32
-        decode-scale vector per bucket (1.0 where the mode carries none)."""
+        decode-scale vector per bucket (1.0 where the mode carries none).
+        Under elastic participation the decoded mode's decode scale is
+        premultiplied by ``w_eff`` (w_eff == 1.0 is a bitwise identity)."""
         slots = {s.index: s for b in plan_.buckets for s in b.slots}
         shared_vec = (collectives.worker_shared_linf_many(g_leaves, axes, mask=mask)
                       if share_linf else None)
@@ -357,8 +414,9 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
             if mode == "decoded":
                 msg = engine.compress_leaf(g, comp, seeds[j], bases[j],
                                            backend=backend, shared_linf=shared)
+                sc = msg.scale * w_eff if part is not None else msg.scale
                 dec, z = collectives.decoded_message(
-                    msg.values, msg.scale, mask, is_ternary=comp.is_ternary)
+                    msg.values, sc, mask, is_ternary=comp.is_ternary)
                 payloads[j] = bucketing.as_rows(dec, plan_.fmt, slots[j].rows)
                 nnz += z
             else:
@@ -376,16 +434,30 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         return bufs, svecs, nnz
 
     def _group_apply(plan_, bufs, svecs, ps_leaves, ef_leaves, shard_axes,
-                     quorums, *, n_sel, lr):
+                     quorums, *, n_sel, lr, w_eff=None, w_psum=None,
+                     q_fracs=None):
         """ONE exchange per bucket, then the per-leaf server math + SGD on
         this rank's shards — identical server semantics (per-leaf quorum, EF
-        residuals, shared-scale decode, l1_reduce) at bucket granularity."""
+        residuals, shared-scale decode, l1_reduce) at bucket granularity.
+        Under elastic participation (``w_eff`` set) the exchange is the
+        weighted one: W is per-slot per-coordinate on the psum wires (sliced
+        to the shard like the vote) and one scalar on the gather wires; the
+        decoded mode's W is the caller's precomputed ``w_psum``."""
         new_ps = [None] * len(ps_leaves)
         new_efs = [None] * len(ps_leaves)
         for b, buf, sv in zip(plan_.buckets, bufs, svecs):
+            wtots = None
             if mode == "decoded":
                 parts = bucketing.split_bucket(
                     collectives.decoded_exchange_bucket(buf, axes), b)
+                wtots = w_psum
+            elif part is not None:
+                if mode == "pack8":
+                    parts, wtots = wire.exchange_bucket_weighted(
+                        buf, b, weight=w_eff, scale=sv)
+                else:
+                    parts, wtots = wire.exchange_bucket_weighted(
+                        buf, b, weight=w_eff)
             elif mode == "pack8":
                 parts = wire.exchange_bucket(buf, b, scale=sv)
             else:
@@ -396,7 +468,23 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                 shard_size = (ps_leaves[j].shape[sh_ax]
                               if sh_ax != REPLICATED else None)
                 vs = _slice(agg, sh_ax, shard_size)
-                if mode == "votes":
+                if part is not None:
+                    wt = (wtots[pos] if isinstance(wtots, (list, tuple))
+                          else wtots)
+                    wt = wt if jnp.ndim(wt) == 0 else _slice(wt, sh_ax,
+                                                             shard_size)
+                    if mode == "votes":
+                        new_ps[j], new_efs[j] = engine.server_apply(
+                            ps_leaves[j], vs, comp, lr=lr, ef=ef_leaves[j],
+                            part_total=wt, q_frac=q_fracs[j],
+                            backend=backend)
+                    else:
+                        new_ps[j], new_efs[j] = engine.server_apply(
+                            ps_leaves[j], vs, comp, lr=lr, ef=ef_leaves[j],
+                            n_sel=wt, server="mean",
+                            scale=(sv[pos] if mode == "scaled_votes" else None),
+                            backend=backend)
+                elif mode == "votes":
                     l1_reduce = ((lambda part: collectives.scalar_psum(part, fsdp_ax))
                                  if sh_ax != REPLICATED else None)
                     new_ps[j], new_efs[j] = engine.server_apply(
@@ -422,6 +510,16 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
         rseed = sampling.round_seed(state.seed, state.step)
         wseed = prng.fold_seed(rseed, 0x5EED) + widx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
         mask = sampling.participation_mask(rseed, state.step, widx, comp.worker_sample_fraction)
+        w_eff = w_psum = None
+        if part is not None:
+            # elastic: the round's effective reporting set is the sampled set
+            # minus chaos dropouts; w_eff = static weight x report bit is the
+            # weight that rides the wire (exact 0.0 for a silent worker)
+            mask = mask & sampling.report_mask(rseed, state.step, widx,
+                                               part.dropout)
+            w_eff = (part.weight_of(widx, n_workers)
+                     * mask.astype(jnp.float32))
+            w_psum = collectives.scalar_psum(w_eff, axes)
         lr = step_cfg.lr(state.step)
         positions = batch["positions"]
         positions3 = batch.get("positions3")
@@ -486,7 +584,8 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                 # overlaps this block's recompute below
                 new_shards, new_efs = _group_apply(
                     block_plan, pbufs, psvecs, list(pps), list(pefs),
-                    block_shard_axes, block_quorums, n_sel=n_sel_b, lr=lr)
+                    block_shard_axes, block_quorums, n_sel=n_sel_b, lr=lr,
+                    w_eff=w_eff, w_psum=w_psum, q_fracs=block_q_fracs)
                 full = gather_block(block_shard)
 
                 def fwd(bp, h):
@@ -501,7 +600,7 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                 bases = [layer.astype(jnp.uint32) * jnp.uint32(g.size)
                          for g in g_leaves]
                 bufs, svecs, nnz = _group_compress(
-                    block_plan, g_leaves, seeds_b, bases, mask)
+                    block_plan, g_leaves, seeds_b, bases, mask, w_eff=w_eff)
                 outs = (jax.tree_util.tree_unflatten(g_def, new_shards),)
                 if has_ef:
                     outs = outs + (jax.tree_util.tree_unflatten(g_def, new_efs),)
@@ -520,7 +619,8 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
             # layer); ys[n_repeats-1] is the priming dummy — dropped.
             fin_shards, fin_efs = _group_apply(
                 block_plan, pbufs, psvecs, list(pps), list(pefs),
-                block_shard_axes, block_quorums, n_sel=n_sel_b, lr=lr)
+                block_shard_axes, block_quorums, n_sel=n_sel_b, lr=lr,
+                w_eff=w_eff, w_psum=w_psum, q_fracs=block_q_fracs)
 
             def _shift(stacked, first):
                 return jnp.concatenate([first[None], stacked[:-1]], axis=0)
@@ -550,13 +650,15 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
             seeds_o = [prng.fold_seed(wseed, idx_tree[k]) for k in outer_keys]
             bases_o = [jnp.uint32(0)] * len(outer_keys)
             o_bufs, o_svecs, o_nnz = _group_compress(
-                outer_plan, g_outer_leaves, seeds_o, bases_o, mask)
+                outer_plan, g_outer_leaves, seeds_o, bases_o, mask,
+                w_eff=w_eff)
             nnz_acc = nnz_acc + o_nnz
             o_efs = ([state.ef_residual[k] for k in outer_keys] if has_ef
                      else [jnp.float32(0.0)] * len(outer_keys))
             o_new, o_new_efs = _group_apply(
                 outer_plan, o_bufs, o_svecs, [params[k] for k in outer_keys],
-                o_efs, outer_shard_axes, outer_quorums, n_sel=n_sel_b, lr=lr)
+                o_efs, outer_shard_axes, outer_quorums, n_sel=n_sel_b, lr=lr,
+                w_eff=w_eff, w_psum=w_psum, q_fracs=outer_q_fracs)
 
             new_params = {"blocks": new_blocks}
             new_ef = {"blocks": new_ef_blocks} if has_ef else None
@@ -604,7 +706,9 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                 new_shard, new_ef, nnz = leaf_update(
                     p_shard, g, seed=seed_i, counter_base=base, ef_shard=ef,
                     mask=mask, lr=lr, shard_ax=sh_ax, leaf_size=g.size,
-                    quorum=quorum_flat[leaf_idx])
+                    quorum=quorum_flat[leaf_idx], w_eff=w_eff,
+                    q_frac=(q_frac_flat[leaf_idx] if part is not None
+                            else None))
                 nnz_acc = nnz_acc + nnz
                 new_shards.append(new_shard)
                 new_efs.append(new_ef)
@@ -640,7 +744,9 @@ def build_streamed_train_step(model, step_cfg: StreamedStepConfig, mesh) -> Call
                 params[k], g_k, seed=seed_i, counter_base=jnp.uint32(0),
                 ef_shard=ef_k, mask=mask, lr=lr,
                 shard_ax=outer_axes[k], leaf_size=g_k.size,
-                quorum=quorum_flat[idx_tree[k]])
+                quorum=quorum_flat[idx_tree[k]], w_eff=w_eff,
+                q_frac=(q_frac_flat[idx_tree[k]] if part is not None
+                        else None))
             nnz_acc = nnz_acc + nnz
             new_params[k] = new_shard
             if has_ef:

@@ -6,7 +6,12 @@ devices (the main pytest process must keep jax at 1 device for the smoke tests).
   check_step_streamed    — streamed(FSDP) == simple (bitwise); EF; shard check.
   check_wires            — all three vote wires bitwise-equal to the vote_psum
                            stream, simple AND streamed, jnp AND interpret.
-  check_fault_tolerance  — crash/restart bitwise replay; elastic mesh restore.
+  check_fault_tolerance  — crash/restart bitwise replay; elastic mesh restore;
+                           elastic-participation parity (weighted vote at full
+                           participation == legacy, every wire mode, both
+                           backends); chaos (50% per-round report dropout on
+                           every gather wire); M-invariance of the normalized
+                           vote (4- vs 2-worker fleets on identical data).
 """
 
 import pytest
@@ -43,3 +48,8 @@ def test_fault_tolerance_and_elastic():
     out = _run("check_fault_tolerance.py")
     assert "OK crash/restart" in out
     assert "OK elastic" in out
+    for tag in ("votes/psum", "votes/gather", "pack8/gather", "decoded/psum"):
+        assert f"OK elastic parity {tag}" in out
+    for tag in ("votes/gather", "pack8/gather", "golomb/gather"):
+        assert f"OK chaos {tag}" in out
+    assert out.count("OK M-invariance") == 2
